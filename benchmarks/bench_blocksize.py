@@ -1,0 +1,39 @@
+"""Blocked-FW tile-size sweep — the §Perf structural lever on a real axis.
+
+On TPU the block size trades VMEM residency vs pivot-loop overhead; on this
+CPU host the same sweep exercises cache behaviour.  Reported per size so the
+EXPERIMENTS §Perf table can cite measured (host) numbers next to the
+HLO-derived (target) numbers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import solve
+from repro.core.graphgen import generate_np
+
+
+def run(n: int = 512, blocks=(32, 64, 128, 256), seed: int = 0):
+    g = generate_np(np.random.default_rng(seed), n, rho=60.0)
+    rows = []
+    for b in blocks:
+        out = solve(g.h, method="blocked_fw", block_size=b)   # warm/compile
+        jax.block_until_ready(out.dist)
+        t0 = time.perf_counter()
+        for _ in range(2):
+            jax.block_until_ready(solve(g.h, method="blocked_fw", block_size=b).dist)
+        rows.append({
+            "bench": "blocked_fw_tile_sweep",
+            "n": n,
+            "block": b,
+            "us_per_solve": (time.perf_counter() - t0) / 2 * 1e6,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,34 @@
+"""Paper Fig 9: statistics of the generated corpus (nodes vs sqrt(edges),
+density spread).  Emits CSV rows; the plot data is the table."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graphgen import graph_stats, paper_corpus
+
+
+def run(n_graphs: int = 200, v_max: int = 400, seed: int = 0):
+    graphs = paper_corpus(seed=seed, n_graphs=n_graphs, v_min=4, v_max=v_max)
+    st = graph_stats(graphs)
+    rows = []
+    # bucket by edge-count decile, like reading Fig 9 off the x axis
+    qs = np.quantile(st["sqrt_edges"], np.linspace(0, 1, 11))
+    for lo, hi in zip(qs[:-1], qs[1:]):
+        m = (st["sqrt_edges"] >= lo) & (st["sqrt_edges"] <= hi)
+        if not m.any():
+            continue
+        rows.append({
+            "bench": "fig9_graphgen",
+            "bucket_sqrt_edges": f"{lo:.0f}-{hi:.0f}",
+            "n_graphs": int(m.sum()),
+            "mean_nodes": float(st["n_nodes"][m].mean()),
+            "mean_density": float(st["density"][m].mean()),
+            "max_density": float(st["density"][m].max()),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.  CSV to stdout.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    args = ap.parse_args(argv)
+
+    from benchmarks import bench_apsp, bench_blocksize, bench_graphgen, bench_minplus
+
+    suites = [
+        ("fig9_graphgen", lambda: bench_graphgen.run(
+            n_graphs=60 if args.quick else 200, v_max=200 if args.quick else 400)),
+        ("fig10_apsp", lambda: bench_apsp.run(
+            sizes=(64, 128, 256) if args.quick else (64, 128, 256, 384, 512),
+            py_cpu_max=128 if args.quick else 192)),
+        ("minplus_wall", lambda: bench_minplus.run(
+            sizes=(128, 256) if args.quick else (128, 256, 512, 1024))),
+        ("blocked_fw_tiles", lambda: bench_blocksize.run(
+            n=256 if args.quick else 512,
+            blocks=(32, 64, 128) if args.quick else (32, 64, 128, 256))),
+    ]
+
+    all_rows = []
+    for name, fn in suites:
+        t0 = time.time()
+        rows = fn()
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+        all_rows.extend(rows)
+
+    keys = []
+    for r in all_rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    w = csv.DictWriter(sys.stdout, fieldnames=keys)
+    w.writeheader()
+    for r in all_rows:
+        w.writerow(r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

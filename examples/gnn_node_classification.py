@@ -1,0 +1,73 @@
+"""GNN node classification with the paper's APSP as a feature generator.
+
+Trains GCN on a synthetic citation-style graph twice: with raw features, and
+with landmark shortest-path-distance (SPD) features appended — computed by
+the tropical solver (core.paths.spd_features).  On graphs whose labels
+correlate with graph position (communities), SPD features help; this example
+builds exactly such a graph (labels = nearest landmark).
+
+    PYTHONPATH=src python examples/gnn_node_classification.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paths import spd_features
+from repro.models.gnn import GNNConfig, init_gnn, loss_gnn
+from repro.optim import make_optimizer, warmup_cosine
+from repro.train import init_train_state, make_train_step
+
+
+def community_graph(n=400, k=4, p_in=0.06, p_out=0.004, d_feat=16, seed=0):
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, k, n)
+    prob = np.where(comm[:, None] == comm[None, :], p_in, p_out)
+    adj = rng.uniform(size=(n, n)) < prob
+    np.fill_diagonal(adj, False)
+    src, dst = np.nonzero(adj)
+    h = np.where(adj, rng.integers(1, 10, (n, n)).astype(np.float32), np.inf)
+    np.fill_diagonal(h, 0.0)
+    feat = rng.normal(size=(n, d_feat)).astype(np.float32)   # uninformative
+    return {
+        "node_feat": feat, "labels": comm.astype(np.int32),
+        "edge_index": np.stack([src, dst]).astype(np.int32),
+        "edge_mask": np.ones(len(src), bool), "node_mask": np.ones(n, bool),
+        "cost": h,
+    }
+
+
+def train(graph, d_feat, steps=150, seed=0):
+    cfg = GNNConfig(name="gcn", kind="gcn", n_layers=2, d_hidden=32,
+                    d_feat=d_feat, n_classes=4)
+    params, _ = init_gnn(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer("adamw", warmup_cosine(1e-2, 10, steps))
+    state = init_train_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, g: loss_gnn(p, g, cfg), opt))
+    g = {k: jnp.asarray(v) for k, v in graph.items() if k != "cost"}
+    for _ in range(steps):
+        state, m = step(state, g)
+    return float(m["acc"])
+
+
+def main():
+    g = community_graph()
+    n, d0 = g["node_feat"].shape
+    acc_raw = train(g, d0)
+
+    # landmark SPD features from the tropical solver (the paper's primitive)
+    landmarks = jnp.asarray(np.linspace(0, n - 1, 8, dtype=np.int64))
+    spd = spd_features(jnp.asarray(g["cost"]), landmarks, cap=50.0)
+    spd = (spd - spd.mean()) / (spd.std() + 1e-6)
+    g2 = dict(g)
+    g2["node_feat"] = np.concatenate([g["node_feat"], np.asarray(spd)], axis=1)
+    acc_spd = train(g2, d0 + 8)
+
+    print(f"GCN accuracy     raw features: {acc_raw:.3f}")
+    print(f"GCN accuracy  + SPD landmarks: {acc_spd:.3f}")
+    print("SPD features help ✓" if acc_spd > acc_raw else
+          "(no gain on this draw)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""MIND recsys: brief training then multi-interest retrieval.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import mind_batch_stream
+from repro.models.mind import MINDConfig, init_mind, mind_loss, retrieval_scores
+from repro.optim import make_optimizer, warmup_cosine
+from repro.train import init_train_state, make_train_step
+
+
+def main():
+    cfg = MINDConfig(name="mind-demo", n_items=2000, embed_dim=32,
+                     n_interests=4, hist_len=20, n_profile_feats=200,
+                     profile_bag_len=6, n_negatives=63)
+    params, _ = init_mind(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 20, 200))
+    state = init_train_state(params, opt)
+    step = jax.jit(make_train_step(lambda p, b: mind_loss(p, b, cfg), opt))
+
+    stream = mind_batch_stream(
+        batch=64, n_items=cfg.n_items, hist_len=cfg.hist_len,
+        n_profile_feats=cfg.n_profile_feats, profile_bag_len=cfg.profile_bag_len,
+        n_interests=cfg.n_interests, n_negatives=cfg.n_negatives, seed=0)
+    for i, raw in zip(range(200), stream):
+        batch = {k: jnp.asarray(v) for k, v in raw.items() if k != "step"}
+        state, m = step(state, batch)
+        if (i + 1) % 50 == 0:
+            print(f"step {i+1:3d}  loss {float(m['loss']):.4f}  "
+                  f"acc@1-of-64 {float(m['acc']):.3f}")
+
+    # retrieval: one user against the whole catalogue
+    one = {k: v[:1] for k, v in batch.items()
+           if k not in ("target_id", "neg_ids")}
+    one["cand_ids"] = jnp.arange(cfg.n_items, dtype=jnp.int32)
+    vals, ids = retrieval_scores(state.params, one, cfg, top_k=10)
+    hist = np.asarray(batch["hist_ids"][0][np.asarray(batch["hist_mask"][0])])
+    print(f"user history (first 10): {hist[:10].tolist()}")
+    print(f"top-10 retrieved: {np.asarray(ids).tolist()}")
+    print(f"scores: {np.round(np.asarray(vals), 2).tolist()}")
+
+
+if __name__ == "__main__":
+    main()

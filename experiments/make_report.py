@@ -1,0 +1,78 @@
+"""Build the EXPERIMENTS.md §Dry-run + §Roofline tables from the saved
+dry-run JSONs + analytical floors.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/roofline_tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.analysis import HW                     # noqa: E402
+from repro.roofline.floors import cell_floors, floor_time  # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load():
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        arch, shape, mesh = os.path.basename(f)[:-5].split("__")
+        recs[(arch, shape, mesh)] = json.load(open(f))
+    return recs
+
+
+def fmt_t(x):
+    return f"{x:.3g}"
+
+
+def main():
+    recs = load()
+    print("## §Dry-run — every (arch x shape x mesh) cell\n")
+    print("| cell | mesh | status | mem GB/dev | fits 16G | compile s |")
+    print("|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            print(f"| {a}:{s} | {m} | SKIP ({r['reason'][:60]}...) | — | — | — |")
+            continue
+        gb = r["memory"].get("total_gb", float("nan"))
+        fits = "✓" if gb <= 16.0 else f"✗ ({gb:.0f})"
+        print(f"| {a}:{s} | {m} | {r['status']} | {gb:.2f} | {fits} | "
+              f"{r.get('compile_s', 0):.0f} |")
+
+    print("\n## §Roofline — single-pod (16x16 = 256 chips)\n")
+    print("| cell | T_comp s | T_mem s | T_coll s | bottleneck | "
+          "useful-flops | floor s | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for (a, s, m), r in sorted(recs.items()):
+        if m != "pod16x16" or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        fl = cell_floors(a, s)
+        n_chips = r["n_chips"]
+        tf = floor_time(fl, n_chips)
+        tm = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        frac = tf / tm if tm else 0.0
+        useful = fl["model_flops"] / max(rf["hlo_gflops_per_chip"] * 1e9 * n_chips, 1)
+        rows.append((a, s, rf, tf, frac, useful))
+        print(f"| {a}:{s} | {fmt_t(rf['t_compute_s'])} | {fmt_t(rf['t_memory_s'])} "
+              f"| {fmt_t(rf['t_collective_s'])} | {rf['bottleneck']} "
+              f"| {useful:.2f} | {fmt_t(tf)} | **{frac:.3f}** |")
+
+    print("\n### Worst roofline fractions (hillclimb candidates)\n")
+    for a, s, rf, tf, frac, useful in sorted(rows, key=lambda x: x[4])[:6]:
+        print(f"- {a}:{s}: frac={frac:.4f}, bottleneck={rf['bottleneck']}")
+    print("\n### Most collective-bound\n")
+    coll = sorted(rows, key=lambda x: -(x[2]["t_collective_s"] /
+                  max(x[2]["t_compute_s"] + x[2]["t_memory_s"], 1e-12)))[:6]
+    for a, s, rf, tf, frac, useful in coll:
+        print(f"- {a}:{s}: T_coll={fmt_t(rf['t_collective_s'])}s vs "
+              f"T_comp+T_mem={fmt_t(rf['t_compute_s']+rf['t_memory_s'])}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — tropical-semiring APSP framework on JAX (Anjary 2023 reproduction)."""
+
+__version__ = "1.0.0"

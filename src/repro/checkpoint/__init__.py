@@ -1,0 +1,13 @@
+from .checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_onto_mesh,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "load_checkpoint",
+    "restore_onto_mesh",
+    "save_checkpoint",
+]

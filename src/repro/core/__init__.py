@@ -1,0 +1,25 @@
+"""Core tropical-semiring APSP library (the paper's contribution)."""
+
+from .apsp import APSPResult, METHODS, register_method, solve
+from .blocked_fw import blocked_fw
+from .floyd_warshall import fw_classic, fw_squaring, fw_squaring_early_exit, init_pred
+from .graphgen import generate, generate_np, graph_stats, paper_corpus
+from .paths import reconstruct_path, reconstruct_path_jit, spd_features, validate_tree
+from .rkleene import rkleene
+from .semiring import (
+    minplus,
+    minplus_3d,
+    minplus_3d_argmin,
+    minplus_pred,
+    softmin_matmul,
+    tropical_eye,
+)
+
+__all__ = [
+    "APSPResult", "METHODS", "register_method", "solve",
+    "blocked_fw", "fw_classic", "fw_squaring", "fw_squaring_early_exit",
+    "init_pred", "generate", "generate_np", "graph_stats", "paper_corpus",
+    "reconstruct_path", "reconstruct_path_jit", "spd_features", "validate_tree",
+    "rkleene", "minplus", "minplus_3d", "minplus_3d_argmin", "minplus_pred",
+    "softmin_matmul", "tropical_eye",
+]

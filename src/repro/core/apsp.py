@@ -1,0 +1,82 @@
+"""Unified APSP front-end — the paper's technique as a framework feature.
+
+``solve(h, method=...)`` dispatches to the registered solvers:
+
+* ``"squaring"``    — paper-faithful FW-GPU (tropical matrix squaring)
+* ``"squaring_3d"`` — paper-faithful *and* memory-faithful (N×N×N broadcast)
+* ``"classic"``     — textbook O(n^3) Floyd-Warshall
+* ``"blocked_fw"``  — 3-phase tiled FW (TPU-shaped, O(n^3))
+* ``"rkleene"``     — R-Kleene divide & conquer (paper §3.3)
+
+Distributed execution lives in ``core/distributed.py`` and is selected via
+``launch/apsp_run.py`` on a real mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocked_fw import blocked_fw
+from .floyd_warshall import fw_classic, fw_squaring
+from .rkleene import rkleene
+
+__all__ = ["APSPResult", "solve", "METHODS", "register_method"]
+
+
+@dataclass
+class APSPResult:
+    dist: jax.Array
+    pred: Optional[jax.Array]
+    method: str
+
+
+def _squaring(h, with_pred, **kw):
+    return fw_squaring(h, with_pred=with_pred)
+
+
+def _squaring_3d(h, with_pred, **kw):
+    return fw_squaring(h, with_pred=with_pred, use_3d=True)
+
+
+def _classic(h, with_pred, **kw):
+    return fw_classic(h, with_pred=with_pred)
+
+
+def _blocked(h, with_pred, block_size=256, **kw):
+    return blocked_fw(h, block_size=block_size, with_pred=with_pred)
+
+
+def _rkleene(h, with_pred, base=64, **kw):
+    return rkleene(h, base=base, with_pred=with_pred)
+
+
+METHODS: Dict[str, Callable] = {
+    "squaring": _squaring,
+    "squaring_3d": _squaring_3d,
+    "classic": _classic,
+    "blocked_fw": _blocked,
+    "rkleene": _rkleene,
+}
+
+
+def register_method(name: str, fn: Callable) -> None:
+    METHODS[name] = fn
+
+
+def solve(
+    h: jax.Array,
+    *,
+    method: str = "blocked_fw",
+    with_pred: bool = False,
+    **kwargs,
+) -> APSPResult:
+    """Solve APSP on a dense cost matrix (inf = no edge, zero diagonal)."""
+    if method not in METHODS:
+        raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
+    h = jnp.asarray(h, jnp.float32)
+    dist, pred = METHODS[method](h, with_pred, **kwargs)
+    return APSPResult(dist=dist, pred=pred, method=method)

@@ -1,0 +1,141 @@
+"""Blocked (tiled) Floyd-Warshall — the O(n^3) TPU-shaped solver.
+
+This is the paper's future-work item ("divide the 3D-Tensor L") realized as
+the classic 3-phase blocked FW (Katz & Kider style), restructured so every
+phase is a dense min-plus product over tiles:
+
+for each pivot block t (size B):
+  phase 1: close the pivot block      D_tt <- FW(D_tt)
+  phase 2: row panel  D_t* <- D_tt (x) D_t*        (min-plus)
+           col panel  D_*t <- D_*t (x) D_tt
+  phase 3: global     D    <- D (+) D_*t (x) D_t*  (elementwise min)
+
+Because the updated column stripe's pivot rows equal the closed pivot block,
+the single phase-3 product also re-derives the stripes — the implementation
+below exploits that to touch the full matrix exactly once per pivot.
+
+Work: n/B pivots x O(n^2 B) = O(n^3).  Memory: O(n^2) + O(nB) live panels.
+The same decomposition drives the distributed solver (core/distributed.py)
+and the Pallas kernels (kernels/fw_block.py, kernels/minplus.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .floyd_warshall import init_pred
+from .semiring import (
+    INF,
+    minplus,
+    minplus_pred,
+    pad_pred_to_multiple,
+    pad_to_multiple,
+    unpad,
+)
+
+__all__ = ["blocked_fw", "closure_block"]
+
+
+def closure_block(d: jax.Array) -> jax.Array:
+    """In-block FW closure (phase 1) — B pivot steps on a (B, B) tile.
+
+    On TPU this is the ``kernels/fw_block.py`` Pallas kernel (whole tile
+    resident in VMEM); elsewhere the equivalent XLA fori_loop."""
+    from repro.kernels import ops as _kops  # lazy: avoids import cycle
+
+    if _kops.backend() == "pallas":
+        from repro.kernels.fw_block import fw_block_pallas
+
+        return fw_block_pallas(d)
+
+    def body(k, dd):
+        via = dd[:, k][:, None] + dd[k, :][None, :]
+        return jnp.minimum(dd, via)
+
+    return jax.lax.fori_loop(0, d.shape[0], body, d)
+
+
+def _closure_block_pred(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def body(k, dp):
+        dd, pp = dp
+        via = dd[:, k][:, None] + dd[k, :][None, :]
+        better = via < dd
+        pk = jnp.broadcast_to(pp[k, :][None, :], pp.shape)
+        return jnp.where(better, via, dd), jnp.where(better, pk, pp)
+
+    return jax.lax.fori_loop(0, d.shape[0], body, (d, p))
+
+
+@partial(jax.jit, static_argnames=("block_size", "with_pred"))
+def blocked_fw(
+    h: jax.Array,
+    *,
+    block_size: int = 256,
+    with_pred: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """3-phase blocked Floyd-Warshall.
+
+    ``block_size`` is the tile edge B; the matrix is padded to a multiple of
+    B with unreachable phantom nodes (semantically inert).  The pivot loop is
+    a ``lax.fori_loop`` with ``dynamic_slice`` stripes so the HLO stays
+    O(1) in n/B.
+    """
+    n = h.shape[0]
+    b = min(block_size, n)
+    d = pad_to_multiple(h, b)
+    np_ = d.shape[0]
+    nblk = np_ // b
+
+    if not with_pred:
+        def body(t, d):
+            o = t * b
+            pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
+            pivot = closure_block(pivot)
+            row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))      # (B, N)
+            col = jax.lax.dynamic_slice(d, (0, o), (np_, b))      # (N, B)
+            row = minplus(pivot, row, row_chunk=b)
+            col = minplus(col, pivot, row_chunk=None)
+            # col's pivot rows == closed pivot, so this also updates stripes.
+            col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
+            return jnp.minimum(d, minplus(col, row))
+
+        d = jax.lax.fori_loop(0, nblk, body, d)
+        return unpad(d, n), None
+
+    p = pad_pred_to_multiple(init_pred(h), b)
+
+    def body_p(t, dp):
+        d, p = dp
+        o = t * b
+        pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
+        ppivot = jax.lax.dynamic_slice(p, (o, o), (b, b))
+        pivot, ppivot = _closure_block_pred(pivot, ppivot)
+
+        row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))
+        prow = jax.lax.dynamic_slice(p, (o, 0), (b, np_))
+        col = jax.lax.dynamic_slice(d, (0, o), (np_, b))
+        pcol = jax.lax.dynamic_slice(p, (0, o), (np_, b))
+
+        # Row panel: paths pivot-row -> anywhere; x-cols/y-rows are the pivot
+        # block (global offset o), output cols are global (offset 0).
+        zrow, pzrow = minplus_pred(pivot, row, ppivot, prow, k_offset=o, j_offset=0)
+        brow = zrow < row
+        row, prow = jnp.where(brow, zrow, row), jnp.where(brow, pzrow, prow)
+        # Col panel: paths anywhere -> pivot cols; output cols offset o too.
+        zcol, pzcol = minplus_pred(col, pivot, pcol, ppivot, k_offset=o, j_offset=o)
+        bcol = zcol < col
+        col, pcol = jnp.where(bcol, zcol, col), jnp.where(bcol, pzcol, pcol)
+
+        col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
+        pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (o, 0))
+
+        z, pz = minplus_pred(col, row, pcol, prow, k_offset=o, j_offset=0)
+        better = z < d
+        return jnp.where(better, z, d), jnp.where(better, pz, p)
+
+    d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
+    return unpad(d, n), unpad(p, n)

@@ -1,0 +1,109 @@
+"""Path reconstruction from predecessor matrices (paper §2) + SPD features.
+
+``pred[i, j]`` = last node before j on a shortest i->j path.  Reconstruction
+walks backwards from j (paper: "backtrack along the path P starting at node
+j").  Two implementations:
+
+* ``reconstruct_path``      — host-side numpy walk, variable length.
+* ``reconstruct_path_jit``  — fixed-max-length ``lax.while_loop`` version that
+  stays inside jit (returns a padded path + length), for on-device serving.
+
+``spd_features`` exposes the paper's solver to the GNN stack: landmark
+shortest-path-distance structural features (Graphormer-style), used by
+``examples/gnn_node_classification.py``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "reconstruct_path",
+    "reconstruct_path_jit",
+    "path_cost",
+    "validate_tree",
+    "spd_features",
+]
+
+
+def reconstruct_path(pred: np.ndarray, i: int, j: int) -> Optional[List[int]]:
+    """Walk pred backwards from j. Returns [i, ..., j] or None if unreachable."""
+    pred = np.asarray(pred)
+    if i == j:
+        return [i]
+    if pred[i, j] < 0:
+        return None
+    path = [j]
+    guard = pred.shape[0] + 1
+    cur = j
+    while cur != i:
+        cur = int(pred[i, cur])
+        if cur < 0 or len(path) > guard:
+            return None
+        path.append(cur)
+    return path[::-1]
+
+
+def reconstruct_path_jit(pred: jax.Array, i, j, *, max_len: int) -> tuple:
+    """Jit-compatible reconstruction: returns (path[max_len] padded with -1,
+    length).  length == 0 means unreachable."""
+    n = pred.shape[0]
+
+    def cond(state):
+        cur, t, _ = state
+        return jnp.logical_and(cur != i, jnp.logical_and(cur >= 0, t < max_len))
+
+    def body(state):
+        cur, t, buf = state
+        buf = buf.at[t].set(cur)
+        return pred[i, cur], t + 1, buf
+
+    buf0 = jnp.full((max_len,), -1, dtype=jnp.int32)
+    cur, t, buf = jax.lax.while_loop(cond, body, (jnp.asarray(j, jnp.int32), 0, buf0))
+    ok = cur == i
+    buf = jnp.where(ok, buf.at[t].set(i), jnp.full_like(buf, -1))
+    length = jnp.where(ok, t + 1, 0)
+    # path is reversed (j ... i); flip the valid prefix.
+    idx = jnp.arange(max_len)
+    flipped = jnp.where(idx < length, buf[jnp.clip(length - 1 - idx, 0, max_len - 1)], -1)
+    return flipped, length
+
+
+def path_cost(h: np.ndarray, path: List[int]) -> float:
+    """Sum of edge costs along an explicit path."""
+    return float(sum(h[a, b] for a, b in zip(path[:-1], path[1:])))
+
+
+def validate_tree(h: np.ndarray, dist: np.ndarray, pred: np.ndarray) -> bool:
+    """Invariant: every finite dist[i,j] is witnessed by pred: walking back one
+    hop satisfies dist[i,j] == dist[i,pred[i,j]] + h[pred[i,j], j]."""
+    n = h.shape[0]
+    ii, jj = np.nonzero(np.isfinite(dist) & ~np.eye(n, dtype=bool))
+    p = pred[ii, jj]
+    if np.any(p < 0):
+        return False
+    lhs = dist[ii, jj]
+    rhs = dist[ii, p] + h[p, jj]
+    return bool(np.allclose(lhs, rhs, rtol=1e-5, atol=1e-5))
+
+
+def spd_features(h: jax.Array, landmarks: jax.Array, *, cap: float = 1e4) -> jax.Array:
+    """Landmark SPD node features via the tropical solver.
+
+    Runs single-source min-plus relaxations from the landmark rows only
+    (cost O(L * n^2 * log n) instead of full APSP) and returns a (n, L)
+    feature matrix with unreachable distances capped.
+    """
+    from .semiring import minplus, ceil_log2
+
+    d = h[landmarks, :]                      # (L, n) seed distances
+
+    def body(_, dl):
+        return jnp.minimum(dl, minplus(dl, h))
+
+    d = jax.lax.fori_loop(0, ceil_log2(h.shape[0]), body, d)
+    return jnp.minimum(d, cap).T             # (n, L)

@@ -1,0 +1,117 @@
+"""R-Kleene [D'Alberto & Nicolau 2006] — divide-and-conquer APSP (paper §3.3).
+
+Split D = [[A, B], [C, D]] (A: first half <-> first half, etc.) and:
+
+    A <- rkleene(A)                 # close the first half
+    B <- A (x) B ;  C <- C (x) A    # route through the closed first half
+    D <- D (+) C (x) B              # first-half detours between 2nd-half nodes
+    D <- rkleene(D)                 # close the second half
+    B <- B (x) D ;  C <- D (x) C    # allow wandering inside the second half
+    A <- A (+) B (x) C              # second-half detours between 1st-half nodes
+
+(x) = min-plus product, (+) = elementwise min.  Work is O(n^3) like blocked
+FW, but all the work lands in large dense min-plus GEMMs — the paper's
+"GPU-friendly" scalable algorithm.  Recursion is static (python-level), so
+the whole solver jit-compiles; matrices are padded to a power-of-two times
+``base`` with unreachable phantom nodes.
+
+Predecessor tracking uses the same fused rule as everywhere else
+(``semiring.minplus_pred``) with quadrant offsets.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocked_fw import closure_block, _closure_block_pred
+from .floyd_warshall import init_pred
+from .semiring import INF, minplus, minplus_pred, unpad
+
+__all__ = ["rkleene"]
+
+
+def _pad_pow2(d: jax.Array, base: int, fill: float, diag) -> Tuple[jax.Array, int]:
+    n = d.shape[0]
+    target = base
+    while target < n:
+        target *= 2
+    if target == n:
+        return d, n
+    out = jnp.full((target, target), fill, dtype=d.dtype)
+    out = out.at[: n, : n].set(d)
+    idx = jnp.arange(n, target)
+    out = out.at[idx, idx].set(diag(idx) if callable(diag) else diag)
+    return out, n
+
+
+def _rk(d: jax.Array, base: int) -> jax.Array:
+    n = d.shape[0]
+    if n <= base:
+        return closure_block(d)
+    m = n // 2
+    a, b = d[:m, :m], d[:m, m:]
+    c, dd = d[m:, :m], d[m:, m:]
+
+    a = _rk(a, base)
+    b = minplus(a, b)
+    c = minplus(c, a)
+    dd = jnp.minimum(dd, minplus(c, b))
+    dd = _rk(dd, base)
+    b = minplus(b, dd)
+    c = minplus(dd, c)
+    a = jnp.minimum(a, minplus(b, c))
+    return jnp.block([[a, b], [c, dd]])
+
+
+def _rk_pred(d, p, base: int, off: int):
+    """R-Kleene with predecessors. ``off`` = global id of this block's node 0."""
+    n = d.shape[0]
+    if n <= base:
+        return _closure_block_pred(d, p)
+    m = n // 2
+    a, b = d[:m, :m], d[:m, m:]
+    c, dd = d[m:, :m], d[m:, m:]
+    pa, pb = p[:m, :m], p[:m, m:]
+    pc, pd = p[m:, :m], p[m:, m:]
+    o1, o2 = off, off + m
+
+    def upd(x, y, px, py, ko, jo, zold, pold):
+        z, pz = minplus_pred(x, y, px, py, k_offset=ko, j_offset=jo)
+        better = z < zold
+        return jnp.where(better, z, zold), jnp.where(better, pz, pold)
+
+    a, pa = _rk_pred(a, pa, base, o1)
+    b, pb = upd(a, b, pa, pb, o1, o2, b, pb)
+    c, pc = upd(c, a, pc, pa, o1, o1, c, pc)
+    dd, pd = upd(c, b, pc, pb, o1, o2, dd, pd)
+    dd, pd = _rk_pred(dd, pd, base, o2)
+    b, pb = upd(b, dd, pb, pd, o2, o2, b, pb)
+    c, pc = upd(dd, c, pd, pc, o2, o1, c, pc)
+    a, pa = upd(b, c, pb, pc, o2, o1, a, pa)
+    return (
+        jnp.block([[a, b], [c, dd]]),
+        jnp.block([[pa, pb], [pc, pd]]),
+    )
+
+
+@partial(jax.jit, static_argnames=("base", "with_pred"))
+def rkleene(
+    h: jax.Array,
+    *,
+    base: int = 64,
+    with_pred: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """R-Kleene APSP.  ``base`` is the leaf size closed with in-block FW."""
+    n = h.shape[0]
+    d, _ = _pad_pow2(h, base, INF, 0.0)
+    if not with_pred:
+        z = _rk(d, base)
+        return unpad(z, n), None
+    p0 = init_pred(h)
+    p, _ = _pad_pow2(p0.astype(jnp.int32), base, -1, lambda idx: idx.astype(jnp.int32))
+    z, pz = _rk_pred(d, p, base, 0)
+    return unpad(z, n), unpad(pz, n)

@@ -1,0 +1,250 @@
+"""Tropical (min-plus) semiring linear algebra — the paper's core primitive.
+
+The paper (Anjary 2023) realizes ``Z[i, j] = min_k (X[i, k] + Y[k, j])`` by
+materializing the 3D broadcast tensor ``L[i, k, j] = X[i, k] + Y[k, j]`` and
+reducing with min/argmin over axis 1.  That costs O(n^3) memory — the paper's
+own stated scaling wall (N <= 1000 on a 24 GB GPU).
+
+This module provides:
+
+* ``minplus_3d``          — the paper-faithful 3D-broadcast formulation,
+* ``minplus``             — memory-bounded chunked formulation (XLA fallback;
+                            the Pallas kernel in ``repro.kernels`` is the
+                            TPU-performant path),
+* ``minplus_pred``        — min-plus with fused predecessor propagation,
+* ``softmin_matmul``      — beyond-paper experimental MXU path via the
+                            tropical soft-min limit (log-sum-exp transform).
+
+Conventions: distance matrices are float (``jnp.inf`` = "no path"), diagonal
+is 0, edge weights are strictly positive (paper §3.1: no zero-cost edges
+except self-loops, no negative cycles).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "minplus_3d",
+    "minplus_3d_argmin",
+    "minplus",
+    "minplus_pred",
+    "tropical_eye",
+    "softmin_matmul",
+    "pad_to_multiple",
+    "unpad",
+]
+
+INF = jnp.inf
+
+
+def tropical_eye(n: int, dtype=jnp.float32) -> jax.Array:
+    """Identity of the tropical semiring: 0 on the diagonal, +inf elsewhere."""
+    return jnp.where(jnp.eye(n, dtype=bool), jnp.zeros((), dtype), jnp.asarray(INF, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful 3D-broadcast formulation (Figure 8 of the paper).
+# ---------------------------------------------------------------------------
+
+def minplus_3d(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Min-plus product via the paper's N×N×N broadcast tensor.
+
+    ``L[i, k, j] = x[i, k] + y[k, j]`` then ``min`` over axis 1.  O(n^3)
+    memory — kept as the faithful reference; do not use at scale.
+    """
+    l = x[:, :, None] + y[None, :, :]
+    return jnp.min(l, axis=1)
+
+
+def minplus_3d_argmin(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Paper-faithful min-plus + argmin (paper Fig 8 steps 4-6)."""
+    l = x[:, :, None] + y[None, :, :]
+    return jnp.min(l, axis=1), jnp.argmin(l, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Memory-bounded chunked formulation (the TPU-shaped rewrite).
+# ---------------------------------------------------------------------------
+
+def _auto_row_chunk(m: int, n: int, budget_elems: int = 1 << 24) -> int:
+    """Pick a row chunk so the (chunk, k, n) broadcast stays under budget."""
+    per_row = max(n * n, 1)
+    c = max(1, budget_elems // per_row)
+    return int(min(m, c))
+
+
+@partial(jax.jit, static_argnames=("row_chunk",))
+def minplus(x: jax.Array, y: jax.Array, *, row_chunk: Optional[int] = None) -> jax.Array:
+    """Min-plus matmul ``Z[i,j] = min_k x[i,k] + y[k,j]`` without the n^3 tensor.
+
+    Dispatches to the Pallas kernel on TPU (``repro.kernels``); otherwise
+    scans over row blocks of ``x`` so the live intermediate is
+    ``(row_chunk, K, N)`` — the pure-XLA fallback.
+    """
+    from repro.kernels import ops as _kops  # lazy: avoids import cycle
+
+    if _kops.backend() == "pallas":
+        from repro.kernels.minplus import minplus_pallas
+
+        return minplus_pallas(x, y)
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    if row_chunk is None:
+        row_chunk = _auto_row_chunk(m, max(k, n))
+    if row_chunk >= m:
+        return jnp.min(x[:, :, None] + y[None, :, :], axis=1)
+
+    pad = (-m) % row_chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)), constant_values=INF)
+    nblk = xp.shape[0] // row_chunk
+    xb = xp.reshape(nblk, row_chunk, k)
+
+    def body(carry, xi):
+        zi = jnp.min(xi[:, :, None] + y[None, :, :], axis=1)
+        return carry, zi
+
+    _, zb = jax.lax.scan(body, None, xb)
+    return zb.reshape(nblk * row_chunk, n)[:m]
+
+
+@partial(jax.jit, static_argnames=("row_chunk",))
+def minplus_pred(
+    x: jax.Array,
+    y: jax.Array,
+    px: jax.Array,
+    py: jax.Array,
+    *,
+    k_offset=0,
+    j_offset=0,
+    row_chunk: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Min-plus product with fused predecessor propagation.
+
+    ``k* = argmin_k x[i,k] + y[k,j]``.  The combined path is
+    i --(x-path)--> k* --(y-path)--> j, so the predecessor of j is
+    ``py[k*, j]`` — *unless* the y-path is empty (global index of k* equals
+    global index of j, i.e. y contributed its tropical-diagonal zero), in
+    which case it is x's own last hop ``px[i, k*]``.
+
+    ``k_offset`` / ``j_offset`` are the global node ids of x's column 0 and
+    the output's column 0 — needed when x/y are tiles of a larger matrix
+    (blocked FW panels, R-Kleene quadrants).  ``px`` has x's shape, ``py``
+    has y's shape.  Ties resolve to the smallest k (argmin convention).
+    """
+    m, k = x.shape
+    _, n = y.shape
+    assert px.shape == x.shape and py.shape == y.shape
+    if row_chunk is None:
+        row_chunk = _auto_row_chunk(m, max(k, n))
+
+    cols = jnp.arange(n)
+
+    def rows(xi, pxi):
+        l = xi[:, :, None] + y[None, :, :]          # (c, k, n)
+        kstar = jnp.argmin(l, axis=1)               # (c, n)
+        z = jnp.take_along_axis(l, kstar[:, None, :], axis=1)[:, 0, :]
+        p_via = py[kstar, cols[None, :]]            # (c, n)
+        p_own = jnp.take_along_axis(pxi, kstar, axis=1)
+        same_node = (kstar + k_offset) == (cols[None, :] + j_offset)
+        pz = jnp.where(same_node, p_own, p_via)
+        return z, pz
+
+    if row_chunk >= m:
+        return rows(x, px)
+
+    pad = (-m) % row_chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)), constant_values=INF)
+    pp = jnp.pad(px, ((0, pad), (0, 0)), constant_values=-1)
+    nblk = xp.shape[0] // row_chunk
+    xb = xp.reshape(nblk, row_chunk, k)
+    pb = pp.reshape(nblk, row_chunk, k)
+
+    def body(carry, inp):
+        xi, pxi = inp
+        return carry, rows(xi, pxi)
+
+    _, (zb, pzb) = jax.lax.scan(body, None, (xb, pb))
+    z = zb.reshape(-1, n)[:m]
+    pz = pzb.reshape(-1, n)[:m]
+    return z, pz
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: MXU-eligible soft-min transform.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("tau",))
+def softmin_matmul(x: jax.Array, y: jax.Array, *, tau: float = 2e-2) -> jax.Array:
+    """Approximate min-plus on the MXU via the tropical limit.
+
+    ``Z = -tau * log(exp(-X/tau) @ exp(-Y/tau))`` -> min-plus as tau -> 0.
+
+    The (min,+) semiring has no multiply-accumulate, so TPU's 128x128 systolic
+    MXU cannot run exact min-plus (it runs on the VPU).  This transform trades
+    exactness for MXU throughput.
+
+    Numerics: inputs are normalized by their max finite magnitude (min-plus is
+    positively homogeneous), and row/col min-shifts keep exponentials near 1.
+    ``tau`` is in *normalized* units; validity envelope: any candidate whose
+    normalized excess over the shift baseline exceeds ~tau*log(1/tiny) (~88
+    tau in f32) underflows, so tau must exceed ~(normalized diameter)/80 —
+    tau >= 0.05 is safe for any input, error ~ tau*log(n)*scale.  Documented
+    + measured in EXPERIMENTS.md; experimental, not used by default.
+    """
+    finite_max = lambda v: jnp.max(jnp.where(jnp.isfinite(v), jnp.abs(v), 0.0))
+    scale = jnp.maximum(jnp.maximum(finite_max(x), finite_max(y)), 1e-9)
+    xn, yn = x / scale, y / scale
+    a = jnp.min(xn, axis=1, keepdims=True)          # (m, 1) row shift
+    b = jnp.min(yn, axis=0, keepdims=True)          # (1, n) col shift
+    a = jnp.where(jnp.isfinite(a), a, 0.0)
+    b = jnp.where(jnp.isfinite(b), b, 0.0)
+    ex = jnp.exp(-(xn - a) / tau)                   # in (0, 1], inf -> 0
+    ey = jnp.exp(-(yn - b) / tau)
+    s = ex @ ey
+    z = jnp.where(s > 0, -tau * jnp.log(jnp.maximum(s, jnp.finfo(x.dtype).tiny)), INF)
+    return (z + a + b) * scale
+
+
+# ---------------------------------------------------------------------------
+# Padding helpers (blocked / recursive algorithms need divisible sizes).
+# ---------------------------------------------------------------------------
+
+def pad_to_multiple(d: jax.Array, multiple: int) -> jax.Array:
+    """Pad a distance matrix to a multiple of ``multiple`` with unreachable
+    (inf off-diagonal, 0 diagonal) phantom nodes — semantically inert."""
+    n = d.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return d
+    np_ = n + pad
+    out = jnp.full((np_, np_), INF, dtype=d.dtype)
+    out = out.at[:n, :n].set(d)
+    idx = jnp.arange(n, np_)
+    return out.at[idx, idx].set(0.0)
+
+
+def pad_pred_to_multiple(p: jax.Array, multiple: int) -> jax.Array:
+    n = p.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return p
+    np_ = n + pad
+    out = jnp.full((np_, np_), -1, dtype=p.dtype)
+    out = out.at[:n, :n].set(p)
+    idx = jnp.arange(n, np_)
+    return out.at[idx, idx].set(idx)
+
+
+def unpad(z: jax.Array, n: int) -> jax.Array:
+    return z[:n, :n]
+
+
+def ceil_log2(n: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(n, 2)))))

@@ -1,0 +1,18 @@
+"""Data pipelines: synthetic token/graph/interaction streams + samplers."""
+
+from .pipeline import (
+    lm_batch_stream,
+    mind_batch_stream,
+    synthetic_graph,
+    molecule_batch_stream,
+)
+from .sampler import CSRGraph, NeighborSampler
+
+__all__ = [
+    "lm_batch_stream",
+    "mind_batch_stream",
+    "synthetic_graph",
+    "molecule_batch_stream",
+    "CSRGraph",
+    "NeighborSampler",
+]

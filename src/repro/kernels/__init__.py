@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+``minplus``   — tiled tropical matmul (+ fused accumulate / fused argmin)
+``fw_block``  — in-VMEM Floyd-Warshall pivot-tile closure
+
+Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` is the public
+dispatch layer (pallas on TPU / interpret for tests / XLA fallback on CPU).
+"""
+
+from . import ops, ref
+from .ops import fw_block, fw_block_pred, minplus, minplus_argmin
+
+__all__ = ["ops", "ref", "minplus", "minplus_argmin", "fw_block", "fw_block_pred"]

@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the Pallas kernels, with backend dispatch.
+
+On TPU the Pallas kernels are the hot path.  On this CPU container the
+kernels are validated in ``interpret=True`` mode (Python-level execution) by
+the test suite, while runtime callers get the pure-XLA fallback from
+``repro.kernels.ref`` — same semantics, fast on CPU, and the thing the
+dry-run lowers (so the roofline reads XLA HLO; DESIGN.md records that the
+kernel replaces that HLO region on real TPUs).
+
+Backend selection:
+  * default          — pallas on TPU, XLA fallback elsewhere
+  * REPRO_KERNELS=interpret  — force pallas interpret mode (kernel tests)
+  * REPRO_KERNELS=xla        — force the fallback everywhere
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fw_block import fw_block_pallas, fw_block_pred_pallas
+from .minplus import minplus_argmin_pallas, minplus_pallas
+
+__all__ = ["minplus", "minplus_argmin", "fw_block", "fw_block_pred", "backend"]
+
+
+def backend() -> str:
+    env = os.environ.get("REPRO_KERNELS", "")
+    if env in ("interpret", "xla", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def minplus(
+    x: jax.Array, y: jax.Array, a: Optional[jax.Array] = None, **block_kw
+) -> jax.Array:
+    """Z = min_k x[:,k]+y[k,:]; fused Z = min(a, .) when ``a`` is given."""
+    b = backend()
+    if b == "xla":
+        return ref.minplus_acc_ref(a, x, y) if a is not None else ref.minplus_ref(x, y)
+    return minplus_pallas(
+        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **block_kw
+    )
+
+
+def minplus_argmin(
+    x: jax.Array, y: jax.Array, a: Optional[jax.Array] = None, **block_kw
+) -> Tuple[jax.Array, jax.Array]:
+    """(Z, K*) with fused global-k argmin (see ref for tie/-1 semantics)."""
+    b = backend()
+    if b == "xla":
+        if a is not None:
+            return ref.minplus_acc_argmin_ref(a, x, y)
+        return ref.minplus_argmin_ref(x, y)
+    return minplus_argmin_pallas(
+        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **block_kw
+    )
+
+
+def fw_block(d: jax.Array) -> jax.Array:
+    """In-VMEM FW closure of a (B,B) tile or (T,B,B) batch of tiles."""
+    b = backend()
+    if b == "xla":
+        if d.ndim == 3:
+            return jax.vmap(ref.fw_block_ref)(d)
+        return ref.fw_block_ref(d)
+    return fw_block_pallas(d, interpret=(b == "interpret"))
+
+
+def fw_block_pred(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    b = backend()
+    if b == "xla":
+        if d.ndim == 3:
+            return jax.vmap(ref.fw_block_pred_ref)(d, p)
+        return ref.fw_block_pred_ref(d, p)
+    return fw_block_pred_pallas(d, p, interpret=(b == "interpret"))

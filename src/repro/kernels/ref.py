@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function of the same name here.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+__all__ = [
+    "minplus_ref",
+    "minplus_argmin_ref",
+    "minplus_acc_ref",
+    "minplus_acc_argmin_ref",
+    "fw_block_ref",
+    "fw_block_pred_ref",
+]
+
+
+def minplus_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Z[i, j] = min_k x[i, k] + y[k, j] (tropical matmul)."""
+    return jnp.min(x[:, :, None] + y[None, :, :], axis=1)
+
+
+def minplus_argmin_ref(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(Z, K*) with K*[i, j] = argmin_k x[i, k] + y[k, j]; K* = -1 if Z = inf.
+
+    Ties resolve to the smallest k (jnp.argmin convention).
+    """
+    l = x[:, :, None] + y[None, :, :]
+    z = jnp.min(l, axis=1)
+    kstar = jnp.argmin(l, axis=1).astype(jnp.int32)
+    return z, jnp.where(jnp.isinf(z), jnp.int32(-1), kstar)
+
+
+def minplus_acc_ref(a: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Fused accumulate: Z = min(A, X (x) Y) elementwise."""
+    return jnp.minimum(a, minplus_ref(x, y))
+
+
+def minplus_acc_argmin_ref(
+    a: jax.Array, x: jax.Array, y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused accumulate with provenance: K* = -1 where A kept (no improvement),
+    else the argmin k.  Strict improvement only (ties keep A)."""
+    z, kstar = minplus_argmin_ref(x, y)
+    better = z < a
+    return jnp.where(better, z, a), jnp.where(better, kstar, jnp.int32(-1))
+
+
+def fw_block_ref(d: jax.Array) -> jax.Array:
+    """In-block Floyd-Warshall closure: B pivot steps on a (B, B) tile."""
+
+    def body(k, dd):
+        via = jax.lax.dynamic_slice(dd, (0, k), (dd.shape[0], 1)) + jax.lax.dynamic_slice(
+            dd, (k, 0), (1, dd.shape[1])
+        )
+        return jnp.minimum(dd, via)
+
+    return jax.lax.fori_loop(0, d.shape[0], body, d)
+
+
+def fw_block_pred_ref(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """In-block FW closure with predecessor propagation.
+
+    On strict improvement through pivot k: pred[i, j] <- pred[k, j].
+    ``p`` holds *global* node ids (the caller offsets them)."""
+
+    def body(k, dp):
+        dd, pp = dp
+        via = jax.lax.dynamic_slice(dd, (0, k), (dd.shape[0], 1)) + jax.lax.dynamic_slice(
+            dd, (k, 0), (1, dd.shape[1])
+        )
+        pk = jax.lax.dynamic_slice(pp, (k, 0), (1, pp.shape[1]))
+        better = via < dd
+        return (
+            jnp.where(better, via, dd),
+            jnp.where(better, jnp.broadcast_to(pk, pp.shape), pp),
+        )
+
+    return jax.lax.fori_loop(0, d.shape[0], body, (d, p))

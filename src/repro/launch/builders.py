@@ -1,0 +1,545 @@
+"""(ArchDef, cell, mesh) -> dry-runnable step: fn + ShapeDtypeStruct args +
+in/out shardings.  One builder per cell kind; all state is abstract
+(jax.eval_shape end to end — nothing is allocated for the dry-run)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchDef, ShapeCell
+from repro.models import kvcache as kvc
+from repro.models.gnn import loss_gnn
+from repro.models.mind import init_mind, mind_loss, retrieval_scores, serve_user
+from repro.models.nequip import init_nequip, nequip_energy
+from repro.models.transformer import decode_step, init_lm, loss_fn as lm_loss, prefill
+from repro.optim import make_optimizer, warmup_cosine
+from repro.sharding import batch_axes_for, make_shardings
+from repro.train import init_train_state, make_train_step, train_state_specs
+
+__all__ = ["DryRunnable", "build_cell", "abstract_init"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _pad_to(n: int, m: int = 512) -> int:
+    """Round a sharded dim up to a multiple of every mesh size (512 covers
+    256 too) — padded tail is masked out semantically."""
+    return (n + m - 1) // m * m
+
+
+@dataclass
+class DryRunnable:
+    name: str
+    fn: Callable
+    args: Tuple            # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float     # 6*N*D (dense) / 6*N_active*D analytical reference
+    note: str = ""
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def abstract_init(init_fn, cfg, key=None):
+    """eval_shape an (params, specs) init; specs captured via side channel."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    box = {}
+
+    def only_params(k):
+        p, s = init_fn(k, cfg)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(only_params, key)
+    return shapes, box["s"]
+
+
+def _tree_size(tree) -> int:
+    import math
+
+    return sum(
+        math.prod(l.shape) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def _param_count(params) -> int:
+    return _tree_size(params)
+
+
+def abstract_cache(init_cache, cfg, b, sl):
+    box = {}
+
+    def only():
+        c, spec = init_cache(cfg, b, sl)
+        box["s"] = spec
+        return c
+
+    sds = jax.eval_shape(only)
+    return sds, box["s"]
+
+
+def _sh(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _scalar_sh(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_active_params(cfg, n_params: int) -> float:
+    """Active params per token for the MODEL_FLOPS = 6*N_active*D reference."""
+    if not cfg.moe:
+        return float(n_params)
+    # subtract non-activated expert weights
+    expert = 3 * cfg.d_model * cfg.moe_d_ff
+    moe_layers = cfg.n_layers - cfg.first_k_dense
+    inactive = moe_layers * (cfg.n_experts - cfg.moe_top_k) * expert
+    return float(n_params - inactive)
+
+
+def build_lm_train(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    ba = batch_axes_for(mesh)
+    cfg = arch.make_config(batch_axes=ba)
+    s = cell.settings
+    b, sl = s["batch"], s["seq_len"]
+    opt = make_optimizer(arch.optimizer, warmup_cosine(arch.learning_rate, 2000, 100_000))
+
+    params_sds, param_specs = abstract_init(init_lm, cfg)
+    state_sds = jax.eval_shape(lambda: init_train_state(params_sds, opt))
+    state_specs = train_state_specs(param_specs, opt)
+    state_sh = make_shardings(mesh, state_specs)
+
+    batch_sds = {
+        "tokens": SDS((b, sl), jnp.int32),
+        "labels": SDS((b, sl), jnp.int32),
+    }
+    batch_sh = {k: _sh(mesh, P(ba, None)) for k in batch_sds}
+
+    step = make_train_step(
+        lambda p, bt: lm_loss(p, bt, cfg), opt, microbatches=arch.microbatches,
+        param_specs=param_specs,
+    )
+    n = _param_count(params_sds)
+    tokens = b * sl
+    model_flops = 6.0 * _lm_active_params(cfg, n) * tokens
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=step,
+        args=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, _scalar_sh(mesh)),
+        model_flops=model_flops,
+        note=f"params={n/1e9:.1f}B tokens/step={tokens}",
+    )
+
+
+def build_lm_prefill(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    ba = batch_axes_for(mesh)
+    cfg = arch.make_config(batch_axes=ba)
+    s = cell.settings
+    b, sl = s["batch"], s["seq_len"]
+    params_sds, param_specs = abstract_init(init_lm, cfg)
+    params_sh = make_shardings(mesh, param_specs)
+
+    init_cache = kvc.init_mla_cache if cfg.mla else kvc.init_gqa_cache
+    _, cache_specs = abstract_cache(init_cache, cfg, b, sl)
+    cache_sh = make_shardings(mesh, cache_specs)
+
+    fn = lambda p, t: prefill(p, t, cfg, sl)
+    tok_sds = SDS((b, sl), jnp.int32)
+    n = _param_count(params_sds)
+    model_flops = 2.0 * _lm_active_params(cfg, n) * b * sl   # fwd only
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=fn,
+        args=(params_sds, tok_sds),
+        in_shardings=(params_sh, _sh(mesh, P(ba, None))),
+        out_shardings=(_sh(mesh, P(ba, None)), cache_sh),
+        model_flops=model_flops,
+        note=f"params={n/1e9:.1f}B prefill tokens={b*sl}",
+    )
+
+
+def build_lm_decode(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    ba = batch_axes_for(mesh)
+    cfg = arch.make_config(batch_axes=ba)
+    s = cell.settings
+    b, sl = s["batch"], s["seq_len"]
+    params_sds, param_specs = abstract_init(init_lm, cfg)
+    params_sh = make_shardings(mesh, param_specs)
+
+    init_cache = kvc.init_mla_cache if cfg.mla else kvc.init_gqa_cache
+    cache_sds, cache_specs = abstract_cache(init_cache, cfg, b, sl)
+    cache_sh = make_shardings(mesh, cache_specs)
+
+    fn = lambda p, c, t: decode_step(p, c, t, cfg)   # cache donated (in-place)
+    tok_sds = SDS((b, 1), jnp.int32)
+    n = _param_count(params_sds)
+    model_flops = 2.0 * _lm_active_params(cfg, n) * b        # one token each
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=fn,
+        args=(params_sds, cache_sds, tok_sds),
+        in_shardings=(params_sh, cache_sh, _sh(mesh, P(ba, None))),
+        out_shardings=(_sh(mesh, P(ba, "model")), cache_sh),
+        model_flops=model_flops,
+        note=f"params={n/1e9:.1f}B decode batch={b} kv={sl}",
+        donate_argnums=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells (gcn / gin / pna)
+# ---------------------------------------------------------------------------
+
+def _gnn_graph_sds(s: dict, edge_axes) -> Tuple[dict, dict]:
+    if s.get("sampled"):
+        seeds, fanouts = s["batch_nodes"], s["fanouts"]
+        n = seeds
+        max_nodes, max_edges = seeds, 0
+        for f in fanouts:
+            e = n * f
+            max_edges += e
+            max_nodes += e
+            n = e
+        nn, ne = max_nodes, max_edges
+    else:
+        nn, ne = s["n_nodes"], s["n_edges"]
+    ne = _pad_to(ne)                      # edge dim shards over all devices
+    # big graphs: shard the node dim too (padded); small ones replicate
+    node_axes = edge_axes if nn > 500_000 else None
+    if node_axes is not None:
+        nn = _pad_to(nn)
+    d = s["d_feat"]
+    sds = {
+        "node_feat": SDS((nn, d), jnp.float32),
+        "edge_index": SDS((2, ne), jnp.int32),
+        "edge_mask": SDS((ne,), jnp.bool_),
+        "node_mask": SDS((nn,), jnp.bool_),
+        "labels": SDS((nn,), jnp.int32),
+    }
+    sh = {
+        "node_feat": P(node_axes, None),
+        "edge_index": P(None, edge_axes),
+        "edge_mask": P(edge_axes),
+        "node_mask": P(node_axes),
+        "labels": P(node_axes),
+    }
+    if s.get("sampled"):
+        sds["label_mask"] = SDS((nn,), jnp.bool_)
+        sh["label_mask"] = P(None)
+    return sds, sh
+
+
+def build_gnn_train(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    s = dict(cell.settings)
+    all_axes = tuple(mesh.axis_names)          # edges shard over every axis
+    from repro.models.gnn import init_gnn
+
+    cfg = arch.make_config(d_feat=s["d_feat"], batch_axes=all_axes)
+    opt = make_optimizer(arch.optimizer, warmup_cosine(arch.learning_rate, 100, 10_000))
+    if s.get("batch"):                          # molecule: disjoint union batch
+        nn = s["n_nodes"] * s["batch"]
+        ne = s["n_edges"] * s["batch"]
+        s = {**s, "n_nodes": nn, "n_edges": ne, "sampled": False}
+
+    params_sds, param_specs = abstract_init(init_gnn, cfg)
+    state_sds = jax.eval_shape(lambda: init_train_state(params_sds, opt))
+    state_specs = train_state_specs(param_specs, opt)
+    state_sh = make_shardings(mesh, state_specs)
+
+    graph_sds, graph_spec = _gnn_graph_sds(s, all_axes)
+    graph_sh = {k: _sh(mesh, v) for k, v in graph_spec.items()}
+
+    step = make_train_step(lambda p, g: loss_gnn(p, g, cfg), opt)
+    ne = graph_sds["edge_index"].shape[1]
+    nn = graph_sds["node_feat"].shape[0]
+    # reference flops: gather+2 matmuls per layer ~ 2*E*d_in*1 + 2*N*d_in*d_out
+    model_flops = float(cfg.n_layers) * (2.0 * ne * cfg.d_hidden + 2.0 * nn * cfg.d_hidden * cfg.d_hidden) * 3
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=step,
+        args=(state_sds, graph_sds),
+        in_shardings=(state_sh, graph_sh),
+        out_shardings=(state_sh, _scalar_sh(mesh)),
+        model_flops=model_flops,
+        note=f"nodes={nn} edges={ne}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# NequIP cells
+# ---------------------------------------------------------------------------
+
+def build_nequip_train(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    s = dict(cell.settings)
+    all_axes = tuple(mesh.axis_names)
+    cfg = arch.make_config(batch_axes=all_axes)
+    opt = make_optimizer(arch.optimizer, warmup_cosine(arch.learning_rate, 100, 10_000))
+
+    batched = bool(s.get("batch"))
+    if s.get("sampled"):
+        seeds, fanouts = s["batch_nodes"], s["fanouts"]
+        n = seeds
+        nn, ne = seeds, 0
+        for f in fanouts:
+            e = n * f
+            ne += e
+            nn += e
+            n = e
+    else:
+        nn, ne = s["n_nodes"], s["n_edges"]
+    if not s.get("batch"):
+        ne = _pad_to(ne)
+
+    params_sds, param_specs = abstract_init(init_nequip, cfg)
+    state_sds = jax.eval_shape(lambda: init_train_state(params_sds, opt))
+    state_specs = train_state_specs(param_specs, opt)
+    state_sh = make_shardings(mesh, state_specs)
+
+    if batched:
+        from repro.sharding import batch_axes_for
+
+        b = s["batch"]
+        ba = batch_axes_for(mesh)
+        batch_sds = {
+            "positions": SDS((b, nn, 3), jnp.float32),
+            "species": SDS((b, nn), jnp.int32),
+            "edge_index": SDS((b, 2, ne), jnp.int32),
+            "edge_mask": SDS((b, ne), jnp.bool_),
+            "node_mask": SDS((b, nn), jnp.bool_),
+            "energy": SDS((b,), jnp.float32),
+        }
+        batch_sh = {
+            k: _sh(mesh, P(*((ba,) + (None,) * (len(v.shape) - 1))))
+            for k, v in batch_sds.items()
+        }
+
+        def loss_fn(p, bt):
+            e = jax.vmap(
+                lambda pos, sp, ei, em, nm: nequip_energy(
+                    p, {"positions": pos, "species": sp, "edge_index": ei,
+                        "edge_mask": em, "node_mask": nm}, cfg)
+            )(bt["positions"], bt["species"], bt["edge_index"],
+              bt["edge_mask"], bt["node_mask"])
+            loss = jnp.mean((e - bt["energy"]) ** 2)
+            return loss, {"loss": loss}
+    else:
+        node_axes = all_axes if nn > 500_000 else None
+        if node_axes is not None:
+            nn = _pad_to(nn)          # sharded node dim must divide evenly
+        batch_sds = {
+            "positions": SDS((nn, 3), jnp.float32),
+            "species": SDS((nn,), jnp.int32),
+            "edge_index": SDS((2, ne), jnp.int32),
+            "edge_mask": SDS((ne,), jnp.bool_),
+            "node_mask": SDS((nn,), jnp.bool_),
+            "energy": SDS((), jnp.float32),
+        }
+        batch_sh = {
+            "positions": _sh(mesh, P(node_axes, None)),
+            "species": _sh(mesh, P(node_axes)),
+            "edge_index": _sh(mesh, P(None, all_axes)),
+            "edge_mask": _sh(mesh, P(all_axes)),
+            "node_mask": _sh(mesh, P(node_axes)),
+            "energy": _scalar_sh(mesh),
+        }
+
+        def loss_fn(p, bt):
+            e = nequip_energy(p, bt, cfg)
+            loss = (e - bt["energy"]) ** 2
+            return loss, {"loss": loss}
+
+    step = make_train_step(loss_fn, opt)
+    # ~paths * 9 * multiplicity flops per edge, x3 (fwd+bwd)
+    mult = (1 + 3 + 9) * cfg.d_hidden * 10
+    model_flops = 3.0 * 2.0 * ne * mult * cfg.n_layers * (s.get("batch") or 1)
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=step,
+        args=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, _scalar_sh(mesh)),
+        model_flops=model_flops,
+        note=f"nodes={nn} edges={ne} batch={s.get('batch') or 1}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# MIND cells
+# ---------------------------------------------------------------------------
+
+def _mind_batch_sds(cfg, b: int, with_loss: bool):
+    sds = {
+        "hist_ids": SDS((b, cfg.hist_len), jnp.int32),
+        "hist_mask": SDS((b, cfg.hist_len), jnp.bool_),
+        "profile_ids": SDS((b, cfg.profile_bag_len), jnp.int32),
+        "profile_mask": SDS((b, cfg.profile_bag_len), jnp.bool_),
+        "routing_logits_init": SDS((b, cfg.n_interests, cfg.hist_len), jnp.float32),
+    }
+    if with_loss:
+        sds["target_id"] = SDS((b,), jnp.int32)
+        sds["neg_ids"] = SDS((b, cfg.n_negatives), jnp.int32)
+    return sds
+
+
+def _mind_batch_sh(mesh, sds, ba):
+    return {
+        k: NamedSharding(mesh, P(*((ba,) + (None,) * (len(v.shape) - 1))))
+        for k, v in sds.items()
+    }
+
+
+def build_mind_train(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    ba = batch_axes_for(mesh)
+    cfg = arch.make_config(batch_axes=ba)
+    b = cell.settings["batch"]
+    opt = make_optimizer(arch.optimizer, warmup_cosine(arch.learning_rate, 100, 10_000))
+    params_sds, param_specs = abstract_init(init_mind, cfg)
+    state_sds = jax.eval_shape(lambda: init_train_state(params_sds, opt))
+    state_sh = make_shardings(mesh, train_state_specs(param_specs, opt))
+    batch_sds = _mind_batch_sds(cfg, b, True)
+    batch_sh = _mind_batch_sh(mesh, batch_sds, ba)
+    step = make_train_step(lambda p, bt: mind_loss(p, bt, cfg), opt)
+    model_flops = 6.0 * b * (
+        cfg.hist_len * cfg.embed_dim * (cfg.n_interests * cfg.capsule_iters + 2)
+        + (cfg.n_negatives + 1) * cfg.embed_dim
+    )
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=step,
+        args=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, _scalar_sh(mesh)),
+        model_flops=model_flops,
+        note=f"batch={b} table={cfg.n_items}x{cfg.embed_dim}",
+    )
+
+
+def build_mind_serve(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    ba = batch_axes_for(mesh)
+    cfg = arch.make_config(batch_axes=ba)
+    b = cell.settings["batch"]
+    params_sds, param_specs = abstract_init(init_mind, cfg)
+    params_sh = make_shardings(mesh, param_specs)
+    batch_sds = _mind_batch_sds(cfg, b, False)
+    batch_sh = _mind_batch_sh(mesh, batch_sds, ba)
+    fn = lambda p, bt: serve_user(p, bt, cfg)
+    model_flops = 2.0 * b * cfg.hist_len * cfg.embed_dim * (
+        cfg.n_interests * cfg.capsule_iters + 2
+    )
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=fn,
+        args=(params_sds, batch_sds),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=_sh(mesh, P(ba, None, None)),
+        model_flops=model_flops,
+        note=f"serve batch={b}",
+    )
+
+
+def build_mind_retrieval(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    all_axes = tuple(mesh.axis_names)
+    cfg = arch.make_config(batch_axes=())     # B=1: no batch sharding
+    nc = _pad_to(cell.settings["n_candidates"])
+    params_sds, param_specs = abstract_init(init_mind, cfg)
+    params_sh = make_shardings(mesh, param_specs)
+    batch_sds = _mind_batch_sds(cfg, 1, False)
+    batch_sds["cand_ids"] = SDS((nc,), jnp.int32)
+    batch_sh = {k: _sh(mesh, P(*((None,) * len(v.shape)))) for k, v in batch_sds.items()}
+    batch_sh["cand_ids"] = _sh(mesh, P(all_axes))
+    fn = lambda p, bt: retrieval_scores(p, bt, cfg, top_k=100)
+    model_flops = 2.0 * nc * cfg.embed_dim * cfg.n_interests
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=fn,
+        args=(params_sds, batch_sds),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=(_scalar_sh(mesh), _scalar_sh(mesh)),
+        model_flops=model_flops,
+        note=f"1 user x {nc} candidates",
+    )
+
+
+# ---------------------------------------------------------------------------
+# APSP cells (the paper)
+# ---------------------------------------------------------------------------
+
+def build_apsp(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    from repro.core.distributed import (
+        dist_spec,
+        fw_distributed,
+        rkleene_distributed,
+        squaring_distributed,
+    )
+
+    s = cell.settings
+    n, method = s["n"], s["method"]
+    multi_pod = "pod" in mesh.axis_names
+    row_axes = ("pod", "data") if multi_pod else ("data",)
+    col_axes = ("model",)
+    spec = dist_spec(multi_pod)
+
+    if method == "squaring":
+        fn = lambda h: squaring_distributed(h, mesh=mesh, row_axes=row_axes,
+                                            col_axes=col_axes)
+        import math
+        flops_per = 2.0 * n * n * n          # add+cmp per (i,k,j)
+        model_flops = flops_per * max(1, math.ceil(math.log2(n)))
+    elif method == "fw":
+        fn = lambda h: fw_distributed(h, mesh=mesh, row_axes=row_axes,
+                                      col_axes=col_axes,
+                                      block_size=s.get("block_size", 512))
+        model_flops = 2.0 * n * n * n
+    elif method == "rkleene":
+        fn = lambda h: rkleene_distributed(h, mesh=mesh, row_axes=row_axes,
+                                           col_axes=col_axes,
+                                           leaf=s.get("leaf", 8192),
+                                           block_size=s.get("block_size", 512))
+        model_flops = 2.0 * n * n * n
+    else:
+        raise ValueError(method)
+
+    h_sds = SDS((n, n), jnp.float32)
+    return DryRunnable(
+        name=f"{arch.arch_id}:{cell.shape_id}",
+        fn=fn,
+        args=(h_sds,),
+        in_shardings=(_sh(mesh, spec),),
+        out_shardings=_sh(mesh, spec),
+        model_flops=model_flops,
+        note=f"N={n} method={method} (min-plus ops on VPU, not MXU)",
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {
+    "lm_train": build_lm_train,
+    "lm_prefill": build_lm_prefill,
+    "lm_decode": build_lm_decode,
+    "gnn_train": build_gnn_train,
+    "mind_train": build_mind_train,
+    "mind_serve": build_mind_serve,
+    "mind_retrieval": build_mind_retrieval,
+    "apsp": build_apsp,
+}
+
+
+def build_cell(arch: ArchDef, cell: ShapeCell, mesh: Mesh) -> DryRunnable:
+    kind = cell.kind
+    if arch.family == "nequip" and kind == "gnn_train":
+        return build_nequip_train(arch, cell, mesh)
+    return _BUILDERS[kind](arch, cell, mesh)

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the ``pod``
+axis carries cross-DCN traffic only (data parallelism / compressed grad
+all-reduce); ``model`` stays inside an ICI domain.
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU tests/examples (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

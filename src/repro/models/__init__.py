@@ -1,0 +1,5 @@
+"""Model zoo: LM transformer stack (dense/MoE/MLA), GNNs, NequIP, MIND."""
+
+from . import gnn, kvcache, layers, mind, mla, moe, nequip, transformer
+
+__all__ = ["gnn", "kvcache", "layers", "mind", "mla", "moe", "nequip", "transformer"]

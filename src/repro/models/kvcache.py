@@ -1,0 +1,93 @@
+"""Decode KV caches — standard GQA cache and the MLA compressed cache.
+
+Layout is layer-stacked so the decode step can ``lax.scan`` over layers with
+the cache as carry.  The sequence dim is sharded over the ``model`` mesh axis
+(P(None, batch, "model", ...)): at decode time the per-token compute is tiny,
+so TP capacity is better spent splitting the one big resident — the cache —
+and letting GSPMD all-reduce the (cheap) softmax statistics across shards.
+
+dtype is the model compute dtype (bf16 on TPU).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["GQACache", "MLACache", "init_gqa_cache", "init_mla_cache",
+           "cache_update_layer", "cache_update_stack"]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class GQACache:
+    k: jax.Array          # (L, B, T, Hkv, Dh)
+    v: jax.Array          # (L, B, T, Hkv, Dh)
+    length: jax.Array     # (B,) valid prefix per sequence
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class MLACache:
+    ckv: jax.Array        # (L, B, T, R)
+    kpe: jax.Array        # (L, B, T, dr)
+    length: jax.Array     # (B,)
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int) -> Tuple[GQACache, GQACache]:
+    """Returns (cache, spec-tree) — zeros cache plus its PartitionSpecs."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    ba = tuple(getattr(cfg, "batch_axes", ("data",)))
+    spec = P(None, ba, "model", None, None)
+    cache = GQACache(
+        k=jnp.zeros(shape, cfg.compute_dtype),
+        v=jnp.zeros(shape, cfg.compute_dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+    specs = GQACache(k=spec, v=spec, length=P(ba))
+    return cache, specs
+
+
+def init_mla_cache(cfg, batch: int, max_len: int) -> Tuple[MLACache, MLACache]:
+    ba = tuple(getattr(cfg, "batch_axes", ("data",)))
+    cache = MLACache(
+        ckv=jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora_rank), cfg.compute_dtype),
+        kpe=jnp.zeros((cfg.n_layers, batch, max_len, cfg.qk_rope_head_dim), cfg.compute_dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+    specs = MLACache(
+        ckv=P(None, ba, "model", None),
+        kpe=P(None, ba, "model", None),
+        length=P(ba),
+    )
+    return cache, specs
+
+
+def cache_update_stack(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Merge one new timestep per sequence into ALL layers at once.
+
+    buf (L, B, T, ...), new (L, B, 1, ...): one fused pass over the cache
+    instead of a per-layer rewrite inside the decode scan — the scan returns
+    only the (L, B, 1, ...) new-token slices (EXPERIMENTS.md §Perf: the
+    per-layer in-scan merge made XLA materialize + dtype-convert the whole
+    L-stack every layer iteration)."""
+    t = buf.shape[2]
+    onehot = jax.nn.one_hot(lengths, t, dtype=buf.dtype)            # (B, T)
+    oh = onehot.reshape((1,) + onehot.shape + (1,) * (buf.ndim - 3))
+    return buf * (1 - oh) + new * oh
+
+
+def cache_update_layer(buf: jax.Array, new: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Write one new timestep per sequence into a (B, T, ...) layer buffer.
+
+    ``new`` is (B, 1, ...); slot i goes to position lengths[i].  Uses a
+    one-hot select rather than scatter so GSPMD keeps it local to the
+    sequence shard that owns the slot."""
+    b, t = buf.shape[0], buf.shape[1]
+    onehot = jax.nn.one_hot(lengths, t, dtype=buf.dtype)            # (B, T)
+    oh = onehot.reshape((b, t) + (1,) * (buf.ndim - 2))
+    return buf * (1 - oh) + new * oh

@@ -1,0 +1,132 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Queries go through a LoRA-style bottleneck (q_lora_rank=1536); keys/values
+are generated from a shared compressed latent c_kv (kv_lora_rank=512) plus a
+single decoupled-RoPE key channel (qk_rope_head_dim=64) shared across heads.
+Per-head dims: qk_nope=128, qk_rope=64, v=128.
+
+Two execution paths:
+
+* train/prefill — expand k_nope/v from c_kv per head and run ordinary
+  chunked attention (the expansion is streamed per layer, never cached).
+* decode       — the *absorbed* form: fold W_uk into the query
+  (q_abs = q_nope @ W_uk, (B,1,H,512)) and attend directly against the
+  compressed cache; fold W_uv into the output the same way.  The KV cache is
+  (c_kv 512 + k_pe 64) per token — 576 values instead of 2*H*128 = 32768,
+  the 57x cache compression that makes deepseek-v2 decode_32k fit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import apply_rope, attention, dense_init, init_rmsnorm, rmsnorm
+
+__all__ = ["init_mla", "mla_train", "mla_decode"]
+
+
+def init_mla(key, cfg) -> Tuple[dict, dict]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    keys = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    qn_p, qn_s = init_rmsnorm(qr, dt)
+    kvn_p, kvn_s = init_rmsnorm(kvr, dt)
+    p = {
+        "wdq": dense_init(keys[0], (d, qr), dt),
+        "q_norm": qn_p,
+        "wuq": dense_init(keys[1], (qr, h * (dn + dr)), dt),
+        "wdkv": dense_init(keys[2], (d, kvr), dt),
+        "kv_norm": kvn_p,
+        "wuk": dense_init(keys[3], (kvr, h, dn), dt),
+        "wuv": dense_init(keys[4], (kvr, h, dv), dt),
+        "wkr": dense_init(keys[5], (d, dr), dt),
+        "wo": dense_init(keys[6], (h * dv, d), dt),
+    }
+    fs = "data" if getattr(cfg, "fsdp_params", False) else None
+    s = {
+        "wdq": P(fs, None),
+        "q_norm": qn_s,
+        "wuq": P(fs, "model"),
+        "wdkv": P(fs, None),
+        "kv_norm": kvn_s,
+        "wuk": P(None, "model", None),
+        "wuv": P(None, "model", None),
+        "wkr": P(fs, None),
+        "wo": P("model", fs),
+    }
+    return p, s
+
+
+def _mla_q(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(p["q_norm"], x @ p["wdq"].astype(x.dtype), cfg.norm_eps)
+    q = (cq @ p["wuq"].astype(x.dtype)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg, positions):
+    """Compressed latents for new tokens: (c_kv (B,S,R), k_pe (B,S,dr))."""
+    ckv = rmsnorm(p["kv_norm"], x @ p["wdkv"].astype(x.dtype), cfg.norm_eps)
+    kpe = (x @ p["wkr"].astype(x.dtype))[:, :, None, :]          # (B,S,1,dr)
+    kpe = apply_rope(kpe, positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, kpe
+
+
+def mla_train(p, x, cfg, positions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence MLA.  Returns (attn_out, c_kv, k_pe) — the latents are
+    returned so a prefill step can populate the compressed cache."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, kpe = _mla_ckv(p, x, cfg, positions)
+    cd = x.dtype
+    k_nope = jnp.einsum("bsr,rhd->bshd", ckv, p["wuk"].astype(cd))
+    v = jnp.einsum("bsr,rhd->bshd", ckv, p["wuv"].astype(cd))
+    # decoupled rope channel: same k_pe for every head
+    k_pe_h = jnp.broadcast_to(kpe[:, :, None, :], (b, s, h, dr))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_pe_h], axis=-1)
+    scale = (dn + dr) ** -0.5
+    o = attention(
+        q, k, v, causal=True, chunk=cfg.attn_chunk, softmax_scale=scale
+    )
+    out = o.reshape(b, s, h * dv) @ p["wo"].astype(cd)
+    return out, ckv, kpe
+
+
+def mla_decode(
+    p,
+    x: jax.Array,                 # (B, 1, d) new-token activations
+    cfg,
+    ckv_cache: jax.Array,         # (B, T, R) compressed latents (incl. slot t)
+    kpe_cache: jax.Array,         # (B, T, dr)
+    kv_len: jax.Array,            # (B,) valid lengths AFTER the new token
+) -> jax.Array:
+    """Absorbed-matrix decode against the compressed cache."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    t = ckv_cache.shape[1]
+    positions = (kv_len - 1)[:, None]                             # (B,1)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)                 # (B,1,H,*)
+    cd = x.dtype
+    # absorb W_uk into q: (B,1,H,R)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wuk"].astype(cd))
+    s_nope = jnp.einsum("bqhr,btr->bhqt", q_abs.astype(jnp.float32), ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,btd->bhqt", q_rope.astype(jnp.float32), kpe_cache.astype(jnp.float32))
+    scores = (s_nope + s_rope) * (dn + dr) ** -0.5                # (B,H,1,T)
+    mask = jnp.arange(t)[None, :] < kv_len[:, None]               # (B,T)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqt,btr->bqhr", attn, ckv_cache.astype(jnp.float32)).astype(cd)
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx, p["wuv"].astype(cd))    # (B,1,H,dv)
+    return o.reshape(b, 1, h * dv) @ p["wo"].astype(cd)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN — GShard-style grouped, capacity-based dispatch.
+
+Tokens are split into groups of ``moe_group`` (sharded over the batch axes);
+each group routes independently with capacity ``C = Tg * top_k * cf / E``.
+The dispatch/combine tensors are (G, Tg, E, C) — with Tg ~ 2k that is tens
+of MB per group, the standard trade for a dense, SPMD-friendly dispatch that
+GSPMD turns into an all-to-all when experts are sharded over ``model`` (EP).
+
+Expert weights are stacked (E, d, ff) and sharded ``P("model", ...)`` — with
+E % TP == 0 every device owns E/TP whole experts.  Tokens over capacity are
+dropped (their combine weight is 0 and the residual connection carries them),
+which is the published GShard/Switch behaviour at cf=1.25.
+
+Returns the load-balancing auxiliary loss of Shazeer et al. (mean_e of
+fraction_dispatched_e * mean_router_prob_e * E) for the trainer to add.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import constrain, dense_init
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg) -> Tuple[dict, dict]:
+    e = cfg.n_experts
+    d = cfg.d_model
+    f = cfg.moe_d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p = {
+        "router": dense_init(kr, (d, e), jnp.float32),  # router always f32
+        "wg": dense_init(kg, (e, d, f), dt),
+        "wu": dense_init(ku, (e, d, f), dt),
+        "wd": dense_init(kd, (e, f, d), dt),
+    }
+    fs = "data" if getattr(cfg, "fsdp_params", False) else None
+    # Weight-stationary EP layout: experts sharded over model (EP) and the
+    # FSDP dim placed on d_ff, NOT d_model.  The expert einsums contract
+    # d_model (full) and d_ff (sharded -> small activation psum), so decode
+    # never all-gathers expert weights — measured on deepseek decode_32k:
+    # 59 GB/step of weight all-gathers -> activation-sized psums
+    # (EXPERIMENTS.md §Perf iteration 1).
+    s = {
+        "router": P(None, None),
+        "wg": P("model", None, fs),
+        "wu": P("model", None, fs),
+        "wd": P("model", fs, None),
+    }
+    return p, s
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    tg = min(getattr(cfg, "moe_group", 1024), t)
+    while t % tg != 0:       # largest divisor of t not above moe_group
+        tg -= 1
+    g = t // tg
+    cf = getattr(cfg, "moe_capacity_factor", 1.25)
+    cap = max(int(tg * k * cf / e), 1)
+    # round capacity to a lane multiple so the (..., C) dims tile cleanly
+    cap = (cap + 3) // 4 * 4
+
+    ba = tuple(getattr(cfg, "batch_axes", ("data",)))
+    xg = x.reshape(g, tg, d)
+    xg = constrain(xg, P(ba, None, None))
+
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                               # (G,Tg,k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) in its expert's buffer, group-local
+    oh = jax.nn.one_hot(top_i, e, dtype=jnp.float32)                     # (G,Tg,k,E)
+    ohf = oh.reshape(g, tg * k, e)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                                  # rank per expert
+    pos = jnp.einsum("gse,gse->gs", pos, ohf).reshape(g, tg, k)          # (G,Tg,k)
+    keep = pos < cap
+
+    # dispatch/combine (G, Tg, E, C), built one top-k slot at a time
+    dispatch = jnp.zeros((g, tg, e, cap), jnp.float32)
+    combine = jnp.zeros((g, tg, e, cap), jnp.float32)
+    for j in range(k):
+        poh = jax.nn.one_hot(pos[..., j], cap, dtype=jnp.float32)        # (G,Tg,C)
+        mj = keep[..., j].astype(jnp.float32)
+        dj = jnp.einsum("gte,gtc->gtec", oh[:, :, j] * mj[..., None], poh)
+        dispatch = dispatch + dj
+        combine = combine + dj * top_w[..., j][..., None, None]
+
+    # aux load-balance loss (Shazeer): E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(oh[:, :, 0], axis=1)                                  # top-1 frac (G,E)
+    mean_prob = jnp.mean(probs, axis=1)                                   # (G,E)
+    aux = e * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+
+    cd = x.dtype
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(cd), xg)     # (G,E,C,d)
+    expert_in = constrain(
+        expert_in, P(ba, "model", None, None)
+    )
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(cd)))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["wu"].astype(cd))
+    eo = jnp.einsum("gecf,efd->gecd", h * u, p["wd"].astype(cd))          # (G,E,C,d)
+    out = jnp.einsum("gecd,gtec->gtd", eo, combine.astype(cd))
+    out = constrain(out, P(ba, None, None))
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,486 @@
+"""Decoder-only LM — dense / MoE / MLA variants over one scanned layer stack.
+
+Design:
+  * params-as-pytrees; every init returns (params, specs) with PartitionSpec
+    leaves (TP over ``model``, optional FSDP over ``data`` for the >100B
+    archs, batch over ``cfg.batch_axes``).
+  * layers are stacked (leading L dim) and driven by ``lax.scan`` so the HLO
+    is depth-independent; the per-layer body is wrapped in ``jax.checkpoint``
+    with a config-selected policy.
+  * mixed structure (DeepSeek's dense first layer) is a separate unstacked
+    prefix, so each scanned stack stays homogeneous.
+  * three entry points: ``forward`` (train/prefill logits), ``decode_step``
+    (one token against a KV cache), ``prefill`` (forward + cache fill).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import kvcache as kvc
+from .layers import (
+    apply_rope,
+    constrain,
+    attention,
+    dense_init,
+    embed,
+    gqa_out,
+    gqa_qkv,
+    init_embed,
+    init_gqa,
+    init_rmsnorm,
+    init_swiglu,
+    rmsnorm,
+    swiglu,
+    unembed,
+)
+from .mla import init_mla, mla_decode, mla_train
+from .moe import init_moe, moe_ffn
+
+__all__ = ["LMConfig", "init_lm", "forward", "loss_fn", "decode_step", "prefill"]
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_k_dense: int = 0
+    residual_dense: bool = False       # arctic: dense MLP in parallel with MoE
+    moe_group: int = 1024
+    moe_capacity_factor: float = 1.25
+    moe_aux_coef: float = 0.01
+    # MLA
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 512
+    remat: str = "full"                # none | full | dots
+    fsdp_params: bool = False          # shard big-dim of weights over data too
+    seq_shard: bool = False            # Megatron-SP: residual stream sharded
+                                       # (batch, seq->model, d) between layers
+    loss_chunk: int = 0                # 0 = whole-seq logits; else chunked
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    def with_batch_axes(self, axes) -> "LMConfig":
+        return dataclasses.replace(self, batch_axes=tuple(axes))
+
+    @property
+    def act_spec(self) -> P:
+        """Sharding of the (B, S, d) residual stream between layers."""
+        ba = tuple(self.batch_axes)
+        return P(ba, "model", None) if self.seq_shard else P(ba, None, None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: LMConfig, *, dense_override: bool = False) -> Tuple[dict, dict]:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    ln1_p, ln1_s = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    ln2_p, ln2_s = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if cfg.mla:
+        attn_p, attn_s = init_mla(k1, cfg)
+    else:
+        attn_p, attn_s = init_gqa(k1, cfg)
+    p = {"ln1": ln1_p, "attn": attn_p, "ln2": ln2_p}
+    s = {"ln1": ln1_s, "attn": attn_s, "ln2": ln2_s}
+    is_moe = cfg.moe and not dense_override
+    if is_moe:
+        p["moe"], s["moe"] = init_moe(k2, cfg)
+        if cfg.n_shared_experts > 0:
+            p["shared"], s["shared"] = init_swiglu(
+                k3, cfg.d_model, cfg.n_shared_experts * cfg.moe_d_ff,
+                cfg.param_dtype, cfg.fsdp_params,
+            )
+        if cfg.residual_dense:
+            p["mlp"], s["mlp"] = init_swiglu(
+                k4, cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.fsdp_params
+            )
+    else:
+        p["mlp"], s["mlp"] = init_swiglu(
+            k5, cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.fsdp_params
+        )
+    return p, s
+
+
+def _stack_spec(s: P) -> P:
+    return P(None, *tuple(s))
+
+
+def init_lm(key, cfg: LMConfig) -> Tuple[dict, dict]:
+    ke, kl, kp, kf = jax.random.split(key, 4)
+    emb_p, emb_s = init_embed(ke, cfg.vocab, cfg.d_model, cfg.param_dtype)
+    n_prefix = cfg.first_k_dense if cfg.moe else 0
+    n_stack = cfg.n_layers - n_prefix
+
+    layer_keys = jax.random.split(kl, n_stack)
+    spec_box = {}
+
+    def initp(k):
+        p, s = _init_layer(k, cfg)
+        spec_box["s"] = s          # specs are static; captured at trace time
+        return p
+
+    stacked_p = jax.vmap(initp)(layer_keys)
+    stacked_s = jax.tree.map(
+        _stack_spec, spec_box["s"], is_leaf=lambda x: isinstance(x, P)
+    )
+
+    fn_p, fn_s = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    params = {"embed": emb_p, "layers": stacked_p, "final_norm": fn_p}
+    specs = {"embed": emb_s, "layers": stacked_s, "final_norm": fn_s}
+
+    if n_prefix > 0:
+        pre_keys = jax.random.split(kp, n_prefix)
+        pre = [_init_layer(k, cfg, dense_override=True) for k in pre_keys]
+        params["prefix"] = [p for p, _ in pre]
+        specs["prefix"] = [s for _, s in pre]
+
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kf, (cfg.d_model, cfg.vocab), cfg.param_dtype)
+        specs["lm_head"] = P(None, "model")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _sp_gather(xn, cfg: LMConfig):
+    """Megatron-SP: all-gather the seq-sharded activations at layer entry so
+    the projections run with weights stationary (TP-sharded).  Without this
+    GSPMD kept x seq-sharded and all-gathered FULL f32 weights at every dot
+    (28 TB/step on llama3-405b train_4k — §Perf iteration 2)."""
+    if cfg.seq_shard:
+        return constrain(xn, P(tuple(cfg.batch_axes), None, None))
+    return xn
+
+
+def _attn_block_train(lp, x, cfg: LMConfig, positions):
+    """Returns (attn_out, (k, v) or (ckv, kpe) latents for cache fill)."""
+    xn = _sp_gather(rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg)
+    if cfg.mla:
+        out, ckv, kpe = mla_train(lp["attn"], xn, cfg, positions)
+        return out, (ckv, kpe)
+    q, k, v = gqa_qkv(lp["attn"], xn, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return gqa_out(lp["attn"], o), (k, v)
+
+
+def _ffn_block(lp, x, cfg: LMConfig, *, is_moe: bool):
+    xn = _sp_gather(rmsnorm(lp["ln2"], x, cfg.norm_eps), cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        out, aux = moe_ffn(lp["moe"], xn, cfg)
+        if cfg.n_shared_experts > 0:
+            out = out + swiglu(lp["shared"], xn)
+        if cfg.residual_dense:
+            out = out + swiglu(lp["mlp"], xn)
+    else:
+        out = swiglu(lp["mlp"], xn)
+    return out, aux
+
+
+def _layer_train(lp, x, cfg: LMConfig, positions, *, is_moe: bool):
+    a, _ = _attn_block_train(lp, x, cfg, positions)
+    x = x + a
+    f, aux = _ffn_block(lp, x, cfg, is_moe=is_moe)
+    return x + f, aux
+
+
+def _remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens: jax.Array, cfg: LMConfig,
+            return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V) f32, aux_loss scalar); with
+    ``return_hidden`` returns the final-norm hidden states instead."""
+    b, s = tokens.shape
+    ba = tuple(cfg.batch_axes)
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    x = constrain(x, cfg.act_spec)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    aux0 = jnp.zeros((), jnp.float32)
+    for lp in params.get("prefix", []):            # dense prefix (aux = 0)
+        x, _ = _layer_train(lp, x, cfg, positions, is_moe=False)
+
+    body = _remat(
+        lambda x, lp: _layer_train(lp, x, cfg, positions, is_moe=cfg.moe), cfg
+    )
+
+    def scan_fn(carry, lp):
+        x, aux = carry
+        x, a = body(x, lp)
+        x = constrain(x, cfg.act_spec)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, aux0), params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return constrain(x, P(ba, None, None)), aux
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    logits = constrain(logits, P(ba, None, "model"))
+    return logits, aux
+
+
+def loss_fn(params, batch: dict, cfg: LMConfig) -> Tuple[jax.Array, dict]:
+    """Next-token cross entropy (mean over tokens) + MoE aux loss.
+
+    With ``cfg.loss_chunk`` the unembed+softmax runs in sequence chunks under
+    remat, so the (B, S, V) f32 logits block never materializes (16.8 GB/dev
+    on llama3 at microbatch 2 — §Perf)."""
+    labels = batch["labels"]
+    if not cfg.loss_chunk:
+        logits, aux = forward(params, batch["tokens"], cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        total = loss + cfg.moe_aux_coef * aux
+        return total, {"loss": loss, "aux": aux, "total": total}
+
+    x, aux = forward(params, batch["tokens"], cfg, return_hidden=True)
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    c = cfg.loss_chunk
+    b, sl = labels.shape
+    nchunk = (sl + c - 1) // c
+    pad = nchunk * c - sl
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xs = x.reshape(b, nchunk, c, -1).swapaxes(0, 1)
+    ls = labels.reshape(b, nchunk, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(xc, lc):
+        logits = xc.astype(jnp.float32) @ head.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        return jnp.sum(jnp.where(lc >= 0, nll, 0.0))
+
+    def body(acc, xs_ls):
+        return acc + chunk_nll(*xs_ls), None
+
+    total_nll, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    loss = total_nll / (b * sl)
+    total = loss + cfg.moe_aux_coef * aux
+    return total, {"loss": loss, "aux": aux, "total": total}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cache, tokens: jax.Array, cfg: LMConfig):
+    """One decode step: tokens (B, 1) -> (logits (B, V), updated cache)."""
+    b = tokens.shape[0]
+    ba = tuple(cfg.batch_axes)
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    lengths = cache.length                                  # (B,) filled so far
+    positions = lengths[:, None]
+
+    n_prefix = len(params.get("prefix", []))
+
+    # The scan returns only the (B, 1, ...) new-token slices per layer; the
+    # cache merge happens ONCE over the whole stack afterwards.  (Merging
+    # inside the scan made XLA rewrite + dtype-convert the entire L-stack
+    # every layer: 175 GB/step on deepseek decode_32k — §Perf iteration 2.)
+    if cfg.mla:
+        def body(x, xs, is_moe):
+            lp, ckv_l, kpe_l = xs
+            xn = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            from .mla import _mla_ckv  # latent for the new token
+            ckv_new, kpe_new = _mla_ckv(lp["attn"], xn, cfg, positions)
+            ckv_m = kvc.cache_update_layer(ckv_l, ckv_new, lengths)
+            kpe_m = kvc.cache_update_layer(kpe_l, kpe_new, lengths)
+            a = mla_decode(lp["attn"], xn, cfg, ckv_m, kpe_m, lengths + 1)
+            x = x + a
+            f, _ = _ffn_block(lp, x, cfg, is_moe=is_moe)
+            return x + f, (ckv_new, kpe_new)
+
+        news = []
+        for i in range(n_prefix):
+            x, nw = body(x, (params["prefix"][i], cache.ckv[i], cache.kpe[i]), False)
+            news.append(nw)
+
+        def scan_fn(x, xs):
+            x, nw = body(x, xs, cfg.moe)
+            x = constrain(x, P(ba, None, None))
+            return x, nw
+
+        x, (ckv_t, kpe_t) = jax.lax.scan(
+            scan_fn, x, (params["layers"], cache.ckv[n_prefix:], cache.kpe[n_prefix:])
+        )
+        if n_prefix:
+            ckv_t = jnp.concatenate([jnp.stack([n[0] for n in news]), ckv_t], 0)
+            kpe_t = jnp.concatenate([jnp.stack([n[1] for n in news]), kpe_t], 0)
+        new_cache = kvc.MLACache(
+            ckv=kvc.cache_update_stack(cache.ckv, ckv_t, lengths),
+            kpe=kvc.cache_update_stack(cache.kpe, kpe_t, lengths),
+            length=lengths + 1,
+        )
+    else:
+        def body(x, xs, is_moe):
+            lp, k_l, v_l = xs
+            xn = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            q, k, v = gqa_qkv(lp["attn"], xn, cfg)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            k_m = kvc.cache_update_layer(k_l, k, lengths)
+            v_m = kvc.cache_update_layer(v_l, v, lengths)
+            a = attention(
+                q, k_m, v_m, causal=False, kv_len=lengths + 1,
+                softmax_scale=cfg.head_dim ** -0.5,
+            )
+            x = x + gqa_out(lp["attn"], a)
+            f, _ = _ffn_block(lp, x, cfg, is_moe=is_moe)
+            return x + f, (k, v)
+
+        news = []
+        for i in range(n_prefix):
+            x, nw = body(x, (params["prefix"][i], cache.k[i], cache.v[i]), False)
+            news.append(nw)
+
+        def scan_fn(x, xs):
+            x, nw = body(x, xs, cfg.moe)
+            x = constrain(x, P(ba, None, None))
+            return x, nw
+
+        x, (k_t, v_t) = jax.lax.scan(
+            scan_fn, x, (params["layers"], cache.k[n_prefix:], cache.v[n_prefix:])
+        )
+        if n_prefix:
+            k_t = jnp.concatenate([jnp.stack([n[0] for n in news]), k_t], 0)
+            v_t = jnp.concatenate([jnp.stack([n[1] for n in news]), v_t], 0)
+        new_cache = kvc.GQACache(
+            k=kvc.cache_update_stack(cache.k, k_t, lengths),
+            v=kvc.cache_update_stack(cache.v, v_t, lengths),
+            length=lengths + 1,
+        )
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, tokens: jax.Array, cfg: LMConfig, max_len: int):
+    """Run the prompt through the model, returning (last_logits, filled cache).
+
+    The cache is written with the per-layer K/V (or MLA latents) produced
+    during the forward pass.
+    """
+    b, s = tokens.shape
+    ba = tuple(cfg.batch_axes)
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    x = constrain(x, cfg.act_spec)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    n_prefix = len(params.get("prefix", []))
+
+    def pad_t(arr):  # (B, S, ...) -> (B, max_len, ...) zero-padded
+        pad = [(0, 0), (0, max_len - s)] + [(0, 0)] * (arr.ndim - 2)
+        return jnp.pad(arr, pad)
+
+    def layer_apply(x, lp, is_moe):
+        a, kv = _attn_block_train(lp, x, cfg, positions)
+        x = x + a
+        f, aux = _ffn_block(lp, x, cfg, is_moe=is_moe)
+        return x + f, kv
+
+    prefix_kv = []
+    for i in range(n_prefix):
+        x, kv = layer_apply(x, params["prefix"][i], False)
+        prefix_kv.append(kv)
+
+    def scan_fn(x, lp):
+        x, kv = layer_apply(x, lp, cfg.moe)
+        x = constrain(x, cfg.act_spec)
+        return x, kv
+
+    x, stacked_kv = jax.lax.scan(scan_fn, x, params["layers"])
+
+    if cfg.mla:
+        ckv_s, kpe_s = stacked_kv                     # (Ls, B, S, *)
+        if n_prefix:
+            pc = jnp.stack([kv[0] for kv in prefix_kv])
+            pp = jnp.stack([kv[1] for kv in prefix_kv])
+            ckv_s = jnp.concatenate([pc, ckv_s], 0)
+            kpe_s = jnp.concatenate([pp, kpe_s], 0)
+        cache = kvc.MLACache(
+            ckv=jax.vmap(pad_t)(ckv_s),
+            kpe=jax.vmap(pad_t)(kpe_s),
+            length=jnp.full((b,), s, jnp.int32),
+        )
+    else:
+        k_s, v_s = stacked_kv
+        if n_prefix:
+            pk = jnp.stack([kv[0] for kv in prefix_kv])
+            pv = jnp.stack([kv[1] for kv in prefix_kv])
+            k_s = jnp.concatenate([pk, k_s], 0)
+            v_s = jnp.concatenate([pv, v_s], 0)
+        cache = kvc.GQACache(
+            k=jax.vmap(pad_t)(k_s),
+            v=jax.vmap(pad_t)(v_s),
+            length=jnp.full((b,), s, jnp.int32),
+        )
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x[:, -1:])
+    else:
+        logits = x[:, -1:].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits[:, 0], cache

@@ -1,0 +1,23 @@
+"""Optimizers, schedules, clipping, and gradient compression."""
+
+from .compression import (
+    compressed_psum,
+    dequantize_int8,
+    init_error_state,
+    quantize_int8,
+)
+from .optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    sgd,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "clip_by_global_norm", "make_optimizer",
+    "sgd", "warmup_cosine", "compressed_psum", "dequantize_int8",
+    "init_error_state", "quantize_int8",
+]

@@ -1,0 +1,182 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes / HBM_bw               (per chip)
+    collective = collective_bytes / link_bw       (per chip)
+
+``cost_analysis()`` of an SPMD-partitioned executable reports the per-device
+module, so the terms divide by per-chip rates directly.  collective_bytes is
+not in cost_analysis — we parse the optimized HLO and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (result bytes ~= wire bytes for rings; a one-hop lower
+bound for permutes).
+
+TPU v5e constants per the instruction sheet: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Min-plus APSP runs on the VPU ((min,+) has no MXU MAC),
+so APSP cells use the VPU rate: 8x128 lanes x 2 ops x ~940 MHz ~ 3.9 Tops/s
+fp32 — recorded separately so the reported fraction is honest.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "analyze_compiled"]
+
+
+class HW:
+    PEAK_FLOPS_BF16 = 197e12       # per chip
+    PEAK_FLOPS_VPU = 3.9e12        # fp32 vector ops (min-plus path)
+    HBM_BW = 819e9                 # bytes/s per chip
+    ICI_BW = 50e9                  # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind from optimized HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # "%x = f32[..]{..} all-reduce(...)" or "x = (f32[..], ..) all-to-all(..)"
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        # strip -start/-done suffixes (async collectives)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLL_OPS:
+            if op.endswith("-done"):
+                continue                       # counted at -start
+            out[base] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    name: str
+    flops: float                   # per-device HLO flops
+    bytes_accessed: float          # per-device HLO bytes
+    coll_bytes: Dict[str, int]
+    model_flops: float             # analytical reference (global)
+    n_chips: int
+    peak_flops: float = HW.PEAK_FLOPS_BF16
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def coll_total(self) -> int:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HW.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_total / HW.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops aggregated over chips)."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful work time / achievable step time (max of the three terms)."""
+        t_star = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful = (self.model_flops / self.n_chips) / self.peak_flops
+        return t_useful / t_star if t_star else 0.0
+
+    def row(self) -> dict:
+        return {
+            "cell": self.name,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops_per_chip": self.flops / 1e9,
+            "hbm_gb_per_chip": self.bytes_accessed / 1e9,
+            "coll_gb_per_chip": self.coll_total / 1e9,
+            "model_gflops_global": self.model_flops / 1e9,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            **self.extra,
+        }
+
+
+def analyze_compiled(
+    name: str,
+    compiled,
+    hlo_text: str,
+    model_flops: float,
+    n_chips: int,
+    *,
+    peak_flops: Optional[float] = None,
+) -> RooflineReport:
+    """Terms from the trip-count-aware HLO parse (``hlo_cost``); the naive
+    cost_analysis() numbers are kept in ``extra`` as the (loop-body-once)
+    lower bound for cross-checking."""
+    from .hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(hlo_text)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    naive_flops = float(ca.get("flops", 0.0))
+    naive_bytes = float(ca.get("bytes accessed", 0.0))
+    return RooflineReport(
+        name=name,
+        flops=hc.flops,
+        bytes_accessed=hc.hbm_bytes,
+        coll_bytes=dict(hc.coll_bytes),
+        model_flops=model_flops,
+        n_chips=n_chips,
+        peak_flops=peak_flops or HW.PEAK_FLOPS_BF16,
+        extra={
+            "dot_flops": hc.dot_flops,
+            "elem_ops": hc.elem_ops,
+            "naive_cost_analysis_flops": naive_flops,
+            "naive_cost_analysis_bytes": naive_bytes,
+            "dynamic_whiles": hc.dynamic_whiles,
+        },
+    )

@@ -1,0 +1,347 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified in
+EXPERIMENTS.md §Methodology: a 10-step scan reports 1/10th the flops of the
+unrolled loop).  Every production model here scans over layers / pivots /
+panels, so naive cost_analysis under-reports by the trip count.  XLA however
+annotates each ``while`` with ``backend_config={"known_trip_count":{"n":N}}``
+— this module parses the computation graph, propagates multipliers
+(ENTRY=1; while body/cond x= trip count; fusion/call/conditional inherit),
+and accumulates:
+
+  * dot flops        2 x result_elems x contracted_size (exact per dot)
+  * elementwise ops  result_elems per arithmetic op (the VPU count that
+                     prices min-plus APSP, which has no dots at all)
+  * HBM bytes        at fusion granularity: for every op in a non-fusion
+                     computation, result bytes + operand bytes (fusion
+                     internals excluded — fusion boundaries are where HBM
+                     traffic happens)
+  * collective bytes result-shape bytes per all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+                     scaled by the enclosing loops' trip counts
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HLOCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute", "ragged-all-to-all")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "minimum", "maximum", "abs",
+    "negate", "exponential", "log", "rsqrt", "sqrt", "power", "tanh",
+    "logistic", "sine", "cosine", "floor", "ceil", "round-nearest-even",
+    "select", "compare", "and", "or", "xor", "not", "clamp",
+    "exponential-minus-one", "log-plus-one", "cbrt", "remainder", "atan2",
+}
+
+_SHAPE_ONE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP = re.compile(r'known_trip_count[\\"={:\s]+n[\\"\s:]+(\d+)')
+_CALLED = re.compile(r"(?:body|calls|condition|to_apply|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over possibly-tuple shape strings."""
+    elems = byts = 0
+    for dtype, dims in _SHAPE_ONE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+@dataclass
+class _Op:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str
+    operands: List[str]
+
+
+@dataclass
+class _Comp:
+    name: str
+    is_entry: bool = False
+    ops: List[_Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def _parse_operands(rest: str) -> List[str]:
+    """Operand names from 'a, %b.2, f32[8]{0} %c(...' up to closing paren."""
+    depth = 1
+    out = []
+    cur = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth == 1 and ch == ",":
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for tok in out:
+        m = re.search(r"%?([\w.\-]+)\s*$", tok.strip())
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def _parse_module(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = _COMMENT.sub("", raw).rstrip()   # strip /*index=N*/ comments
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = _Comp(m.group(1), is_entry=line.lstrip().startswith("ENTRY"))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode, rest = m.groups()
+        op = _Op(name, shape_str.strip(), opcode, rest, _parse_operands(rest))
+        cur.ops.append(op)
+        cur.shapes[name] = op.shape_str
+    return comps
+
+
+def _dot_flops(op: _Op, comp: "_Comp") -> float:
+    res_elems, _ = _shape_elems_bytes(op.shape_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    lhs_shape = None
+    if op.operands and op.operands[0] in comp.shapes:
+        found = _SHAPE_ONE.findall(comp.shapes[op.operands[0]])
+        if found:
+            lhs_shape = found[0]
+    if m and lhs_shape:
+        dims = [int(d) for d in lhs_shape[1].split(",")] if lhs_shape[1] else []
+        contract = 1
+        for i in (int(x) for x in m.group(1).split(",") if x):
+            if i < len(dims):
+                contract *= dims[i]
+        return 2.0 * res_elems * contract
+    return 2.0 * res_elems  # conservative fallback
+
+
+def _fusion_body(op: _Op, comps: Dict[str, _Comp]) -> Optional[_Comp]:
+    m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    return comps.get(m.group(1)) if m else None
+
+
+def _dus_update_bytes(op: _Op, comp: _Comp, comps: Dict[str, _Comp]) -> Optional[int]:
+    """Bytes actually written by a dynamic-update-slice (the update operand),
+    or None if the op is not a DUS / DUS-carrying fusion.  XLA aliases the
+    untouched region, so a scan writing per-iteration slices into a stacked
+    buffer costs update-sized, not buffer-sized, HBM traffic."""
+    if op.opcode == "dynamic-update-slice":
+        if len(op.operands) >= 2 and op.operands[1] in comp.shapes:
+            return _shape_elems_bytes(comp.shapes[op.operands[1]])[1]
+        return None
+    if op.opcode == "fusion":
+        body = _fusion_body(op, comps)
+        if body:
+            for b in body.ops:
+                if (b.opcode == "dynamic-update-slice"
+                        and b.shape_str == op.shape_str
+                        and len(b.operands) >= 2
+                        and b.operands[1] in body.shapes):
+                    return _shape_elems_bytes(body.shapes[b.operands[1]])[1]
+    return None
+
+
+def _fusion_param_read_bytes(op: _Op, comps: Dict[str, _Comp], operand_idx: int,
+                             full_bytes: int) -> int:
+    """Bytes a fusion actually reads from operand ``operand_idx``: if every
+    in-body consumer of that parameter is a (dynamic-)slice or gather, charge
+    the slice/gather results instead of the whole buffer (a scan body
+    dynamic-slicing one layer's weights from the stacked carry reads 1/L of
+    it per iteration, not all of it)."""
+    body = _fusion_body(op, comps)
+    if body is None:
+        return full_bytes
+    pname = None
+    for b in body.ops:
+        if b.opcode == "parameter" and b.rest.startswith(f"{operand_idx})"):
+            pname = b.name
+            break
+    if pname is None:
+        return full_bytes
+    consumers = [b for b in body.ops if pname in b.operands]
+    if not consumers:
+        return 0
+    if all(b.opcode in ("dynamic-slice", "slice", "gather") for b in consumers):
+        return sum(_shape_elems_bytes(b.shape_str)[1] for b in consumers)
+    return full_bytes
+
+
+@dataclass
+class HLOCost:
+    dot_flops: float = 0.0
+    elem_ops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    dynamic_whiles: int = 0
+
+    @property
+    def flops(self) -> float:
+        return self.dot_flops + self.elem_ops
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze_hlo(text: str) -> HLOCost:
+    comps = _parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HLOCost()
+
+    cost = HLOCost()
+    mults: Dict[str, float] = defaultdict(float)
+    fusion_comps = set()
+    # discover fusion-called computations (bytes: internals excluded)
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                m = _CALLED.search(op.rest)
+                if m:
+                    for callee in re.split(r",\s*", m.group(1)):
+                        fusion_comps.add(callee.strip().lstrip("%"))
+
+    def visit(comp_name: str, mult: float, in_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None or mult <= 0:
+            return
+        mults[comp_name] += mult
+        # names whose producers don't materialize anything themselves:
+        # computation inputs (parameters), loop-carry unpacking, constants.
+        passthrough = set()
+        for op in comp.ops:
+            if op.opcode in ("parameter", "get-tuple-element", "constant",
+                             "bitcast", "tuple", "iota"):
+                passthrough.add(op.name)
+        comp._passthrough = passthrough
+        for op in comp.ops:
+            _account(comp, op, mult, in_fusion)
+            # recurse into called computations
+            trip = 1.0
+            if op.opcode == "while":
+                t = _TRIP.search(op.rest)
+                if t:
+                    trip = float(t.group(1))
+                else:
+                    cost.dynamic_whiles += 1
+                m = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if m:
+                    visit(m.group(1), mult * trip, in_fusion)
+                # condition cost negligible; skip
+            elif op.opcode in ("fusion",):
+                m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if m:
+                    visit(m.group(1), mult, True)
+            elif op.opcode in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|called_computation)=%?([\w.\-]+)", op.rest)
+                if m:
+                    visit(m.group(1), mult, in_fusion)
+            elif op.opcode == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+                if m:
+                    for br in m.group(1).split(","):
+                        visit(br.strip().lstrip("%"), mult, in_fusion)
+
+    def _account(comp: _Comp, op: _Op, mult: float, in_fusion: bool):
+        oc = op.opcode
+        base = oc.replace("-start", "").replace("-done", "")
+        if base in _COLL_OPS:
+            if oc.endswith("-done"):
+                return
+            _, b = _shape_elems_bytes(op.shape_str)
+            cost.coll_bytes[base] += b * mult
+            cost.hbm_bytes += 2 * b * mult          # read + write at the NIC
+            return
+        if oc == "dot":
+            cost.dot_flops += _dot_flops(op, comp) * mult
+        elif oc in ("convolution",):
+            res, _ = _shape_elems_bytes(op.shape_str)
+            cost.dot_flops += 2.0 * res * mult       # lower bound
+        elif oc in _ELEMENTWISE:
+            res, _ = _shape_elems_bytes(op.shape_str)
+            cost.elem_ops += res * mult
+        elif oc in ("reduce", "reduce-window"):
+            # flops ~ input elements
+            if op.operands and op.operands[0] in comp.shapes:
+                res, _ = _shape_elems_bytes(comp.shapes[op.operands[0]])
+            else:
+                res, _ = _shape_elems_bytes(op.shape_str)
+            cost.elem_ops += res * mult
+
+        # HBM bytes at fusion granularity: ops inside fusion comps excluded.
+        # Model: each computed tensor is written once and read once by its
+        # consumer (result_bytes x 2); additionally, reads of raw inputs
+        # (parameters / loop-carried weights, reached via passthrough ops)
+        # are charged at each consuming op — that is what counts the per-
+        # step weight traffic inside scanned layer bodies.
+        if in_fusion:
+            return
+        if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "while", "conditional", "call", "after-all",
+                  "partition-id", "replica-id", "iota", "copy-start",
+                  "copy-done"):
+            return
+        _, rb = _shape_elems_bytes(op.shape_str)
+        # in-place updates: a (fused) dynamic-update-slice writes only the
+        # update slice, not the whole buffer (XLA aliases the rest)
+        upd = _dus_update_bytes(op, comp, comps)
+        if upd is not None:
+            rb = upd
+        ob = 0
+        for i, o in enumerate(op.operands):
+            if o in getattr(comp, "_passthrough", ()) and o in comp.shapes:
+                _, b = _shape_elems_bytes(comp.shapes[o])
+                if oc == "fusion":
+                    b = _fusion_param_read_bytes(op, comps, i, b)
+                elif oc in ("dynamic-slice", "slice", "gather") and i == 0:
+                    b = min(b, _shape_elems_bytes(op.shape_str)[1])
+                ob += b
+        cost.hbm_bytes += (2 * rb + ob) * mult
+
+    visit(entry.name, 1.0, False)
+    return cost

@@ -1,0 +1,37 @@
+"""Sharding helpers: spec trees -> NamedSharding trees, mesh-aware axes."""
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["batch_axes_for", "make_shardings", "filter_spec_for_mesh"]
+
+
+def batch_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch shards over the pod axis too when it exists (multi-pod)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def filter_spec_for_mesh(spec: P, mesh: Mesh) -> P:
+    """Drop axis names the mesh does not have (lets one spec tree serve both
+    the single-pod and multi-pod meshes)."""
+    out = []
+    for e in tuple(spec):
+        if e is None:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a in mesh.axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(e if e in mesh.axis_names else None)
+    return P(*out)
+
+
+def make_shardings(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (mesh-filtered)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec_for_mesh(s, mesh)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,15 @@
+from .steps import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    make_compressed_train_step,
+    train_state_specs,
+)
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_compressed_train_step",
+    "train_state_specs",
+]

@@ -1,0 +1,18 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real (1-CPU)
+device; multi-device tests spawn subprocesses that set the flag themselves."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def np_floyd_warshall(h: np.ndarray) -> np.ndarray:
+    """The textbook oracle every solver is checked against."""
+    d = h.copy()
+    for k in range(d.shape[0]):
+        d = np.minimum(d, d[:, k][:, None] + d[k, :][None, :])
+    return d

@@ -1,0 +1,99 @@
+"""Every APSP solver vs the textbook oracle, with predecessor validation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import np_floyd_warshall
+from repro.core import generate_np, reconstruct_path, solve, validate_tree
+from repro.core.floyd_warshall import fw_squaring_early_exit
+from repro.core.paths import path_cost, reconstruct_path_jit
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+METHOD_KW = {
+    "squaring": {},
+    "squaring_3d": {},
+    "classic": {},
+    "blocked_fw": {"block_size": 16},
+    "rkleene": {"base": 8},
+}
+
+
+@pytest.mark.parametrize("method", sorted(METHOD_KW))
+def test_method_matches_oracle(method, rng):
+    for _ in range(3):
+        n = int(rng.integers(4, 70))
+        g = generate_np(rng, n)
+        ref = np_floyd_warshall(g.h)
+        r = solve(g.h, method=method, **METHOD_KW[method])
+        assert np.allclose(np.asarray(r.dist), ref, equal_nan=True), method
+
+
+@pytest.mark.parametrize("method", sorted(METHOD_KW))
+def test_predecessors_witness_distances(method, rng):
+    n = 40
+    g = generate_np(rng, n)
+    r = solve(g.h, method=method, with_pred=True, **METHOD_KW[method])
+    d, p = np.asarray(r.dist), np.asarray(r.pred)
+    assert validate_tree(g.h, d, p), method
+    # explicit path reconstruction reproduces the distance
+    fin = np.argwhere(np.isfinite(d) & (d > 0))
+    for idx in fin[:: max(len(fin) // 10, 1)]:
+        i, j = map(int, idx)
+        path = reconstruct_path(p, i, j)
+        assert path is not None
+        assert abs(path_cost(g.h, path) - d[i, j]) < 1e-4
+
+
+@given(st.integers(4, 64), st.integers(0, 10_000))
+def test_squaring_equals_classic(n, seed):
+    rng = np.random.default_rng(seed)
+    g = generate_np(rng, n)
+    a = solve(g.h, method="squaring").dist
+    b = solve(g.h, method="classic").dist
+    assert np.allclose(np.asarray(a), np.asarray(b), equal_nan=True)
+
+
+@given(st.integers(4, 48), st.integers(0, 10_000))
+def test_triangle_inequality(n, seed):
+    """Closure property: d[i,j] <= d[i,k] + d[k,j] for all triples."""
+    rng = np.random.default_rng(seed)
+    g = generate_np(rng, n)
+    d = np.asarray(solve(g.h, method="blocked_fw", block_size=16).dist)
+    via = (d[:, :, None] + d[None, :, :]).min(axis=1)   # best 1-stop relay
+    finite = np.isfinite(via)
+    assert np.all(d[finite] <= via[finite] + 1e-4)
+    assert np.all(np.isinf(d[~finite]) | np.isfinite(d[~finite]))
+
+
+@given(st.integers(4, 32), st.integers(0, 10_000))
+def test_permutation_equivariance(n, seed):
+    """Relabeling nodes permutes the distance matrix accordingly."""
+    rng = np.random.default_rng(seed)
+    g = generate_np(rng, n)
+    perm = rng.permutation(n)
+    d1 = np.asarray(solve(g.h, method="squaring").dist)
+    d2 = np.asarray(solve(g.h[np.ix_(perm, perm)], method="squaring").dist)
+    assert np.allclose(d1[np.ix_(perm, perm)], d2, equal_nan=True)
+
+
+def test_early_exit_variant(rng):
+    g = generate_np(rng, 33)
+    d, iters = fw_squaring_early_exit(jnp.asarray(g.h))
+    assert np.allclose(np.asarray(d), np_floyd_warshall(g.h), equal_nan=True)
+    assert 1 <= int(iters) <= int(np.ceil(np.log2(33))) + 1
+
+
+def test_jit_path_reconstruction(rng):
+    g = generate_np(rng, 24)
+    r = solve(g.h, method="classic", with_pred=True)
+    d, p = np.asarray(r.dist), np.asarray(r.pred)
+    fin = np.argwhere(np.isfinite(d) & (d > 0))
+    i, j = map(int, fin[len(fin) // 2])
+    path, length = reconstruct_path_jit(jnp.asarray(r.pred), i, j, max_len=24)
+    host = reconstruct_path(p, i, j)
+    assert int(length) == len(host)
+    assert np.asarray(path)[: int(length)].tolist() == host

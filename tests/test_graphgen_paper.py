@@ -1,0 +1,47 @@
+"""The paper's random graph generator: §3.4 invariants + Fig 9 statistics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphgen import generate_np, graph_stats, paper_corpus
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(4, 80), st.floats(0, 100), st.integers(0, 10_000))
+def test_generator_invariants(n, rho, seed):
+    g = generate_np(np.random.default_rng(seed), n, rho=rho)
+    h = g.h
+    assert h.shape == (n, n)
+    assert np.all(np.diag(h) == 0)                       # zero-cost self loops
+    off = ~np.eye(n, dtype=bool)
+    finite = np.isfinite(h[off])
+    vals = h[off][finite]
+    assert np.all(vals >= 1) and np.all(vals <= g.alpha)  # "no zero-cost edges"
+    assert g.n_edges == int(g.adjacency.sum())
+    assert not g.adjacency.diagonal().any()
+
+
+def test_density_increases_with_rho():
+    rng = np.random.default_rng(0)
+    d_lo = np.mean([generate_np(rng, 60, rho=5.0).density for _ in range(5)])
+    d_hi = np.mean([generate_np(rng, 60, rho=95.0).density for _ in range(5)])
+    assert d_hi > d_lo * 2
+
+
+def test_paper_corpus_matches_methodology():
+    """1000 graphs, V~U[4,1000], rho~U[0,100], alpha=100, edge-sorted (Fig 9).
+
+    Scaled to 60 graphs x V<=200 for the CI budget; the benchmark harness
+    runs the full corpus."""
+    gs = paper_corpus(seed=1, n_graphs=60, v_min=4, v_max=200)
+    assert len(gs) == 60
+    edges = [g.n_edges for g in gs]
+    assert edges == sorted(edges)                          # paper §4 ordering
+    sizes = [g.n_nodes for g in gs]
+    assert min(sizes) >= 4 and max(sizes) <= 200
+    st_ = graph_stats(gs)
+    assert np.all(st_["density"] >= 0) and np.all(st_["density"] <= 1.0)
+    # rho sweep should produce the full density range (Fig 9b shape)
+    assert st_["density"].max() > 0.3 and st_["density"].min() < 0.1

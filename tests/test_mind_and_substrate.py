@@ -1,0 +1,212 @@
+"""MIND model, EmbeddingBag, optimizers, compression, checkpointing."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_onto_mesh,
+    save_checkpoint,
+)
+from repro.models.mind import (
+    MINDConfig,
+    embedding_bag,
+    init_mind,
+    mind_loss,
+    retrieval_scores,
+    user_interests,
+)
+from repro.optim import (
+    clip_by_global_norm,
+    dequantize_int8,
+    make_optimizer,
+    quantize_int8,
+    warmup_cosine,
+)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# --- MIND -------------------------------------------------------------------
+
+def _mind_batch(rng, cfg, B):
+    return dict(
+        hist_ids=jnp.asarray(rng.integers(0, cfg.n_items, (B, cfg.hist_len))),
+        hist_mask=jnp.asarray(rng.uniform(size=(B, cfg.hist_len)) < 0.8),
+        profile_ids=jnp.asarray(rng.integers(0, cfg.n_profile_feats,
+                                             (B, cfg.profile_bag_len))),
+        profile_mask=jnp.ones((B, cfg.profile_bag_len), bool),
+        routing_logits_init=jnp.asarray(
+            rng.normal(size=(B, cfg.n_interests, cfg.hist_len)), jnp.float32),
+        target_id=jnp.asarray(rng.integers(0, cfg.n_items, (B,))),
+        neg_ids=jnp.asarray(rng.integers(0, cfg.n_items, (B, cfg.n_negatives))),
+    )
+
+
+@pytest.fixture(scope="module")
+def mind():
+    cfg = MINDConfig(name="m", n_items=512, embed_dim=16, hist_len=10,
+                     n_profile_feats=64, profile_bag_len=4, n_negatives=15)
+    params, specs = init_mind(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_mind_loss_and_grads(mind, rng):
+    cfg, params = mind
+    batch = _mind_batch(rng, cfg, 8)
+    loss, aux = mind_loss(params, batch, cfg)
+    g = jax.grad(lambda p: mind_loss(p, batch, cfg)[0])(params)
+    gn = jax.tree.reduce(lambda a, b: a + b,
+                         jax.tree.map(lambda x: float(jnp.sum(x * x)), g))
+    assert np.isfinite(float(loss)) and gn > 0
+
+
+def test_mind_interest_capsules_shape_and_norm(mind, rng):
+    cfg, params = mind
+    caps = user_interests(params, _mind_batch(rng, cfg, 4), cfg)
+    assert caps.shape == (4, cfg.n_interests, cfg.embed_dim)
+    assert not bool(jnp.any(jnp.isnan(caps)))
+
+
+def test_mind_retrieval_topk_sorted(mind, rng):
+    cfg, params = mind
+    b = {k: v[:1] for k, v in _mind_batch(rng, cfg, 2).items()}
+    b["cand_ids"] = jnp.arange(cfg.n_items, dtype=jnp.int32)
+    vals, ids = retrieval_scores(params, b, cfg, top_k=16)
+    assert bool(jnp.all(vals[:-1] >= vals[1:]))
+    assert len(set(np.asarray(ids).tolist())) == 16
+
+
+def test_embedding_bag_oracle(rng):
+    tbl = jnp.asarray(rng.normal(size=(20, 4)), jnp.float32)
+    ids = jnp.asarray([[1, 2, 3], [4, 4, 0], [7, 0, 0]])
+    mask = jnp.asarray([[1, 1, 0], [1, 0, 0], [0, 0, 0]], bool)
+    out = embedding_bag(tbl, ids, mask, mode="mean")
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray((tbl[1] + tbl[2]) / 2),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(tbl[4]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[2]), 0.0, atol=1e-7)  # empty bag
+    s = embedding_bag(tbl, ids, mask, mode="sum")
+    np.testing.assert_allclose(np.asarray(s[0]), np.asarray(tbl[1] + tbl[2]),
+                               rtol=1e-6)
+
+
+# --- optimizers --------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor", "sgd"])
+def test_optimizer_reduces_quadratic(kind):
+    opt = make_optimizer(kind, lambda s: 0.1)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(60):
+        grads = {"w": 2 * params["w"]}
+        upd, state = opt.update(grads, state, params, step + i)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(jnp.sum(params["w"] ** 2)) < 0.3
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer("adafactor", lambda s: 1e-2)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    st_ = opt.init(params)
+    assert st_["w"]["vr"].shape == (64,)
+    assert st_["w"]["vc"].shape == (32,)
+    assert st_["b"]["v"].shape == (32,)
+    from jax.sharding import PartitionSpec as P
+
+    specs = opt.state_specs({"w": P("data", "model"), "b": P(None)})
+    assert tuple(specs["w"]["vr"]) == ("data",)
+    assert tuple(specs["w"]["vc"]) == ("model",)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - np.sqrt(10 * 9 + 10 * 16)) < 1e-4
+    _, n2 = clip_by_global_norm(clipped, 1e9)
+    assert abs(float(n2) - 1.0) < 1e-5
+
+
+@given(st.integers(0, 10_000))
+def test_int8_quantization_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x)).max()
+    assert err <= float(scale) * 0.5 + 1e-7
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of (transmitted + residual) == original gradient exactly."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    q, scale = quantize_int8(g + err)
+    sent = dequantize_int8(q, scale)
+    new_err = (g + err) - sent
+    np.testing.assert_allclose(np.asarray(sent + new_err), np.asarray(g),
+                               rtol=1e-6)
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+        "opt": {"mu": jnp.ones((3, 4)), "step": jnp.asarray(7)},
+    }
+
+
+def test_checkpoint_roundtrip_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        s = _state()
+        save_checkpoint(d, 3, s, extra={"data_step": 3})
+        save_checkpoint(d, 9, jax.tree.map(lambda x: x + 1, s),
+                        extra={"data_step": 9})
+        flat, man = load_checkpoint(d)
+        assert man["step"] == 9 and man["extra"]["data_step"] == 9
+        example = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s)
+        restored = restore_onto_mesh(flat, example)
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(s["params"]["w"]) + 1)
+
+
+def test_checkpoint_crash_leaves_no_partial_latest():
+    """A stale .tmp_ dir (simulated crash) must not be visible to restore."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _state())
+        os.makedirs(os.path.join(d, ".tmp_step_000000002"))
+        with open(os.path.join(d, ".tmp_step_000000002", "arrays.npz"), "w") as f:
+            f.write("garbage")
+        flat, man = load_checkpoint(d)
+        assert man["step"] == 1
+
+
+def test_checkpoint_manager_async_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for step in (1, 2, 3, 4):
+            mgr.save(step, _state(), extra={"data_step": step})
+        mgr.wait()
+        kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(kept) == 2 and kept[-1].endswith("4")
+
+
+def test_restore_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _state())
+        flat, _ = load_checkpoint(d)
+        bad = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+               "opt": {"mu": jax.ShapeDtypeStruct((3, 4), jnp.float32),
+                       "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+        with pytest.raises(ValueError):
+            restore_onto_mesh(flat, bad)

@@ -1,0 +1,111 @@
+"""LM stack: forward/grad/prefill/decode consistency for all variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import (
+    LMConfig,
+    decode_step,
+    forward,
+    init_lm,
+    loss_fn,
+    prefill,
+)
+
+BASE = dict(n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=97,
+            param_dtype=jnp.float32, compute_dtype=jnp.float32, attn_chunk=8)
+
+VARIANTS = {
+    "dense-gqa": LMConfig(name="d", **BASE),
+    "qwen-like": LMConfig(name="q", qkv_bias=True, tie_embeddings=True, **BASE),
+    "moe-shared-prefix": LMConfig(
+        name="m", moe=True, n_experts=8, moe_top_k=2, moe_d_ff=64,
+        n_shared_experts=1, first_k_dense=1, moe_group=16, **BASE),
+    "arctic-like": LMConfig(
+        name="a", moe=True, n_experts=4, moe_top_k=2, moe_d_ff=64,
+        residual_dense=True, moe_group=16, **BASE),
+    "mla": LMConfig(
+        name="mla", mla=True, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        **{**BASE, "n_kv_heads": 4}),
+    "deepseek-like": LMConfig(
+        name="ds", mla=True, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        moe=True, n_experts=8, moe_top_k=2, moe_d_ff=64, n_shared_experts=2,
+        first_k_dense=1, moe_group=16, **{**BASE, "n_kv_heads": 4}),
+}
+
+
+@pytest.fixture(params=sorted(VARIANTS), scope="module")
+def variant(request):
+    cfg = VARIANTS[request.param]
+    params, specs = init_lm(jax.random.PRNGKey(0), cfg)
+    return request.param, cfg, params, specs
+
+
+def test_forward_and_grad(variant):
+    name, cfg, params, _ = variant
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits, aux = forward(params, toks, cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, {"tokens": toks, "labels": toks}, cfg
+    )
+    assert np.isfinite(float(l))
+    gn = jax.tree.reduce(lambda a, b: a + b,
+                         jax.tree.map(lambda x: float(jnp.sum(x * x)), g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_prefill_matches_forward(variant):
+    name, cfg, params, _ = variant
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits, _ = forward(params, toks, cfg)
+    last, cache = prefill(params, toks, cfg, 32)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(logits[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_consistent_with_forward(variant):
+    name, cfg, params, _ = variant
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    last, cache = prefill(params, toks, cfg, 32)
+    nxt = jnp.argmax(last, -1)[:, None]
+    lg, cache2 = decode_step(params, cache, nxt, cfg)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+    assert bool(jnp.all(cache2.length == S + 1))
+    lg_full, _ = forward(params, jnp.concatenate([toks, nxt], 1), cfg)
+    err = float(jnp.max(jnp.abs(lg_full[:, S] - lg)))
+    # capacity-based MoE dropping is batch-size dependent -> only dense/mla
+    # paths are bit-consistent between teacher forcing and decode
+    tol = 1e-3 if not cfg.moe else 1.0
+    assert err < tol, (name, err)
+
+
+def test_param_specs_mirror_params(variant):
+    name, cfg, params, specs = variant
+    from jax.sharding import PartitionSpec as P
+
+    pl = jax.tree_util.tree_leaves(params)
+    sl = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(pl) == len(sl)
+    for leaf, spec in zip(pl, sl):
+        assert isinstance(spec, P)
+        assert len(tuple(spec)) <= leaf.ndim
+
+
+def test_attn_chunking_invariance():
+    """Chunked attention == unchunked attention (the memory trick is exact)."""
+    cfg_c = LMConfig(name="c", **{**BASE, "attn_chunk": 4})
+    cfg_f = LMConfig(name="f", **{**BASE, "attn_chunk": 4096})
+    params, _ = init_lm(jax.random.PRNGKey(0), cfg_c)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg_c.vocab)
+    a, _ = forward(params, toks, cfg_c)
+    b, _ = forward(params, toks, cfg_f)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,107 @@
+"""Property tests for the tropical-semiring primitives (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import (
+    minplus,
+    minplus_3d,
+    minplus_3d_argmin,
+    minplus_pred,
+    pad_to_multiple,
+    softmin_matmul,
+    tropical_eye,
+    unpad,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mat(rng, m, n, inf_frac=0.3):
+    a = rng.uniform(1, 100, size=(m, n)).astype(np.float32)
+    return np.where(rng.uniform(size=(m, n)) < inf_frac, np.inf, a)
+
+
+def np_minplus(x, y):
+    return (x[:, :, None] + y[None, :, :]).min(axis=1)
+
+
+@given(st.integers(1, 24), st.integers(1, 24), st.integers(1, 24), st.integers(0, 10_000))
+def test_minplus_matches_3d_and_numpy(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _mat(rng, m, k), _mat(rng, k, n)
+    ref = np_minplus(x, y)
+    assert np.allclose(minplus_3d(jnp.asarray(x), jnp.asarray(y)), ref, equal_nan=True)
+    assert np.allclose(
+        minplus(jnp.asarray(x), jnp.asarray(y), row_chunk=3), ref, equal_nan=True
+    )
+
+
+@given(st.integers(2, 16), st.integers(0, 10_000))
+def test_tropical_identity(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_mat(rng, n, n))
+    e = tropical_eye(n)
+    assert np.allclose(minplus(x, e), x, equal_nan=True)
+    assert np.allclose(minplus(e, x), x, equal_nan=True)
+
+
+@given(st.integers(1, 10), st.integers(1, 10), st.integers(1, 10),
+       st.integers(1, 10), st.integers(0, 10_000))
+def test_minplus_associative(m, k, l, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y, z = _mat(rng, m, k), _mat(rng, k, l), _mat(rng, l, n)
+    a = minplus(minplus(jnp.asarray(x), jnp.asarray(y)), jnp.asarray(z))
+    b = minplus(jnp.asarray(x), minplus(jnp.asarray(y), jnp.asarray(z)))
+    assert np.allclose(a, b, rtol=1e-5, equal_nan=True)
+
+
+@given(st.integers(2, 20), st.integers(1, 7), st.integers(0, 10_000))
+def test_padding_is_inert(n, mult, seed):
+    rng = np.random.default_rng(seed)
+    d = _mat(rng, n, n)
+    np.fill_diagonal(d, 0.0)
+    dp = pad_to_multiple(jnp.asarray(d), n + mult)
+    z = minplus(dp, dp)
+    zr = np_minplus(d, d)
+    assert np.allclose(unpad(z, n), zr, equal_nan=True)
+
+
+def test_argmin_semantics(rng):
+    x = jnp.asarray(_mat(rng, 9, 7))
+    y = jnp.asarray(_mat(rng, 7, 11))
+    z, k = minplus_3d_argmin(x, y)
+    l = np.asarray(x)[:, :, None] + np.asarray(y)[None, :, :]
+    assert np.array_equal(np.asarray(k), l.argmin(axis=1))
+
+
+def test_minplus_pred_witness(rng):
+    """pred propagation: improved entries point at a valid predecessor."""
+    n = 12
+    h = _mat(rng, n, n, inf_frac=0.5)
+    np.fill_diagonal(h, 0.0)
+    from repro.core.floyd_warshall import init_pred
+
+    p0 = init_pred(jnp.asarray(h))
+    z, pz = minplus_pred(jnp.asarray(h), jnp.asarray(h), p0, p0)
+    z, pz = np.asarray(z), np.asarray(pz)
+    fin = np.isfinite(z) & ~np.eye(n, dtype=bool)
+    assert np.all(pz[fin] >= 0)
+
+
+@pytest.mark.parametrize("tau", [0.05, 0.02])
+def test_softmin_mxu_path_accuracy(rng, tau):
+    """Beyond-paper MXU transform: error ~ tau*log(n)*scale within the f32
+    validity envelope (tau in normalized units, see softmin_matmul docs)."""
+    x = _mat(rng, 16, 16, inf_frac=0.2)
+    z = softmin_matmul(jnp.asarray(x), jnp.asarray(x), tau=tau)
+    ref = np_minplus(x, x)
+    fin = np.isfinite(ref)
+    scale = np.abs(x[np.isfinite(x)]).max()
+    err = np.abs(np.asarray(z)[fin] - ref[fin]).max()
+    assert err < 10 * tau * np.log(16) * scale, err
+    # inf structure preserved
+    assert np.all(np.isinf(np.asarray(z)[~fin]))
