@@ -1,0 +1,17 @@
+# Tier-1 verification and common dev entry points.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench serve-apsp
+
+test:           ## tier-1: the whole suite, fail fast
+	$(PY) -m pytest -x -q
+
+test-fast:      ## skip the slow multi-device subprocess tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:          ## paper-figure benchmark sweep (CSV to stdout)
+	$(PY) -m benchmarks.run --quick
+
+serve-apsp:     ## smoke the batched APSP serving loop
+	$(PY) -m repro.launch.serve --arch apsp --requests 32 --batch 16 --n-max 64

@@ -1,0 +1,130 @@
+"""Version-compat shims for the pinned jax (0.4.37).
+
+The codebase is written against the post-0.5 public surface (``jax.shard_map``,
+``jax.sharding.get_abstract_mesh``, ``jax.lax.pvary``); this container pins
+jax 0.4.37, where those live under experimental/private names or don't exist.
+Every call site routes through this module so the mainline code stays written
+against the modern API and the fallbacks are concentrated in one place.
+Policy: try the new public API first, fall back per-symbol (see COMPAT.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+
+__all__ = [
+    "shard_map", "get_abstract_mesh", "pvary", "set_mesh", "axis_size",
+    "in_manual_region",
+]
+
+# Trace-time depth of old-style full-manual shard_map bodies (fallback path
+# only).  Sharding constraints are illegal inside such bodies, so
+# ``models.layers.constrain`` no-ops while this is non-zero.
+_manual_depth = 0
+
+
+def in_manual_region() -> bool:
+    return _manual_depth > 0
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` or the classic ``psum(1, axis)`` idiom."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[set] = None,
+    check_vma: Optional[bool] = None,
+):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    The old API spells manual axes as the complement (``auto=``) and
+    ``check_vma`` as ``check_rep``; both are translated here.
+    """
+    if hasattr(jax, "shard_map"):
+        kw: dict[str, Any] = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # Partial-manual (``axis_names`` a strict subset of the mesh) maps to
+    # ``auto=<complement>`` in the old API, but jaxlib 0.4.36 hard-crashes
+    # (hlo_sharding_util.cc IsManualSubgroup check) whenever the body
+    # contains a loop, so we degrade to full-manual instead: axes absent
+    # from the in/out specs are then redundantly computed per-device rather
+    # than GSPMD-sharded — numerically identical, just not sharded over the
+    # unlisted axes.  Replication checking requires varying-axis tracking
+    # the old tracer lacks, so it is always off here.
+    check_rep = False if check_vma is None else bool(check_vma)
+    if axis_names is not None:
+        check_rep = False
+
+    @functools.wraps(f)
+    def f_flagged(*args, **kwargs):
+        global _manual_depth
+        _manual_depth += 1
+        try:
+            return f(*args, **kwargs)
+        finally:
+            _manual_depth -= 1
+
+    return _shard_map(
+        f_flagged, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_rep,
+    )
+
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` or the physical mesh in context.
+
+    Returns an object with ``.empty`` and ``.axis_names`` either way, so
+    callers can treat "no mesh" uniformly.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` context, or the legacy ``with mesh:`` resource
+    env (which is what pjit-era sharding constraints and ``shard_map`` read)."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    fn = getattr(jax.sharding, "use_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager pre-0.5
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` or identity.
+
+    On jax versions without varying-manual-axes tracking (pre-0.5 shard_map
+    with ``check_rep=False``) replication is not checked, so marking a value
+    as varying is a no-op.
+    """
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is not None:
+        return fn(x, axis_names)
+    return x

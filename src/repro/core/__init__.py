@@ -1,9 +1,25 @@
 """Core tropical-semiring APSP library (the paper's contribution)."""
 
-from .apsp import APSPResult, METHODS, register_method, solve
-from .blocked_fw import blocked_fw
-from .floyd_warshall import fw_classic, fw_squaring, fw_squaring_early_exit, init_pred
-from .graphgen import generate, generate_np, graph_stats, paper_corpus
+from .apsp import (
+    APSPResult,
+    BATCH_METHODS,
+    BatchAPSPResult,
+    METHODS,
+    pad_batch,
+    register_method,
+    solve,
+    solve_batch,
+)
+from .blocked_fw import blocked_fw, blocked_fw_batch
+from .floyd_warshall import (
+    fw_classic,
+    fw_classic_batch,
+    fw_squaring,
+    fw_squaring_batch,
+    fw_squaring_early_exit,
+    init_pred,
+)
+from .graphgen import generate, generate_batch, generate_np, graph_stats, paper_corpus
 from .paths import reconstruct_path, reconstruct_path_jit, spd_features, validate_tree
 from .rkleene import rkleene
 from .semiring import (
@@ -16,9 +32,12 @@ from .semiring import (
 )
 
 __all__ = [
-    "APSPResult", "METHODS", "register_method", "solve",
-    "blocked_fw", "fw_classic", "fw_squaring", "fw_squaring_early_exit",
-    "init_pred", "generate", "generate_np", "graph_stats", "paper_corpus",
+    "APSPResult", "BatchAPSPResult", "METHODS", "BATCH_METHODS",
+    "register_method", "solve", "solve_batch", "pad_batch",
+    "blocked_fw", "blocked_fw_batch", "fw_classic", "fw_classic_batch",
+    "fw_squaring", "fw_squaring_batch", "fw_squaring_early_exit",
+    "init_pred", "generate", "generate_batch", "generate_np", "graph_stats",
+    "paper_corpus",
     "reconstruct_path", "reconstruct_path_jit", "spd_features", "validate_tree",
     "rkleene", "minplus", "minplus_3d", "minplus_3d_argmin", "minplus_pred",
     "softmin_matmul", "tropical_eye",

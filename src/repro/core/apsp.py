@@ -1,6 +1,7 @@
 """Unified APSP front-end — the paper's technique as a framework feature.
 
-``solve(h, method=...)`` dispatches to the registered solvers:
+``solve(h, method=...)`` dispatches one dense cost matrix to the registered
+solvers:
 
 * ``"squaring"``    — paper-faithful FW-GPU (tropical matrix squaring)
 * ``"squaring_3d"`` — paper-faithful *and* memory-faithful (N×N×N broadcast)
@@ -8,23 +9,50 @@
 * ``"blocked_fw"``  — 3-phase tiled FW (TPU-shaped, O(n^3))
 * ``"rkleene"``     — R-Kleene divide & conquer (paper §3.3)
 
+``solve_batch(hs, method=...)`` is the multi-graph engine: it takes a
+(G, N, N) stack *or* a ragged list of per-graph matrices, inf-pads to a
+common edge (padding is inert under (min, +): phantom nodes have no edges,
+so no real distance ever routes through them), and runs a batched solver —
+one compiled XLA program and one kernel launch per phase for the whole
+batch instead of a dispatch round-trip per graph.  ``squaring``,
+``classic``, and ``blocked_fw`` have natively batched implementations
+(``blocked_fw`` closes all G pivot blocks with a single (G, B, B)
+``fw_block`` dispatch); every other registered method is lifted with
+``jax.vmap``.  Results match per-graph ``solve()`` exactly.
+
 Distributed execution lives in ``core/distributed.py`` and is selected via
-``launch/apsp_run.py`` on a real mesh.
+``launch/apsp_run.py`` on a real mesh; the serving loop over batches lives
+in ``launch/serve.py --arch apsp``.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .blocked_fw import blocked_fw
-from .floyd_warshall import fw_classic, fw_squaring
+from .blocked_fw import blocked_fw, blocked_fw_batch
+from .floyd_warshall import (
+    fw_classic,
+    fw_classic_batch,
+    fw_squaring,
+    fw_squaring_batch,
+)
 from .rkleene import rkleene
 
-__all__ = ["APSPResult", "solve", "METHODS", "register_method"]
+__all__ = [
+    "APSPResult",
+    "BatchAPSPResult",
+    "solve",
+    "solve_batch",
+    "pad_batch",
+    "METHODS",
+    "BATCH_METHODS",
+    "register_method",
+]
 
 
 @dataclass
@@ -32,6 +60,33 @@ class APSPResult:
     dist: jax.Array
     pred: Optional[jax.Array]
     method: str
+
+
+@dataclass
+class BatchAPSPResult:
+    """Batched APSP result over G graphs padded to a common edge N.
+
+    ``dist``/``pred`` are (G, N, N); ``sizes[i]`` is graph i's true node
+    count — entries at index >= sizes[i] are padding (inf off-diagonal / 0
+    diagonal distances, -1 / identity predecessors).
+    """
+
+    dist: jax.Array                # (G, N, N)
+    pred: Optional[jax.Array]      # (G, N, N) or None
+    sizes: np.ndarray              # (G,) true node counts
+    method: str
+
+    def __len__(self) -> int:
+        return int(self.dist.shape[0])
+
+    def unpadded(self, i: int) -> APSPResult:
+        """Graph i's result with the padding sliced off."""
+        n = int(self.sizes[i])
+        return APSPResult(
+            dist=self.dist[i, :n, :n],
+            pred=None if self.pred is None else self.pred[i, :n, :n],
+            method=self.method,
+        )
 
 
 def _squaring(h, with_pred, **kw):
@@ -63,8 +118,42 @@ METHODS: Dict[str, Callable] = {
 }
 
 
-def register_method(name: str, fn: Callable) -> None:
+def _squaring_batch(hs, with_pred, **kw):
+    return fw_squaring_batch(hs, with_pred=with_pred)
+
+
+def _squaring_3d_batch(hs, with_pred, **kw):
+    return fw_squaring_batch(hs, with_pred=with_pred, use_3d=True)
+
+
+def _classic_batch(hs, with_pred, **kw):
+    return fw_classic_batch(hs, with_pred=with_pred)
+
+
+def _blocked_batch(hs, with_pred, block_size=256, **kw):
+    return blocked_fw_batch(hs, block_size=block_size, with_pred=with_pred)
+
+
+BATCH_METHODS: Dict[str, Callable] = {
+    "squaring": _squaring_batch,
+    "squaring_3d": _squaring_3d_batch,
+    "classic": _classic_batch,
+    "blocked_fw": _blocked_batch,
+}
+
+
+def register_method(
+    name: str, fn: Callable, batch_fn: Optional[Callable] = None
+) -> None:
+    """Register a solver.  ``fn(h, with_pred, **kw)`` handles one graph;
+    ``batch_fn(hs, with_pred, **kw)``, if given, handles a (G, N, N) stack
+    (otherwise ``solve_batch`` lifts ``fn`` with ``jax.vmap``)."""
     METHODS[name] = fn
+    if batch_fn is not None:
+        BATCH_METHODS[name] = batch_fn
+    else:
+        # don't leave a stale batched solver behind a re-registered name
+        BATCH_METHODS.pop(name, None)
 
 
 def solve(
@@ -80,3 +169,159 @@ def solve(
     h = jnp.asarray(h, jnp.float32)
     dist, pred = METHODS[method](h, with_pred, **kwargs)
     return APSPResult(dist=dist, pred=pred, method=method)
+
+
+def pad_batch(
+    hs: Union[jax.Array, np.ndarray, Sequence],
+    sizes: Optional[Sequence[int]] = None,
+    *,
+    n_max: Optional[int] = None,
+) -> Tuple[jax.Array, np.ndarray]:
+    """Pack graphs into an inf-padded (G, N, N) stack + true-size vector.
+
+    Accepts a ragged list of (n_i, n_i) cost matrices or an already-stacked
+    (G, N, N) array (with optional ``sizes``; defaults to N for every
+    graph).  ``n_max`` forces the padded edge (>= max graph size) so a
+    serving loop can keep one compiled shape across batches.  Padding is a
+    phantom node: inf off-diagonal, 0 self-loop — inert under (min, +).
+    """
+    if hasattr(hs, "ndim") and hs.ndim == 3:
+        g, n, _ = hs.shape
+        sizes = np.full(g, n) if sizes is None else np.asarray(sizes, np.int64)
+        if n_max is None or n_max == n:
+            return jnp.asarray(hs, jnp.float32), sizes
+        mats = [np.asarray(hs[i]) for i in range(g)]
+    else:
+        mats = [np.asarray(h) for h in hs]
+        if sizes is None:
+            sizes = np.array([m.shape[0] for m in mats], np.int64)
+        else:
+            sizes = np.asarray(sizes, np.int64)
+    if not mats:
+        raise ValueError("empty graph batch")
+    n = int(max(m.shape[0] for m in mats)) if n_max is None else int(n_max)
+    if any(m.shape[0] > n for m in mats):
+        raise ValueError(f"n_max={n} smaller than largest graph")
+    out = np.full((len(mats), n, n), np.inf, np.float32)
+    idx = np.arange(n)
+    out[:, idx, idx] = 0.0
+    for i, m in enumerate(mats):
+        k = m.shape[0]
+        out[i, :k, :k] = m
+    return jnp.asarray(out), sizes
+
+
+def _solve_stack(stack, with_pred, method, **kwargs):
+    """Run one (G, N, N) inf-padded stack through the batched solver."""
+    batch_fn = BATCH_METHODS.get(method)
+    if batch_fn is not None:
+        return batch_fn(stack, with_pred, **kwargs)
+    return jax.vmap(lambda h: METHODS[method](h, with_pred, **kwargs))(stack)
+
+
+def _bucket_edge(n: int) -> int:
+    """Padded edge for a size-n graph: next power of two, floor 8."""
+    e = 8
+    while e < n:
+        e *= 2
+    return e
+
+
+def _bucket_count(c: int) -> int:
+    """Padded slot count for a c-graph bucket: next power of two up to 8,
+    then next multiple of 8 — keeps the set of compiled (count, edge)
+    shapes small and reused across serving cycles."""
+    if c <= 8:
+        e = 1
+        while e < c:
+            e *= 2
+        return e
+    return -(-c // 8) * 8
+
+
+def _solve_bucketed(
+    mats: List[np.ndarray], sizes: np.ndarray, n: int, method: str,
+    with_pred: bool, **kwargs
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Size-bucketed batched solve: graphs grouped by power-of-two padded
+    edge, one batched program per bucket, results scattered back into the
+    common (G, n, n) frame.  Bit-identical to the single-stack path —
+    padding is inert either way — but a ragged corpus does ~size^3 work per
+    graph instead of n_max^3."""
+    g = len(mats)
+    dist = np.full((g, n, n), np.inf, np.float32)
+    idx = np.arange(n)
+    dist[:, idx, idx] = 0.0
+    pred = None
+    if with_pred:
+        pred = np.full((g, n, n), -1, np.int32)
+        pred[:, idx, idx] = idx
+
+    buckets: Dict[int, List[int]] = {}
+    for i, k in enumerate(sizes):
+        buckets.setdefault(_bucket_edge(int(k)), []).append(i)
+
+    for edge, members in sorted(buckets.items()):
+        slots = _bucket_count(len(members))
+        sub = [mats[i] for i in members]
+        sub += [np.zeros((0, 0), np.float32)] * (slots - len(members))
+        stack, _ = pad_batch(sub, n_max=edge)
+        d, p = _solve_stack(stack, with_pred, method, **kwargs)
+        d = np.asarray(d)
+        p = None if p is None else np.asarray(p)
+        for j, i in enumerate(members):
+            k = int(sizes[i])
+            dist[i, :k, :k] = d[j, :k, :k]
+            if with_pred:
+                pred[i, :k, :k] = p[j, :k, :k]
+    return jnp.asarray(dist), None if pred is None else jnp.asarray(pred)
+
+
+def solve_batch(
+    hs: Union[jax.Array, np.ndarray, Sequence],
+    sizes: Optional[Sequence[int]] = None,
+    *,
+    method: str = "blocked_fw",
+    with_pred: bool = False,
+    n_max: Optional[int] = None,
+    bucket_by_size: bool = False,
+    **kwargs,
+) -> BatchAPSPResult:
+    """Solve APSP on a batch of independent graphs in one compiled program.
+
+    ``hs`` is a (G, N, N) stack or a ragged list of (n_i, n_i) matrices
+    (auto-padded; see :func:`pad_batch`).  Every registered method is
+    supported; results agree with per-graph :func:`solve` on the unpadded
+    blocks.  Use :meth:`BatchAPSPResult.unpadded` to slice graph i back
+    out.
+
+    ``bucket_by_size=True`` turns on the ragged-batch scheduler: graphs are
+    grouped into power-of-two edge buckets and each bucket runs as its own
+    batched program (a small, bounded family of compiled shapes instead of
+    exactly one), so a mixed-size corpus pays ~size^3 per graph rather than
+    n_max^3.  Output is bit-identical to the single-stack path.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
+    if bucket_by_size:
+        if hasattr(hs, "ndim") and hs.ndim == 3:
+            mats = [np.asarray(h) for h in hs]
+            sizes_ = (np.full(len(mats), hs.shape[1], np.int64)
+                      if sizes is None else np.asarray(sizes, np.int64))
+            mats = [m[:k, :k] for m, k in zip(mats, sizes_)]
+        else:
+            mats = [np.asarray(h) for h in hs]
+            sizes_ = (np.array([m.shape[0] for m in mats], np.int64)
+                      if sizes is None else np.asarray(sizes, np.int64))
+        if not mats:
+            raise ValueError("empty graph batch")
+        n = int(max(sizes_.max(), 1)) if n_max is None else int(n_max)
+        if int(sizes_.max()) > n:
+            raise ValueError(f"n_max={n} smaller than largest graph")
+        dist, pred = _solve_bucketed(
+            mats, sizes_, n, method, with_pred, **kwargs
+        )
+        return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes_, method=method)
+    stack, sizes = pad_batch(hs, sizes, n_max=n_max)
+    dist, pred = _solve_stack(stack, with_pred, method, **kwargs)
+    return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes, method=method)

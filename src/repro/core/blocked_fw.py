@@ -37,37 +37,25 @@ from .semiring import (
     unpad,
 )
 
-__all__ = ["blocked_fw", "closure_block"]
+__all__ = ["blocked_fw", "blocked_fw_batch", "closure_block"]
 
 
 def closure_block(d: jax.Array) -> jax.Array:
-    """In-block FW closure (phase 1) — B pivot steps on a (B, B) tile.
+    """In-block FW closure (phase 1) — B pivot steps on a (B, B) tile or a
+    (T, B, B) batch of tiles, one kernel dispatch either way.
 
-    On TPU this is the ``kernels/fw_block.py`` Pallas kernel (whole tile
-    resident in VMEM); elsewhere the equivalent XLA fori_loop."""
+    Routed through ``kernels/ops.py``: the Pallas kernel on TPU (whole tile
+    resident in VMEM, tile batches on the grid), the equivalent XLA
+    fori_loop elsewhere."""
     from repro.kernels import ops as _kops  # lazy: avoids import cycle
 
-    if _kops.backend() == "pallas":
-        from repro.kernels.fw_block import fw_block_pallas
-
-        return fw_block_pallas(d)
-
-    def body(k, dd):
-        via = dd[:, k][:, None] + dd[k, :][None, :]
-        return jnp.minimum(dd, via)
-
-    return jax.lax.fori_loop(0, d.shape[0], body, d)
+    return _kops.fw_block(d)
 
 
 def _closure_block_pred(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    def body(k, dp):
-        dd, pp = dp
-        via = dd[:, k][:, None] + dd[k, :][None, :]
-        better = via < dd
-        pk = jnp.broadcast_to(pp[k, :][None, :], pp.shape)
-        return jnp.where(better, via, dd), jnp.where(better, pk, pp)
+    from repro.kernels import ops as _kops  # lazy: avoids import cycle
 
-    return jax.lax.fori_loop(0, d.shape[0], body, (d, p))
+    return _kops.fw_block_pred(d, p)
 
 
 @partial(jax.jit, static_argnames=("block_size", "with_pred"))
@@ -139,3 +127,77 @@ def blocked_fw(
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
     return unpad(d, n), unpad(p, n)
+
+
+@partial(jax.jit, static_argnames=("block_size", "with_pred"))
+def blocked_fw_batch(
+    hs: jax.Array,
+    *,
+    block_size: int = 256,
+    with_pred: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Blocked FW over a (G, N, N) stack of independent graphs.
+
+    Same 3-phase pivot loop as :func:`blocked_fw`, but at every pivot step
+    the G pivot blocks are gathered into one (G, B, B) stack and closed by a
+    *single* ``kernels.ops.fw_block`` dispatch (the Pallas kernel takes tile
+    batches on its grid), and the panel min-plus products run under ``vmap``
+    — one kernel launch per phase for the whole batch instead of G
+    sequential launches.  Ragged batches are handled upstream by inf-padding
+    (``apsp.solve_batch``): phantom nodes are inert under (min, +).
+    """
+    g, n, _ = hs.shape
+    b = min(block_size, n)
+    d = jax.vmap(lambda h: pad_to_multiple(h, b))(hs)
+    np_ = d.shape[1]
+    nblk = np_ // b
+
+    if not with_pred:
+        def body(t, d):
+            o = t * b
+            pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
+            pivot = closure_block(pivot)                       # one (G,B,B) dispatch
+            row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
+            col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
+            row = jax.vmap(lambda pv, r: minplus(pv, r, row_chunk=b))(pivot, row)
+            col = jax.vmap(lambda c, pv: minplus(c, pv))(col, pivot)
+            # col's pivot rows == closed pivot, so this also updates stripes.
+            col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
+            return jnp.minimum(d, jax.vmap(minplus)(col, row))
+
+        d = jax.lax.fori_loop(0, nblk, body, d)
+        return d[:, :n, :n], None
+
+    p = jax.vmap(lambda h: pad_pred_to_multiple(init_pred(h), b))(hs)
+
+    def body_p(t, dp):
+        d, p = dp
+        o = t * b
+        pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
+        ppivot = jax.lax.dynamic_slice(p, (0, o, o), (g, b, b))
+        pivot, ppivot = _closure_block_pred(pivot, ppivot)
+
+        row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
+        prow = jax.lax.dynamic_slice(p, (0, o, 0), (g, b, np_))
+        col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
+        pcol = jax.lax.dynamic_slice(p, (0, 0, o), (g, np_, b))
+
+        mp_pred = lambda ko, jo: jax.vmap(
+            lambda x, y, px, py: minplus_pred(x, y, px, py, k_offset=ko, j_offset=jo)
+        )
+        zrow, pzrow = mp_pred(o, 0)(pivot, row, ppivot, prow)
+        brow = zrow < row
+        row, prow = jnp.where(brow, zrow, row), jnp.where(brow, pzrow, prow)
+        zcol, pzcol = mp_pred(o, o)(col, pivot, pcol, ppivot)
+        bcol = zcol < col
+        col, pcol = jnp.where(bcol, zcol, col), jnp.where(bcol, pzcol, pcol)
+
+        col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
+        pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (0, o, 0))
+
+        z, pz = mp_pred(o, 0)(col, row, pcol, prow)
+        better = z < d
+        return jnp.where(better, z, d), jnp.where(better, pz, p)
+
+    d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
+    return d[:, :n, :n], p[:, :n, :n]

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from .semiring import INF, ceil_log2, minplus
 from .blocked_fw import closure_block
 
@@ -125,12 +127,12 @@ def summa_minplus(
             yp = _bcast(yp, tuple(row_axes), yc, r)
             return jnp.minimum(acc, minplus(xp, yp))
 
-        acc0 = lax.pvary(
+        acc0 = compat.pvary(
             jnp.full((m_l, n_l), INF, x.dtype), tuple(row_axes) + tuple(col_axes)
         )
         return lax.fori_loop(0, npanels, step, acc0)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec)
     return fn(x, y)
 
 
@@ -216,7 +218,7 @@ def fw_distributed(
 
         return lax.fori_loop(0, nblk, pivot_step, dl)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec)
     return fn(h)
 
 

@@ -28,8 +28,10 @@ from .semiring import INF, ceil_log2, minplus, minplus_3d, minplus_pred
 __all__ = [
     "init_pred",
     "fw_squaring",
+    "fw_squaring_batch",
     "fw_squaring_early_exit",
     "fw_classic",
+    "fw_classic_batch",
 ]
 
 
@@ -78,6 +80,35 @@ def fw_squaring(
 
     d, p = jax.lax.fori_loop(0, iters, body_p, (d0, p0))
     return d, p
+
+
+@partial(jax.jit, static_argnames=("with_pred", "use_3d"))
+def fw_squaring_batch(
+    hs: jax.Array,
+    *,
+    with_pred: bool = False,
+    use_3d: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """:func:`fw_squaring` vmapped over a (G, N, N) stack of graphs.
+
+    One XLA program squares all G matrices per iteration — the per-graph
+    dispatch overhead amortizes across the batch.  ``use_3d=True`` broadcasts
+    a (G, N, N, N) tensor; batch small.
+    """
+    return jax.vmap(
+        lambda h: fw_squaring(h, with_pred=with_pred, use_3d=use_3d)
+    )(hs)
+
+
+@partial(jax.jit, static_argnames=("with_pred",))
+def fw_classic_batch(
+    hs: jax.Array,
+    *,
+    with_pred: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """:func:`fw_classic` vmapped over a (G, N, N) stack: each pivot step is
+    one rank-1 tropical update applied to all G graphs at once."""
+    return jax.vmap(lambda h: fw_classic(h, with_pred=with_pred))(hs)
 
 
 @jax.jit

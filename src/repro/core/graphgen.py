@@ -25,7 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GraphSample", "generate", "generate_np", "paper_corpus", "graph_stats"]
+__all__ = [
+    "GraphSample",
+    "generate",
+    "generate_batch",
+    "generate_np",
+    "paper_corpus",
+    "graph_stats",
+]
 
 INF = np.inf
 
@@ -68,6 +75,38 @@ def generate(
     h = jnp.where(eye, 0.0, h)
     adj = jnp.where(eye, False, adj)
     return h, adj
+
+
+def generate_batch(
+    key: jax.Array,
+    sizes,
+    *,
+    n_max: Optional[int] = None,
+    rho: Optional[float] = None,
+    alpha: int = 100,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """jax backend, batched: a ragged corpus as one (G, N, N) stack.
+
+    ``sizes`` lists each graph's true node count; graphs are generated at
+    ``n_max`` (default: max(sizes)) and masked down, so the stack feeds
+    ``apsp.solve_batch`` directly: entries outside a graph's (size, size)
+    block are inf off-diagonal / 0 diagonal phantom nodes.  ``rho=None``
+    samples an independent rho ~ U[0, 100] per graph (the paper's corpus
+    recipe).  Returns (H, adjacency, sizes).
+    """
+    sizes = jnp.asarray(sizes, jnp.int32)
+    g = sizes.shape[0]
+    n = int(n_max) if n_max is not None else int(np.max(np.asarray(sizes)))
+    keys = jax.random.split(key, g)
+    h, adj = jax.vmap(lambda k: generate(k, n, rho=rho, alpha=alpha))(keys)
+    node = jnp.arange(n)
+    valid = (node[None, :, None] < sizes[:, None, None]) & (
+        node[None, None, :] < sizes[:, None, None]
+    )
+    eye = jnp.eye(n, dtype=bool)[None]
+    h = jnp.where(valid & ~eye, h, jnp.where(eye, 0.0, jnp.inf))
+    adj = adj & valid
+    return h, adj, sizes
 
 
 def generate_np(

@@ -90,8 +90,12 @@ class _Comp:
 
 
 def _parse_operands(rest: str) -> List[str]:
-    """Operand names from 'a, %b.2, f32[8]{0} %c(...' up to closing paren."""
+    """Operand names from 'a, %b.2, f32[8]{0} %c(...' up to closing paren.
+
+    Commas inside shape dims/layouts (``f32[256,256]{1,0}``) are not operand
+    separators — only top-level, outside-bracket commas split."""
     depth = 1
+    bracket = 0
     out = []
     cur = []
     for ch in rest:
@@ -101,7 +105,11 @@ def _parse_operands(rest: str) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if depth == 1 and ch == ",":
+        elif ch in "[{":
+            bracket += 1
+        elif ch in "]}":
+            bracket -= 1
+        if depth == 1 and bracket == 0 and ch == ",":
             out.append("".join(cur))
             cur = []
         else:

@@ -1,5 +1,13 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real (1-CPU)
-device; multi-device tests spawn subprocesses that set the flag themselves."""
+device; multi-device tests spawn subprocesses that set the flag themselves.
+
+If ``hypothesis`` is installed (requirements-dev.txt) the property tests run
+under it; otherwise a minimal deterministic stand-in is registered in
+``sys.modules`` before collection so the suite still collects and runs.  The
+stand-in draws ``max_examples`` seeded pseudo-random samples per test — less
+adversarial than real hypothesis (no shrinking, no edge-case bias beyond
+always including the bounds), but it keeps every property exercised.
+"""
 
 import numpy as np
 import pytest
@@ -16,3 +24,95 @@ def np_floyd_warshall(h: np.ndarray) -> np.ndarray:
     for k in range(d.shape[0]):
         d = np.minimum(d, d[:, k][:, None] + d[k, :][None, :])
     return d
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback shim
+# ---------------------------------------------------------------------------
+
+def _install_hypothesis_stub():
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw, bounds=()):
+            self.draw = draw          # rng -> value
+            self.bounds = bounds      # always-tested corner values
+
+    def integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi), bounds=(lo, hi))
+
+    def floats(lo, hi, **_kw):
+        return _Strategy(lambda r: r.uniform(lo, hi), bounds=(lo, hi))
+
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)), bounds=(False, True))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+    class settings:
+        _profiles = {"default": {"max_examples": 10}}
+        _current = "default"
+
+        def __init__(self, **kw):
+            self.kw = kw
+
+        def __call__(self, fn):          # @settings(...) decorator form
+            fn._stub_settings = self.kw
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._current = name
+
+        @classmethod
+        def _max_examples(cls):
+            return int(cls._profiles.get(cls._current, {}).get("max_examples", 10))
+
+    def given(*strategies):
+        def deco(fn):
+            def runner():
+                n = settings._max_examples()
+                r = random.Random(0)
+                corners = max((len(s.bounds) for s in strategies), default=0)
+                for i in range(n):
+                    if i < corners:   # pin every strategy to its i-th corner
+                        args = [
+                            s.bounds[i % len(s.bounds)] if s.bounds else s.draw(r)
+                            for s in strategies
+                        ]
+                    else:
+                        args = [s.draw(r) for s in strategies]
+                    fn(*args)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = types.ModuleType("hypothesis.strategies")
+    mod.strategies.integers = integers
+    mod.strategies.floats = floats
+    mod.strategies.booleans = booleans
+    mod.strategies.sampled_from = sampled_from
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_stub()
