@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench serve-apsp
+.PHONY: test test-fast bench bench-smoke serve-apsp
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -10,8 +10,11 @@ test:           ## tier-1: the whole suite, fail fast
 test-fast:      ## skip the slow multi-device subprocess tests
 	$(PY) -m pytest -x -q -m "not slow"
 
-bench:          ## paper-figure benchmark sweep (CSV to stdout)
+bench:          ## paper-figure benchmark sweep (CSV to stdout + BENCH_apsp.json)
 	$(PY) -m benchmarks.run --quick
+
+bench-smoke:    ## autotuner + benchmark dispatch-regression canary at N<=128 (seconds)
+	$(PY) -m benchmarks.run --smoke --json BENCH_apsp_smoke.json
 
 serve-apsp:     ## smoke the batched APSP serving loop
 	$(PY) -m repro.launch.serve --arch apsp --requests 32 --batch 16 --n-max 64

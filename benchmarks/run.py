@@ -1,52 +1,147 @@
-"""Benchmark harness: one module per paper table/figure.  CSV to stdout.
+"""Benchmark harness: one module per paper table/figure.  CSV to stdout,
+machine-readable ``BENCH_apsp.json`` to disk (perf trajectory across PRs).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--json PATH]
+
+``--smoke`` is the tier-1 canary (``make bench-smoke``): autotune + the
+benchmark sweeps at N<=128, a few seconds total, so dispatch regressions
+surface without the full sweep.
 """
 
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import sys
 import time
+
+
+def _apsp_summary(rows):
+    """Per-method ms / graphs-per-sec from the fig10 sweep rows."""
+    methods = {
+        "us_squaring_fw_accel": "squaring",
+        "us_rkleene_accel": "rkleene",
+        "us_blocked_fw_accel": "blocked_fw",
+    }
+    out = {}
+    for r in rows:
+        if r.get("bench") != "fig10_apsp_runtime":
+            continue
+        for col, method in methods.items():
+            if col in r:
+                ms = r[col] / 1e3
+                out.setdefault(method, {})[str(r["n"])] = {
+                    "ms": ms,
+                    "graphs_per_s": 1e3 / ms if ms > 0 else None,
+                }
+    return out
+
+
+def _write_json(path, *, mode, all_rows, fused_rows):
+    from repro.kernels import autotune, ops
+
+    fused = next(
+        (r for r in fused_rows if r.get("bench") == "fused_vs_unfused_blocked_fw"),
+        None,
+    )
+    payload = {
+        "schema": 1,
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "mode": mode,
+        "backend": ops.backend(),
+        "autotune": {
+            "mode": autotune.mode(),
+            "cache": str(autotune.cache_path()),
+            # only the entries this run consulted/tuned — the machine-wide
+            # cache may hold unrelated shapes that would make cross-PR
+            # trajectory diffs spurious
+            "entries": autotune.touched_entries(),
+        },
+        "apsp": _apsp_summary(all_rows),
+        "fused_vs_unfused": fused,
+        "rows": all_rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=str)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (N<=128) — the tier-1 dispatch canary")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path ('' to skip; default "
+                         "BENCH_apsp.json, or BENCH_apsp_smoke.json under "
+                         "--smoke so the canary never clobbers the tracked "
+                         "full-run trajectory)")
     args = ap.parse_args(argv)
+    if args.json is None:
+        args.json = "BENCH_apsp_smoke.json" if args.smoke else "BENCH_apsp.json"
 
-    from benchmarks import bench_apsp, bench_blocksize, bench_graphgen, bench_minplus
+    from benchmarks import (
+        bench_apsp,
+        bench_blocksize,
+        bench_fused,
+        bench_graphgen,
+        bench_minplus,
+    )
 
-    suites = [
-        ("fig9_graphgen", lambda: bench_graphgen.run(
-            n_graphs=60 if args.quick else 200, v_max=200 if args.quick else 400)),
-        ("fig10_apsp", lambda: bench_apsp.run(
-            sizes=(64, 128, 256) if args.quick else (64, 128, 256, 384, 512),
-            py_cpu_max=128 if args.quick else 192)),
-        ("minplus_wall", lambda: bench_minplus.run(
-            sizes=(128, 256) if args.quick else (128, 256, 512, 1024))),
-        ("blocked_fw_tiles", lambda: bench_blocksize.run(
-            n=256 if args.quick else 512,
-            blocks=(32, 64, 128) if args.quick else (32, 64, 128, 256))),
-    ]
+    if args.smoke:
+        mode = "smoke"
+        suites = [
+            ("fig10_apsp", lambda: bench_apsp.run(
+                sizes=(32, 64, 128), py_cpu_max=64)),
+            ("fused_dispatch", lambda: bench_fused.run(
+                n=128, block=32, reps=1)),
+        ]
+    else:
+        mode = "quick" if args.quick else "full"
+        suites = [
+            ("fig9_graphgen", lambda: bench_graphgen.run(
+                n_graphs=60 if args.quick else 200, v_max=200 if args.quick else 400)),
+            ("fig10_apsp", lambda: bench_apsp.run(
+                sizes=(64, 128, 256) if args.quick else (64, 128, 256, 384, 512),
+                py_cpu_max=128 if args.quick else 192)),
+            ("minplus_wall", lambda: bench_minplus.run(
+                sizes=(128, 256) if args.quick else (128, 256, 512, 1024))),
+            ("blocked_fw_tiles", lambda: bench_blocksize.run(
+                n=256 if args.quick else 512,
+                blocks=(32, 64, 128) if args.quick else (32, 64, 128, 256))),
+            ("fused_dispatch", lambda: bench_fused.run(
+                n=256 if args.quick else 1024,
+                block=64 if args.quick else 128,
+                reps=2 if args.quick else 3)),
+        ]
 
-    all_rows = []
+    all_rows, fused_rows = [], []
     for name, fn in suites:
         t0 = time.time()
         rows = fn()
         print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
               file=sys.stderr)
         all_rows.extend(rows)
+        if name == "fused_dispatch":
+            fused_rows = rows
 
+    if args.json:
+        _write_json(args.json, mode=mode, all_rows=all_rows,
+                    fused_rows=fused_rows)
+
+    csv_rows = [
+        {k: v for k, v in r.items() if not isinstance(v, dict)}
+        for r in all_rows
+    ]
     keys = []
-    for r in all_rows:
+    for r in csv_rows:
         for k in r:
             if k not in keys:
                 keys.append(k)
     w = csv.DictWriter(sys.stdout, fieldnames=keys)
     w.writeheader()
-    for r in all_rows:
+    for r in csv_rows:
         w.writerow(r)
     return 0
 

@@ -20,6 +20,12 @@ batch instead of a dispatch round-trip per graph.  ``squaring``,
 ``fw_block`` dispatch); every other registered method is lifted with
 ``jax.vmap``.  Results match per-graph ``solve()`` exactly.
 
+Every registered solver's panel/quadrant products run on the fused
+``repro.kernels.ops`` dispatch (fused accumulate + fused argmin for
+predecessors), with block sizes served from the persistent autotune cache
+(``repro.kernels.autotune``; ``REPRO_AUTOTUNE*`` env vars) — tune before
+first solve of a shape to get measured winners instead of defaults.
+
 Distributed execution lives in ``core/distributed.py`` and is selected via
 ``launch/apsp_run.py`` on a real mesh; the serving loop over batches lives
 in ``launch/serve.py --arch apsp``.

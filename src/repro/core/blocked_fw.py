@@ -14,6 +14,13 @@ Because the updated column stripe's pivot rows equal the closed pivot block,
 the single phase-3 product also re-derives the stripes — the implementation
 below exploits that to touch the full matrix exactly once per pivot.
 
+Every panel product goes through the fused ``kernels.ops`` dispatch: phase 3
+is one fused-accumulate ``ops.minplus(col, row, d)`` (no separate elementwise
+min pass), predecessor propagation rides the fused-argmin kernel via
+``ops.minplus_pred``, and the batched solver's panel products lower to a
+single (G, ., .) kernel dispatch.  Block/chunk sizes come from the autotune
+cache (``kernels/autotune.py``) when it has measured winners.
+
 Work: n/B pivots x O(n^2 B) = O(n^3).  Memory: O(n^2) + O(nB) live panels.
 The same decomposition drives the distributed solver (core/distributed.py)
 and the Pallas kernels (kernels/fw_block.py, kernels/minplus.py).
@@ -25,19 +32,21 @@ from functools import partial
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from .floyd_warshall import init_pred
 from .semiring import (
-    INF,
-    minplus,
-    minplus_pred,
     pad_pred_to_multiple,
     pad_to_multiple,
     unpad,
 )
 
 __all__ = ["blocked_fw", "blocked_fw_batch", "closure_block"]
+
+
+def _ops():
+    from repro.kernels import ops as _kops  # lazy: avoids import cycle
+
+    return _kops
 
 
 def closure_block(d: jax.Array) -> jax.Array:
@@ -47,15 +56,11 @@ def closure_block(d: jax.Array) -> jax.Array:
     Routed through ``kernels/ops.py``: the Pallas kernel on TPU (whole tile
     resident in VMEM, tile batches on the grid), the equivalent XLA
     fori_loop elsewhere."""
-    from repro.kernels import ops as _kops  # lazy: avoids import cycle
-
-    return _kops.fw_block(d)
+    return _ops().fw_block(d)
 
 
 def _closure_block_pred(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    from repro.kernels import ops as _kops  # lazy: avoids import cycle
-
-    return _kops.fw_block_pred(d, p)
+    return _ops().fw_block_pred(d, p)
 
 
 @partial(jax.jit, static_argnames=("block_size", "with_pred"))
@@ -72,6 +77,7 @@ def blocked_fw(
     a ``lax.fori_loop`` with ``dynamic_slice`` stripes so the HLO stays
     O(1) in n/B.
     """
+    kops = _ops()
     n = h.shape[0]
     b = min(block_size, n)
     d = pad_to_multiple(h, b)
@@ -85,11 +91,11 @@ def blocked_fw(
             pivot = closure_block(pivot)
             row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))      # (B, N)
             col = jax.lax.dynamic_slice(d, (0, o), (np_, b))      # (N, B)
-            row = minplus(pivot, row, row_chunk=b)
-            col = minplus(col, pivot, row_chunk=None)
+            row = kops.minplus(pivot, row)      # pivot diag 0 => subsumes old
+            col = kops.minplus(col, pivot)
             # col's pivot rows == closed pivot, so this also updates stripes.
             col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
-            return jnp.minimum(d, minplus(col, row))
+            return kops.minplus(col, row, d)    # fused phase-3 accumulate
 
         d = jax.lax.fori_loop(0, nblk, body, d)
         return unpad(d, n), None
@@ -110,20 +116,20 @@ def blocked_fw(
 
         # Row panel: paths pivot-row -> anywhere; x-cols/y-rows are the pivot
         # block (global offset o), output cols are global (offset 0).
-        zrow, pzrow = minplus_pred(pivot, row, ppivot, prow, k_offset=o, j_offset=0)
-        brow = zrow < row
-        row, prow = jnp.where(brow, zrow, row), jnp.where(brow, pzrow, prow)
+        row, prow = kops.minplus_pred(
+            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0
+        )
         # Col panel: paths anywhere -> pivot cols; output cols offset o too.
-        zcol, pzcol = minplus_pred(col, pivot, pcol, ppivot, k_offset=o, j_offset=o)
-        bcol = zcol < col
-        col, pcol = jnp.where(bcol, zcol, col), jnp.where(bcol, pzcol, pcol)
+        col, pcol = kops.minplus_pred(
+            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o
+        )
 
         col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
         pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (o, 0))
 
-        z, pz = minplus_pred(col, row, pcol, prow, k_offset=o, j_offset=0)
-        better = z < d
-        return jnp.where(better, z, d), jnp.where(better, pz, p)
+        return kops.minplus_pred(
+            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0
+        )
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
     return unpad(d, n), unpad(p, n)
@@ -141,11 +147,14 @@ def blocked_fw_batch(
     Same 3-phase pivot loop as :func:`blocked_fw`, but at every pivot step
     the G pivot blocks are gathered into one (G, B, B) stack and closed by a
     *single* ``kernels.ops.fw_block`` dispatch (the Pallas kernel takes tile
-    batches on its grid), and the panel min-plus products run under ``vmap``
-    — one kernel launch per phase for the whole batch instead of G
-    sequential launches.  Ragged batches are handled upstream by inf-padding
+    batches on its grid), and the panel min-plus products are (G, ., .)
+    operands of the batched fused dispatch — one kernel grid per phase for
+    the whole batch (leading batch grid dimension on the Pallas path, a
+    single vmapped XLA program on the fallback) instead of G sequential
+    launches.  Ragged batches are handled upstream by inf-padding
     (``apsp.solve_batch``): phantom nodes are inert under (min, +).
     """
+    kops = _ops()
     g, n, _ = hs.shape
     b = min(block_size, n)
     d = jax.vmap(lambda h: pad_to_multiple(h, b))(hs)
@@ -159,11 +168,11 @@ def blocked_fw_batch(
             pivot = closure_block(pivot)                       # one (G,B,B) dispatch
             row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
             col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
-            row = jax.vmap(lambda pv, r: minplus(pv, r, row_chunk=b))(pivot, row)
-            col = jax.vmap(lambda c, pv: minplus(c, pv))(col, pivot)
+            row = kops.minplus(pivot, row)
+            col = kops.minplus(col, pivot)
             # col's pivot rows == closed pivot, so this also updates stripes.
             col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
-            return jnp.minimum(d, jax.vmap(minplus)(col, row))
+            return kops.minplus(col, row, d)    # fused batched phase-3
 
         d = jax.lax.fori_loop(0, nblk, body, d)
         return d[:, :n, :n], None
@@ -182,22 +191,19 @@ def blocked_fw_batch(
         col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
         pcol = jax.lax.dynamic_slice(p, (0, 0, o), (g, np_, b))
 
-        mp_pred = lambda ko, jo: jax.vmap(
-            lambda x, y, px, py: minplus_pred(x, y, px, py, k_offset=ko, j_offset=jo)
+        row, prow = kops.minplus_pred(
+            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0
         )
-        zrow, pzrow = mp_pred(o, 0)(pivot, row, ppivot, prow)
-        brow = zrow < row
-        row, prow = jnp.where(brow, zrow, row), jnp.where(brow, pzrow, prow)
-        zcol, pzcol = mp_pred(o, o)(col, pivot, pcol, ppivot)
-        bcol = zcol < col
-        col, pcol = jnp.where(bcol, zcol, col), jnp.where(bcol, pzcol, pcol)
+        col, pcol = kops.minplus_pred(
+            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o
+        )
 
         col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
         pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (0, o, 0))
 
-        z, pz = mp_pred(o, 0)(col, row, pcol, prow)
-        better = z < d
-        return jnp.where(better, z, d), jnp.where(better, pz, p)
+        return kops.minplus_pred(
+            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0
+        )
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
     return d[:, :n, :n], p[:, :n, :n]

@@ -44,7 +44,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 
-from .semiring import INF, ceil_log2, minplus
+from .semiring import INF, ceil_log2
+
+
+def _kops():
+    from repro.kernels import ops  # lazy: avoids import cycle
+
+    return ops
 from .blocked_fw import closure_block
 
 __all__ = [
@@ -87,6 +93,7 @@ def _panel_coords(p, k_shard: int, panels_per_shard: int, panel: int):
 def summa_minplus(
     x: jax.Array,
     y: jax.Array,
+    acc: jax.Array | None = None,
     *,
     mesh: Mesh,
     row_axes: Tuple[str, ...] = ("data",),
@@ -98,6 +105,10 @@ def summa_minplus(
     (32-row, 16-col) layout).  Per panel: X's (m_l, k/P) column slice is
     broadcast along ``col_axes`` from its owner, Y's (k/P, n_l) row slice
     along ``row_axes``, then a local fused min-plus accumulate.
+
+    ``acc`` (same sharding as Z) fuses Z = min(acc, X (x) Y): it seeds the
+    panel loop's running min, so the accumulate costs no second pass over
+    the output shards.
     """
     nr = _axes_size(mesh, row_axes)
     nc = _axes_size(mesh, col_axes)
@@ -112,28 +123,34 @@ def summa_minplus(
 
     spec = P(tuple(row_axes), tuple(col_axes))
 
-    def body(xl: jax.Array, yl: jax.Array) -> jax.Array:
+    def body(xl: jax.Array, yl: jax.Array, *rest) -> jax.Array:
         r = lax.axis_index(tuple(row_axes)) if len(row_axes) > 1 else lax.axis_index(row_axes[0])
         c = lax.axis_index(tuple(col_axes)) if len(col_axes) > 1 else lax.axis_index(col_axes[0])
         m_l = xl.shape[0]
         n_l = yl.shape[1]
 
-        def step(p, acc):
+        def step(p, a):
             xc, xoff = _panel_coords(p, k // nc, x_pps, panel)
             yc, yoff = _panel_coords(p, k // nr, y_pps, panel)
             xp = lax.dynamic_slice(xl, (0, xoff), (m_l, panel))
             yp = lax.dynamic_slice(yl, (yoff, 0), (panel, n_l))
             xp = _bcast(xp, tuple(col_axes), xc, c)
             yp = _bcast(yp, tuple(row_axes), yc, r)
-            return jnp.minimum(acc, minplus(xp, yp))
+            return _kops().minplus(xp, yp, a)       # fused local accumulate
 
-        acc0 = compat.pvary(
-            jnp.full((m_l, n_l), INF, x.dtype), tuple(row_axes) + tuple(col_axes)
-        )
+        if rest:
+            acc0 = rest[0]                          # fused Z = min(acc, X(x)Y)
+        else:
+            acc0 = compat.pvary(
+                jnp.full((m_l, n_l), INF, x.dtype), tuple(row_axes) + tuple(col_axes)
+            )
         return lax.fori_loop(0, npanels, step, acc0)
 
-    fn = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec)
-    return fn(x, y)
+    if acc is None:
+        fn = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec)
+        return fn(x, y)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec)
+    return fn(x, y, acc)
 
 
 @partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes", "iters"))
@@ -150,8 +167,8 @@ def squaring_distributed(
     it = ceil_log2(n) if iters is None else iters
 
     def body(_, d):
-        return jnp.minimum(
-            d, summa_minplus(d, d, mesh=mesh, row_axes=row_axes, col_axes=col_axes)
+        return summa_minplus(
+            d, d, d, mesh=mesh, row_axes=row_axes, col_axes=col_axes
         )
 
     return lax.fori_loop(0, it, body, h)
@@ -201,12 +218,12 @@ def fw_distributed(
 
             # -- phase 2a: row panel (pivot rows x my cols), owner row computes
             rp = lax.dynamic_slice(d, (roff, 0), (b, n_l))
-            rp = minplus(pv, rp)                       # pivot diag 0 => subsumes old
+            rp = _kops().minplus(pv, rp)               # pivot diag 0 => subsumes old
             rp = _bcast(rp, tuple(row_axes), orow, r)
 
             # -- phase 2b: col panel (my rows x pivot cols), owner col computes
             cp = lax.dynamic_slice(d, (0, coff), (m_l, b))
-            cp = minplus(cp, pv)
+            cp = _kops().minplus(cp, pv)
             # owner-row devices overwrite their pivot rows with the closed
             # pivot so phase 3 re-derives the row/col panels exactly.
             cp_fixed = lax.dynamic_update_slice(cp, pv, (roff, 0))
@@ -214,7 +231,7 @@ def fw_distributed(
             cp = _bcast(cp, tuple(col_axes), ocol, c)
 
             # -- phase 3: one fused local update touches all of d once --
-            return jnp.minimum(d, minplus(cp, rp))
+            return _kops().minplus(cp, rp, d)
 
         return lax.fori_loop(0, nblk, pivot_step, dl)
 
@@ -240,8 +257,10 @@ def rkleene_distributed(
     """
     n = h.shape[0]
 
-    def mp(x, y):
-        return summa_minplus(x, y, mesh=mesh, row_axes=row_axes, col_axes=col_axes)
+    def mp(x, y, acc=None):
+        return summa_minplus(
+            x, y, acc, mesh=mesh, row_axes=row_axes, col_axes=col_axes
+        )
 
     nr = _axes_size(mesh, row_axes)
     nc = _axes_size(mesh, col_axes)
@@ -261,11 +280,11 @@ def rkleene_distributed(
         a = rk(a)
         bq = mp(a, bq)
         cq = mp(cq, a)
-        dd = jnp.minimum(dd, mp(cq, bq))
+        dd = mp(cq, bq, acc=dd)         # fused quadrant accumulate
         dd = rk(dd)
         bq = mp(bq, dd)
         cq = mp(dd, cq)
-        a = jnp.minimum(a, mp(bq, cq))
+        a = mp(bq, cq, acc=a)
         top = jnp.concatenate([a, bq], axis=1)
         bot = jnp.concatenate([cq, dd], axis=1)
         return jnp.concatenate([top, bot], axis=0)

@@ -98,12 +98,13 @@ def spd_features(h: jax.Array, landmarks: jax.Array, *, cap: float = 1e4) -> jax
     (cost O(L * n^2 * log n) instead of full APSP) and returns a (n, L)
     feature matrix with unreachable distances capped.
     """
-    from .semiring import minplus, ceil_log2
+    from .semiring import ceil_log2
+    from repro.kernels import ops as _kops
 
     d = h[landmarks, :]                      # (L, n) seed distances
 
     def body(_, dl):
-        return jnp.minimum(dl, minplus(dl, h))
+        return _kops.minplus(dl, h, dl)      # fused relax step
 
     d = jax.lax.fori_loop(0, ceil_log2(h.shape[0]), body, d)
     return jnp.minimum(d, cap).T             # (n, L)

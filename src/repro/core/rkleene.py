@@ -15,8 +15,11 @@ FW, but all the work lands in large dense min-plus GEMMs — the paper's
 the whole solver jit-compiles; matrices are padded to a power-of-two times
 ``base`` with unreachable phantom nodes.
 
-Predecessor tracking uses the same fused rule as everywhere else
-(``semiring.minplus_pred``) with quadrant offsets.
+Every quadrant product goes through the fused ``kernels.ops`` dispatch: the
+two (+) accumulate steps are single fused ``ops.minplus(x, y, a)`` calls,
+and predecessor tracking rides the fused-argmin kernel via
+``ops.minplus_pred`` with quadrant offsets (same shared derivation rule as
+everywhere else).
 """
 
 from __future__ import annotations
@@ -29,9 +32,15 @@ import jax.numpy as jnp
 
 from .blocked_fw import closure_block, _closure_block_pred
 from .floyd_warshall import init_pred
-from .semiring import INF, minplus, minplus_pred, unpad
+from .semiring import INF, unpad
 
 __all__ = ["rkleene"]
+
+
+def _ops():
+    from repro.kernels import ops as _kops  # lazy: avoids import cycle
+
+    return _kops
 
 
 def _pad_pow2(d: jax.Array, base: int, fill: float, diag) -> Tuple[jax.Array, int]:
@@ -49,6 +58,7 @@ def _pad_pow2(d: jax.Array, base: int, fill: float, diag) -> Tuple[jax.Array, in
 
 
 def _rk(d: jax.Array, base: int) -> jax.Array:
+    kops = _ops()
     n = d.shape[0]
     if n <= base:
         return closure_block(d)
@@ -57,18 +67,19 @@ def _rk(d: jax.Array, base: int) -> jax.Array:
     c, dd = d[m:, :m], d[m:, m:]
 
     a = _rk(a, base)
-    b = minplus(a, b)
-    c = minplus(c, a)
-    dd = jnp.minimum(dd, minplus(c, b))
+    b = kops.minplus(a, b)
+    c = kops.minplus(c, a)
+    dd = kops.minplus(c, b, dd)         # fused D <- D (+) C (x) B
     dd = _rk(dd, base)
-    b = minplus(b, dd)
-    c = minplus(dd, c)
-    a = jnp.minimum(a, minplus(b, c))
+    b = kops.minplus(b, dd)
+    c = kops.minplus(dd, c)
+    a = kops.minplus(b, c, a)           # fused A <- A (+) B (x) C
     return jnp.block([[a, b], [c, dd]])
 
 
 def _rk_pred(d, p, base: int, off: int):
     """R-Kleene with predecessors. ``off`` = global id of this block's node 0."""
+    kops = _ops()
     n = d.shape[0]
     if n <= base:
         return _closure_block_pred(d, p)
@@ -80,9 +91,10 @@ def _rk_pred(d, p, base: int, off: int):
     o1, o2 = off, off + m
 
     def upd(x, y, px, py, ko, jo, zold, pold):
-        z, pz = minplus_pred(x, y, px, py, k_offset=ko, j_offset=jo)
-        better = z < zold
-        return jnp.where(better, z, zold), jnp.where(better, pz, pold)
+        # fused strict-improvement accumulate + pred propagation
+        return kops.minplus_pred(
+            x, y, px, py, a=zold, pa=pold, k_offset=ko, j_offset=jo
+        )
 
     a, pa = _rk_pred(a, pa, base, o1)
     b, pb = upd(a, b, pa, pb, o1, o2, b, pb)

@@ -10,7 +10,8 @@ This module provides:
 * ``minplus_3d``          — the paper-faithful 3D-broadcast formulation,
 * ``minplus``             — memory-bounded chunked formulation (XLA fallback;
                             the Pallas kernel in ``repro.kernels`` is the
-                            TPU-performant path),
+                            TPU-performant path; solvers go through the tuned
+                            fused dispatch in ``repro.kernels.ops``),
 * ``minplus_pred``        — min-plus with fused predecessor propagation,
 * ``softmin_matmul``      — beyond-paper experimental MXU path via the
                             tropical soft-min limit (log-sum-exp transform).
@@ -34,6 +35,7 @@ __all__ = [
     "minplus_3d_argmin",
     "minplus",
     "minplus_pred",
+    "auto_row_chunk",
     "tropical_eye",
     "softmin_matmul",
     "pad_to_multiple",
@@ -72,15 +74,20 @@ def minplus_3d_argmin(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]
 # Memory-bounded chunked formulation (the TPU-shaped rewrite).
 # ---------------------------------------------------------------------------
 
-def _auto_row_chunk(m: int, n: int, budget_elems: int = 1 << 16) -> int:
+def auto_row_chunk(m: int, n: int, k: int, budget_elems: int = 1 << 16) -> int:
     """Pick a row chunk so the (chunk, n, k) broadcast stays cache-resident.
 
-    The 64k-element budget (256 KiB f32) keeps each chunk's broadcast +
-    reduce in L2; measured 4-6x over the single-shot (m, n, k) tensor for
-    n >= 128 on CPU.  Floor of 4 rows amortizes scan step overhead.
-    Chunking never changes values — each output row's candidate set is
-    identical."""
-    per_row = max(n * n, 1)
+    Sized off the *true* n*k elements each output row's broadcast touches —
+    an earlier revision used max(n, k)^2, which mis-sized the chunks for the
+    rectangular (B, N) panels blocked FW feeds this (overshooting k=n
+    square-matrix cost on thin panels and starving them of rows).  The
+    64k-element budget (256 KiB f32) keeps each chunk's broadcast + reduce
+    in L2; measured 4-6x over the single-shot (m, n, k) tensor for n >= 128
+    on CPU.  Floor of 4 rows amortizes scan step overhead.  Chunking never
+    changes values — each output row's candidate set is identical.  The
+    autotuner (``repro.kernels.autotune``) overrides this heuristic with
+    measured winners where it has them."""
+    per_row = max(n * k, 1)
     c = max(4, budget_elems // per_row)
     return int(min(m, c))
 
@@ -90,12 +97,17 @@ def minplus(x: jax.Array, y: jax.Array, *, row_chunk: Optional[int] = None) -> j
     """Min-plus matmul ``Z[i,j] = min_k x[i,k] + y[k,j]`` without the n^3 tensor.
 
     Dispatches to the Pallas kernel on TPU (``repro.kernels``); otherwise
-    scans over row blocks of ``x`` so the live intermediate is
-    ``(row_chunk, N, K)`` — the pure-XLA fallback.  The broadcast is laid
-    out (i, j, k) with the reduction over the *last* (contiguous) axis —
-    ~2x faster than reducing the strided middle axis on CPU, and
-    bit-identical (min over the same candidates; fp min is
-    order-insensitive).
+    the chunked pure-XLA fallback (``repro.kernels.minplus_xla``): a scan
+    over row blocks of ``x``, folding the contraction ``k_chunk`` columns at
+    a time, so the live intermediate is (row_chunk, N, k_chunk) laid out
+    with k as the *last* (contiguous) axis — the reduce vectorizes and the
+    accumulator stays cache-resident.  Bit-identical to the naive product
+    (min over the same candidates; fp min is order-insensitive).
+
+    This wrapper is the plain semiring primitive kept for direct callers
+    and the property tests; everything on the solver hot path (including
+    ``core/distributed.py``) goes through ``repro.kernels.ops.minplus`` —
+    the tuned, fused-accumulate dispatch surface.
     """
     from repro.kernels import ops as _kops  # lazy: avoids import cycle
 
@@ -103,26 +115,9 @@ def minplus(x: jax.Array, y: jax.Array, *, row_chunk: Optional[int] = None) -> j
         from repro.kernels.minplus import minplus_pallas
 
         return minplus_pallas(x, y)
-    m, k = x.shape
-    k2, n = y.shape
-    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
-    yt = y.T
-    if row_chunk is None:
-        row_chunk = _auto_row_chunk(m, max(k, n))
-    if row_chunk >= m:
-        return jnp.min(x[:, None, :] + yt[None, :, :], axis=-1)
+    from repro.kernels.minplus_xla import minplus_xla
 
-    pad = (-m) % row_chunk
-    xp = jnp.pad(x, ((0, pad), (0, 0)), constant_values=INF)
-    nblk = xp.shape[0] // row_chunk
-    xb = xp.reshape(nblk, row_chunk, k)
-
-    def body(carry, xi):
-        zi = jnp.min(xi[:, None, :] + yt[None, :, :], axis=-1)
-        return carry, zi
-
-    _, zb = jax.lax.scan(body, None, xb)
-    return zb.reshape(nblk * row_chunk, n)[:m]
+    return minplus_xla(x, y, row_chunk=row_chunk)
 
 
 @partial(jax.jit, static_argnames=("row_chunk",))
@@ -147,44 +142,20 @@ def minplus_pred(
     ``k_offset`` / ``j_offset`` are the global node ids of x's column 0 and
     the output's column 0 — needed when x/y are tiles of a larger matrix
     (blocked FW panels, R-Kleene quadrants).  ``px`` has x's shape, ``py``
-    has y's shape.  Ties resolve to the smallest k (argmin convention).
+    has y's shape.  Ties resolve to the smallest k (argmin convention);
+    unreachable entries (Z = inf) get predecessor -1.
+
+    The derivation rule itself lives in ``repro.kernels.ops.pred_from_kstar``
+    — one shared semantics for the Pallas and XLA backends; solvers should
+    call ``repro.kernels.ops.minplus_pred`` (the tuned fused dispatch) and
+    this wrapper remains the plain-XLA semiring primitive.
     """
-    m, k = x.shape
-    _, n = y.shape
+    from repro.kernels.minplus_xla import minplus_argmin_xla
+    from repro.kernels.ops import pred_from_kstar
+
     assert px.shape == x.shape and py.shape == y.shape
-    if row_chunk is None:
-        row_chunk = _auto_row_chunk(m, max(k, n))
-
-    cols = jnp.arange(n)
-    yt = y.T
-
-    def rows(xi, pxi):
-        l = xi[:, None, :] + yt[None, :, :]         # (c, n, k) — k contiguous
-        kstar = jnp.argmin(l, axis=-1)              # (c, n); ties -> smallest k
-        z = jnp.take_along_axis(l, kstar[:, :, None], axis=-1)[:, :, 0]
-        p_via = py[kstar, cols[None, :]]            # (c, n)
-        p_own = jnp.take_along_axis(pxi, kstar, axis=1)
-        same_node = (kstar + k_offset) == (cols[None, :] + j_offset)
-        pz = jnp.where(same_node, p_own, p_via)
-        return z, pz
-
-    if row_chunk >= m:
-        return rows(x, px)
-
-    pad = (-m) % row_chunk
-    xp = jnp.pad(x, ((0, pad), (0, 0)), constant_values=INF)
-    pp = jnp.pad(px, ((0, pad), (0, 0)), constant_values=-1)
-    nblk = xp.shape[0] // row_chunk
-    xb = xp.reshape(nblk, row_chunk, k)
-    pb = pp.reshape(nblk, row_chunk, k)
-
-    def body(carry, inp):
-        xi, pxi = inp
-        return carry, rows(xi, pxi)
-
-    _, (zb, pzb) = jax.lax.scan(body, None, (xb, pb))
-    z = zb.reshape(-1, n)[:m]
-    pz = pzb.reshape(-1, n)[:m]
+    z, kstar = minplus_argmin_xla(x, y, row_chunk=row_chunk)
+    pz = pred_from_kstar(kstar, px, py, k_offset=k_offset, j_offset=j_offset)
     return z, pz
 
 

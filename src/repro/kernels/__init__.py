@@ -1,13 +1,28 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-``minplus``   — tiled tropical matmul (+ fused accumulate / fused argmin)
-``fw_block``  — in-VMEM Floyd-Warshall pivot-tile closure
+``minplus``       — tiled tropical matmul (+ fused accumulate / fused argmin;
+                    batched (G, ., .) operands run on one kernel grid)
+``minplus_pred``  — fused argmin + shared predecessor-derivation rule
+``fw_block``      — in-VMEM Floyd-Warshall pivot-tile closure
 
-Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` is the public
-dispatch layer (pallas on TPU / interpret for tests / XLA fallback on CPU).
+Each kernel ships a pure-jnp oracle in ``ref.py`` and a chunked runtime XLA
+fallback in ``minplus_xla.py``; ``ops.py`` is the public tuned dispatch
+layer (pallas on TPU / interpret for tests / XLA fallback on CPU), and
+``autotune.py`` persists measured block-size winners per (shape-bucket,
+dtype, backend).
 """
 
 from . import ops, ref
-from .ops import fw_block, fw_block_pred, minplus, minplus_argmin
+from .ops import (
+    fw_block,
+    fw_block_pred,
+    minplus,
+    minplus_argmin,
+    minplus_pred,
+    pred_from_kstar,
+)
 
-__all__ = ["ops", "ref", "minplus", "minplus_argmin", "fw_block", "fw_block_pred"]
+__all__ = [
+    "ops", "ref", "minplus", "minplus_argmin", "minplus_pred",
+    "pred_from_kstar", "fw_block", "fw_block_pred",
+]

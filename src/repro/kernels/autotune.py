@@ -1,0 +1,352 @@
+"""Persistent block-size autotuner for the fused min-plus dispatch surface.
+
+The paper's scaling wall is min-plus bandwidth, and the right tile/chunk
+sizes are hardware- and shape-dependent — so instead of guessing them, this
+module measures a small candidate lattice per (shape-bucket, dtype, backend)
+and persists the winners.  ``kernels.ops`` consults :func:`lookup` on every
+dispatch (a trace-time dict read — no measurement on the hot path); winners
+come from :func:`tune`, invoked by the benchmark harness, ``make
+bench-smoke``, and the serving warmup.
+
+Cache file (JSON, atomic tmp+rename writes, merged on save):
+
+    {"schema": 1,
+     "entries": {
+       "xla|float32|g0|m1024|k128|n1024": {
+          "params": {"row_chunk": 32},
+          "us": 41520.3,            # best candidate wall time (microseconds)
+          "lattice": 7,             # candidates measured
+          "source": "measured",
+          "measured_at": "2026-07-29T12:00:00"}}}
+
+Keys bucket every dimension to the next power of two (floor 8) so one
+measurement serves all nearby shapes.  Tuned parameters per backend:
+
+  * ``xla``                 — ``row_chunk`` (scan slice of the chunked
+                              fallback in ``kernels.minplus_xla``)
+  * ``pallas``/``interpret``— ``bm``, ``bn``, ``bk``, ``kc`` (Pallas grid
+                              block sizes / in-tile k chunk)
+
+Environment:
+
+  * ``REPRO_AUTOTUNE=0``      disabled: :func:`lookup` returns {} and
+                              :func:`tune` is a no-op (compiled-in defaults).
+  * unset / ``REPRO_AUTOTUNE=1``  :func:`lookup` consults the cache;
+                              :func:`tune` measures only on a cache miss and
+                              reuses persisted winners otherwise.
+  * ``REPRO_AUTOTUNE=force``  :func:`tune` re-measures and overwrites even
+                              when a cached winner exists.
+  * ``REPRO_AUTOTUNE_CACHE``  cache file path (default
+                              ``~/.cache/repro/autotune.json``).
+
+Note: solvers are jit-compiled and read the cache at trace time — tune
+before the first solver call of a given shape (the harnesses do), or new
+winners only take effect on the next retrace/process.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "mode",
+    "cache_path",
+    "bucket",
+    "key_for",
+    "lookup",
+    "candidates",
+    "tune",
+    "tune_blocked_fw",
+    "load_entries",
+    "touched_entries",
+    "measure",
+]
+
+SCHEMA = 1
+_PALLAS_KEYS = ("bm", "bn", "bk", "kc")
+_XLA_KEYS = ("row_chunk", "k_chunk")
+
+# memoized parse of the cache file, invalidated by mtime
+_memo = {"path": None, "mtime": None, "entries": {}}
+
+# cache keys this process actually consulted (hit) or tuned — lets harnesses
+# report exactly the tiles a run used instead of the whole machine-wide cache
+_touched: set = set()
+
+
+def mode() -> str:
+    """Autotune behaviour: 'off' | 'on' | 'force' (see module docstring)."""
+    env = os.environ.get("REPRO_AUTOTUNE", "1").strip().lower()
+    if env in ("0", "off", "false", "no"):
+        return "off"
+    if env == "force":
+        return "force"
+    return "on"
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE", "")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def bucket(v: int) -> int:
+    """Shape bucket: next power of two, floor 8."""
+    p = 8
+    while p < v:
+        p *= 2
+    return p
+
+
+def key_for(backend: str, dtype, m: int, k: int, n: int, g: int = 0) -> str:
+    name = jnp.dtype(dtype).name
+    gb = bucket(g) if g else 0
+    return f"{backend}|{name}|g{gb}|m{bucket(m)}|k{bucket(k)}|n{bucket(n)}"
+
+
+def load_entries(*, reload: bool = False) -> Dict[str, dict]:
+    """Parsed cache entries (mtime-memoized; {} on absent/corrupt file)."""
+    p = cache_path()
+    try:
+        st = os.stat(p)
+    except OSError:
+        _memo.update(path=str(p), mtime=None, entries={})
+        return {}
+    if (
+        not reload
+        and _memo["path"] == str(p)
+        and _memo["mtime"] == st.st_mtime_ns
+    ):
+        return _memo["entries"]
+    try:
+        data = json.loads(Path(p).read_text())
+        entries = data.get("entries", {}) if data.get("schema") == SCHEMA else {}
+        if not isinstance(entries, dict):
+            entries = {}
+    except Exception:
+        entries = {}
+    _memo.update(path=str(p), mtime=st.st_mtime_ns, entries=entries)
+    return entries
+
+
+def _save(new_entries: Dict[str, dict]) -> None:
+    """Merge ``new_entries`` into the cache file atomically."""
+    p = cache_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    entries = dict(load_entries(reload=True))
+    entries.update(new_entries)
+    payload = json.dumps({"schema": SCHEMA, "entries": entries}, indent=1,
+                         sort_keys=True)
+    fd, tmp = tempfile.mkstemp(dir=str(p.parent), prefix=".autotune-")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(payload)
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    _memo.update(path=str(p), mtime=None, entries={})  # force re-read
+
+
+def _filter(backend: str, params: dict) -> dict:
+    keys = _XLA_KEYS if backend == "xla" else _PALLAS_KEYS
+    return {k: int(v) for k, v in params.items() if k in keys}
+
+
+def lookup(backend: str, dtype, m: int, k: int, n: int, g: int = 0) -> dict:
+    """Winner params for a dispatch site, or {} (miss / disabled).
+
+    Falls back to the unbatched (g=0) bucket when no batched entry exists —
+    the per-slice working set is what the chunk sizes bound.
+    """
+    if mode() == "off":
+        return {}
+    entries = load_entries()
+    for gq in ((g, 0) if g else (0,)):
+        key = key_for(backend, dtype, m, k, n, g=gq)
+        e = entries.get(key)
+        if e and isinstance(e.get("params"), dict):
+            _touched.add(key)
+            return _filter(backend, e["params"])
+    return {}
+
+
+def touched_entries() -> Dict[str, dict]:
+    """{key: params} for the cache entries this process consulted or tuned."""
+    entries = load_entries()
+    return {
+        key: entries[key].get("params")
+        for key in sorted(_touched)
+        if key in entries
+    }
+
+
+def candidates(backend: str, m: int, k: int, n: int) -> List[dict]:
+    """The candidate lattice measured per shape bucket (kept deliberately
+    small: dispatch tuning should cost seconds, not minutes)."""
+    if backend == "xla":
+        mb, kb = bucket(m), bucket(k)
+        out = [
+            {"row_chunk": rc, "k_chunk": 0}          # single-pass row scan
+            for rc in (4, 16, 64)
+            if rc <= mb
+        ] or [{"row_chunk": 4, "k_chunk": 0}]
+        out += [
+            {"row_chunk": rc, "k_chunk": kc}         # two-level chunking
+            for rc in (16, 32, 64, 128)
+            for kc in (16, 32)
+            if rc <= mb and kc < kb
+        ]
+        return out
+    # Pallas lattice: vreg-aligned blocks only; bk always a multiple of kc.
+    from .minplus import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, DEFAULT_KC
+
+    out, seen = [], set()
+    for bm in (64, 128, 256):
+        for bn in (128, 256):
+            for bk in (256, 512):
+                for kc in (8, 16):
+                    cand = (min(bm, bucket(m)), min(bn, max(bucket(n), 128)),
+                            min(bk, bucket(k)), kc)
+                    if cand[2] % kc or cand in seen:
+                        continue
+                    seen.add(cand)
+                    out.append(dict(zip(_PALLAS_KEYS, cand)))
+    return out or [dict(zip(_PALLAS_KEYS,
+                            (DEFAULT_BM, DEFAULT_BN, DEFAULT_BK, DEFAULT_KC)))]
+
+
+def measure(fn, reps: int) -> float:
+    """Best-of-reps wall time in microseconds (first call warms/compiles).
+
+    The one timing policy shared by the tuner and the benchmark harnesses —
+    keep them on the same helper so winners and headlines stay comparable."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _inputs(m: int, k: int, n: int, g: int, dtype, seed: int = 0):
+    rng = np.random.default_rng(seed)
+
+    def mk(*shape):
+        a = rng.uniform(1, 100, size=shape).astype(np.float32)
+        a = np.where(rng.uniform(size=shape) < 0.3, np.inf, a)
+        return jnp.asarray(a, dtype)
+
+    if g:
+        return mk(g, m, k), mk(g, k, n), mk(g, m, n)
+    return mk(m, k), mk(k, n), mk(m, n)
+
+
+def tune(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    g: int = 0,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    force: Optional[bool] = None,
+) -> dict:
+    """Measure the candidate lattice for one shape bucket and persist the
+    winner.  Returns the cache entry; ``entry["source"]`` is ``"cache"``
+    when a persisted winner was reused without re-measurement,
+    ``"measured"`` after a fresh sweep, ``"disabled"`` under
+    ``REPRO_AUTOTUNE=0``.
+    """
+    from . import ops
+    from .minplus import minplus_pallas
+    from .minplus_xla import minplus_xla
+
+    b = backend or ops.backend()
+    md = mode()
+    if md == "off":
+        return {"params": {}, "source": "disabled"}
+    key = key_for(b, dtype, m, k, n, g=g)
+    _touched.add(key)
+    refresh = (md == "force") if force is None else force
+    if not refresh:
+        cached = load_entries().get(key)
+        if cached and isinstance(cached.get("params"), dict):
+            out = dict(cached)
+            out["params"] = _filter(b, cached["params"])
+            out["source"] = "cache"
+            return out
+
+    mb, kb, nb = bucket(m), bucket(k), bucket(n)
+    gb = min(bucket(g), 8) if g else 0       # cap batch for measurement cost
+    x, y, a = _inputs(mb, kb, nb, gb, dtype)
+
+    def make(params):
+        if b == "xla":
+            rc, kc = params["row_chunk"], params.get("k_chunk")
+            if gb:
+                return lambda: jax.vmap(
+                    lambda xx, yy, aa: minplus_xla(
+                        xx, yy, aa, row_chunk=rc, k_chunk=kc
+                    )
+                )(x, y, a)
+            return lambda: minplus_xla(x, y, a, row_chunk=rc, k_chunk=kc)
+        return lambda: minplus_pallas(
+            x, y, a, accumulate=True, interpret=(b == "interpret"), **params
+        )
+
+    best_params, best_us = None, float("inf")
+    cands = candidates(b, mb, kb, nb)
+    for params in cands:
+        us = measure(make(params), reps)
+        if us < best_us:
+            best_params, best_us = params, us
+    entry = {
+        "params": best_params,
+        "us": best_us,
+        "lattice": len(cands),
+        "source": "measured",
+        "measured_at": datetime.datetime.now().isoformat(timespec="seconds"),
+    }
+    _save({key: entry})
+    return entry
+
+
+def tune_blocked_fw(
+    n: int,
+    block_size: int,
+    *,
+    g: int = 0,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    reps: int = 2,
+) -> Dict[str, dict]:
+    """Tune the three panel-product shapes one blocked-FW pivot step hits:
+    row panel (B,B)x(B,N), col panel (N,B)x(B,B), and the fused phase-3
+    (N,B)x(B,N) accumulate.  Returns {shape_key: entry}."""
+    b = min(block_size, n)
+    shapes = {
+        "row_panel": (b, b, n),
+        "col_panel": (n, b, b),
+        "phase3": (n, b, n),
+    }
+    return {
+        name: tune(m, k, nn, g=g, dtype=dtype, backend=backend, reps=reps)
+        for name, (m, k, nn) in shapes.items()
+    }

@@ -10,9 +10,15 @@ the paper's n^3 wall.
 
 (min, +) has no multiply-accumulate, so this runs on the VPU (8x128 vector
 unit), not the 128x128 MXU; block shapes are multiples of the fp32 (8, 128)
-vreg tile.  Grid dim 2 (k) is "arbitrary" (sequential) — the output block is
+vreg tile.  The k grid dim is "arbitrary" (sequential) — the output block is
 revisited and accumulated across k steps, which TPU guarantees for the
 innermost grid dim.
+
+Batched dispatch: (G, m, k) x (G, k, n) operands add a *leading* batch grid
+dimension — the whole multi-graph panel product is one ``pallas_call``
+(grid (G, M/bm, N/bn, K/bk)), not a ``vmap`` of G kernel launches.  That is
+what lets ``blocked_fw_batch`` drive all G graphs per pivot step with a
+single dispatch.
 
 Variants (one kernel body, two flags):
   * fused accumulate  — Z = min(A, X (x) Y): phase-3 blocked-FW / R-Kleene
@@ -22,6 +28,8 @@ Variants (one kernel body, two flags):
     accumulate variant).  Feeds predecessor propagation.
 
 Oracles: ``repro.kernels.ref``.  Public wrappers: ``repro.kernels.ops``.
+Default block sizes below are the compiled-in fallback; the measured
+winners live in the autotune cache (``repro.kernels.autotune``).
 """
 
 from __future__ import annotations
@@ -79,68 +87,97 @@ def _minplus_body(x, y, kc: int, k_base, acc, idx):
     return out if track else (out, None)
 
 
-def _kernel(x_ref, y_ref, z_ref, *, kc: int, bk: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _ld(ref):
+    """Load a block, squeezing the leading singleton batch dim if present."""
+    v = ref[...]
+    return v[0] if v.ndim == 3 else v
+
+
+def _st(ref, val):
+    ref[...] = val[None] if len(ref.shape) == 3 else val
+
+
+def _kernel(x_ref, y_ref, z_ref, *, kc: int, bk: int, k_axis: int):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         z_ref[...] = jnp.full_like(z_ref[...], INF)
 
-    k_base = pl.program_id(2) * bk
-    acc, _ = _minplus_body(x_ref[...], y_ref[...], kc, k_base, z_ref[...], None)
-    z_ref[...] = acc
+    k_base = pl.program_id(k_axis) * bk
+    acc, _ = _minplus_body(_ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), None)
+    _st(z_ref, acc)
 
 
-def _kernel_acc(a_ref, x_ref, y_ref, z_ref, *, kc: int, bk: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _kernel_acc(a_ref, x_ref, y_ref, z_ref, *, kc: int, bk: int, k_axis: int):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         z_ref[...] = a_ref[...]
 
-    k_base = pl.program_id(2) * bk
-    acc, _ = _minplus_body(x_ref[...], y_ref[...], kc, k_base, z_ref[...], None)
-    z_ref[...] = acc
+    k_base = pl.program_id(k_axis) * bk
+    acc, _ = _minplus_body(_ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), None)
+    _st(z_ref, acc)
 
 
-def _kernel_argmin(x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _kernel_argmin(x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, k_axis: int):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         z_ref[...] = jnp.full_like(z_ref[...], INF)
         i_ref[...] = jnp.full_like(i_ref[...], -1)
 
-    k_base = pl.program_id(2) * bk
+    k_base = pl.program_id(k_axis) * bk
     acc, idx = _minplus_body(
-        x_ref[...], y_ref[...], kc, k_base, z_ref[...], i_ref[...]
+        _ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), _ld(i_ref)
     )
-    z_ref[...] = acc
-    i_ref[...] = idx
+    _st(z_ref, acc)
+    _st(i_ref, idx)
 
 
-def _kernel_acc_argmin(a_ref, x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _kernel_acc_argmin(
+    a_ref, x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, k_axis: int
+):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         z_ref[...] = a_ref[...]
         i_ref[...] = jnp.full_like(i_ref[...], -1)
 
-    k_base = pl.program_id(2) * bk
+    k_base = pl.program_id(k_axis) * bk
     acc, idx = _minplus_body(
-        x_ref[...], y_ref[...], kc, k_base, z_ref[...], i_ref[...]
+        _ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), _ld(i_ref)
     )
-    z_ref[...] = acc
-    i_ref[...] = idx
+    _st(z_ref, acc)
+    _st(i_ref, idx)
 
 
 def _pad(arr, m0, m1, value):
-    p0 = (-arr.shape[0]) % m0
-    p1 = (-arr.shape[1]) % m1
+    """Pad the last two dims up to multiples of (m0, m1)."""
+    p0 = (-arr.shape[-2]) % m0
+    p1 = (-arr.shape[-1]) % m1
     if p0 == 0 and p1 == 0:
         return arr
-    return jnp.pad(arr, ((0, p0), (0, p1)), constant_values=value)
+    cfg = [(0, 0)] * (arr.ndim - 2) + [(0, p0), (0, p1)]
+    return jnp.pad(arr, cfg, constant_values=value)
+
+
+def _specs(batched: bool, bm: int, bn: int, bk: int):
+    if batched:
+        return (
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, kk: (g, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, kk: (g, kk, j)),
+            pl.BlockSpec((1, bm, bn), lambda g, i, j, kk: (g, i, j)),
+        )
+    return (
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+    )
 
 
 def _grid_call(kernel, grid, in_specs, out_specs, out_shape, interpret):
     params = {}
     if not interpret:
-        # m, n blocks are independent; k must stay sequential (accumulation).
+        # batch/m/n blocks are independent; k must stay sequential
+        # (accumulation) and is always the innermost grid dim.
         params["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=("parallel",) * (len(grid) - 1) + ("arbitrary",)
         )
     return pl.pallas_call(
         kernel,
@@ -151,6 +188,30 @@ def _grid_call(kernel, grid, in_specs, out_specs, out_shape, interpret):
         interpret=interpret,
         **params,
     )
+
+
+def _layout(x, y, bm, bn, bk, kc):
+    """Shared shape/grid/spec derivation for both kernel wrappers."""
+    assert x.ndim in (2, 3) and y.ndim == x.ndim, (x.shape, y.shape)
+    batched = x.ndim == 3
+    if batched:
+        assert x.shape[0] == y.shape[0], (x.shape, y.shape)
+    m, k = x.shape[-2], x.shape[-1]
+    k2, n = y.shape[-2], y.shape[-1]
+    assert k == k2, (x.shape, y.shape)
+    bm, bn = min(bm, _rup(m, 8)), min(bn, _rup(n, 128))
+    bk = min(_rup(bk, kc), _rup(k, kc))
+    xp = _pad(x, bm, bk, INF)
+    yp = _pad(y, bk, bn, INF)
+    mp, kp = xp.shape[-2], xp.shape[-1]
+    np_ = yp.shape[-1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out_dims = (mp, np_)
+    if batched:
+        grid = (x.shape[0],) + grid
+        out_dims = (x.shape[0],) + out_dims
+    x_spec, y_spec, z_spec = _specs(batched, bm, bn, bk)
+    return batched, m, n, xp, yp, grid, x_spec, y_spec, z_spec, out_dims
 
 
 @functools.partial(
@@ -172,38 +233,31 @@ def minplus_pallas(
     """Z = min_k x[:,k]+y[k,:]  (optionally fused Z = min(a, ...)).
 
     Shapes need not be tile-aligned: panels are padded with +inf (inert under
-    (min,+)) and the result is sliced back.
+    (min,+)) and the result is sliced back.  (G, ., .) operands run the whole
+    batch on one kernel grid (leading batch dimension).
     """
-    m, k = x.shape
-    k2, n = y.shape
-    assert k == k2, (x.shape, y.shape)
-    bm, bn, bk = min(bm, _rup(m, 8)), min(bn, _rup(n, 128)), min(bk, _rup(k, kc))
-    xp = _pad(x, bm, bk, INF)
-    yp = _pad(y, bk, bn, INF)
-    mp, kp = xp.shape
-    np_ = yp.shape[1]
-    grid = (mp // bm, np_ // bn, kp // bk)
-
-    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
-    y_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-    z_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
-    out_shape = jax.ShapeDtypeStruct((mp, np_), x.dtype)
+    batched, m, n, xp, yp, grid, x_spec, y_spec, z_spec, out_dims = _layout(
+        x, y, bm, bn, bk, kc
+    )
+    bk_eff = xp.shape[-1] // grid[-1]
+    k_axis = len(grid) - 1
+    out_shape = jax.ShapeDtypeStruct(out_dims, x.dtype)
 
     if accumulate:
-        assert a is not None and a.shape == (m, n)
-        ap = _pad(a, bm, bn, INF)
+        assert a is not None and a.shape[-2:] == (m, n)
+        ap = _pad(a, z_spec.block_shape[-2], z_spec.block_shape[-1], INF)
         fn = _grid_call(
-            functools.partial(_kernel_acc, kc=kc, bk=bk, nk=grid[2]),
+            functools.partial(_kernel_acc, kc=kc, bk=bk_eff, k_axis=k_axis),
             grid, [z_spec, x_spec, y_spec], z_spec, out_shape, interpret,
         )
         zp = fn(ap, xp, yp)
     else:
         fn = _grid_call(
-            functools.partial(_kernel, kc=kc, bk=bk, nk=grid[2]),
+            functools.partial(_kernel, kc=kc, bk=bk_eff, k_axis=k_axis),
             grid, [x_spec, y_spec], z_spec, out_shape, interpret,
         )
         zp = fn(xp, yp)
-    return zp[:m, :n]
+    return zp[..., :m, :n]
 
 
 @functools.partial(
@@ -225,48 +279,38 @@ def minplus_argmin_pallas(
     """(Z, K*) with fused running argmin (global k ids; -1 = no winner).
 
     Semantics match ``ref.minplus_argmin_ref`` / ``ref.minplus_acc_argmin_ref``:
-    without ``accumulate`` ties resolve to the smallest k; with it, strict
+    without ``accumulate`` ties resolve to the smallest k (the running
+    ``cand < acc`` comparison is strict, so the first — smallest-k — winner
+    is kept, and a fully-unreachable entry never improves on the +inf init
+    and keeps K* = -1, matching the oracle's isinf mask); with it, strict
     improvement over ``a`` is required (K* = -1 where ``a`` was kept).
+    Batched (G, ., .) operands run on one kernel grid.
     """
-    m, k = x.shape
-    k2, n = y.shape
-    assert k == k2, (x.shape, y.shape)
-    bm, bn, bk = min(bm, _rup(m, 8)), min(bn, _rup(n, 128)), min(bk, _rup(k, kc))
-    xp = _pad(x, bm, bk, INF)
-    yp = _pad(y, bk, bn, INF)
-    mp, kp = xp.shape
-    np_ = yp.shape[1]
-    grid = (mp // bm, np_ // bn, kp // bk)
-
-    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
-    y_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-    z_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    batched, m, n, xp, yp, grid, x_spec, y_spec, z_spec, out_dims = _layout(
+        x, y, bm, bn, bk, kc
+    )
+    bk_eff = xp.shape[-1] // grid[-1]
+    k_axis = len(grid) - 1
     out_shape = (
-        jax.ShapeDtypeStruct((mp, np_), x.dtype),
-        jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        jax.ShapeDtypeStruct(out_dims, x.dtype),
+        jax.ShapeDtypeStruct(out_dims, jnp.int32),
     )
 
     if accumulate:
-        assert a is not None and a.shape == (m, n)
-        ap = _pad(a, bm, bn, INF)
+        assert a is not None and a.shape[-2:] == (m, n)
+        ap = _pad(a, z_spec.block_shape[-2], z_spec.block_shape[-1], INF)
         fn = _grid_call(
-            functools.partial(_kernel_acc_argmin, kc=kc, bk=bk, nk=grid[2]),
+            functools.partial(_kernel_acc_argmin, kc=kc, bk=bk_eff, k_axis=k_axis),
             grid, [z_spec, x_spec, y_spec], (z_spec, z_spec), out_shape, interpret,
         )
         zp, ip = fn(ap, xp, yp)
     else:
         fn = _grid_call(
-            functools.partial(_kernel_argmin, kc=kc, bk=bk, nk=grid[2]),
+            functools.partial(_kernel_argmin, kc=kc, bk=bk_eff, k_axis=k_axis),
             grid, [x_spec, y_spec], (z_spec, z_spec), out_shape, interpret,
         )
         zp, ip = fn(xp, yp)
-    z, i = zp[:m, :n], ip[:m, :n]
-    if not accumulate:
-        # padding-inertness: a fully-unreachable row/col keeps K* = -1, but the
-        # plain variant defines K* by argmin (smallest k) even at inf — only
-        # all-inf entries give -1, matching the oracle's isinf mask.
-        pass
-    return z, i
+    return zp[..., :m, :n], ip[..., :m, :n]
 
 
 def _rup(v: int, m: int) -> int:

@@ -1,0 +1,224 @@
+"""Chunked pure-XLA fallbacks for the fused min-plus kernels.
+
+Semantics contracts are the oracles in ``repro.kernels.ref``; these are the
+*runtime* fallbacks (CPU/GPU hosts without the Pallas path) and therefore
+memory-bounded, with the same two-level chunking as the Pallas kernel:
+
+  * rows of ``x`` are scanned ``row_chunk`` at a time, and
+  * the contraction dim is folded ``k_chunk`` at a time into a resident
+    (row_chunk, n) accumulator,
+
+so the live broadcast is (row_chunk, n, k_chunk), laid out with k as the
+*last* (contiguous) axis — measured ~3x over the single-pass row scan for
+the blocked-FW panel shapes on CPU (the reduce vectorizes and the
+accumulator stays cache-resident).  ``k_chunk=0`` forces the single-pass
+row scan (one reduction over the full k axis per row block).
+
+Both entry points fuse the accumulate operand ``a`` into the same pass —
+``Z = min(A, X (x) Y)`` never takes a second full-matrix sweep — and the
+argmin variant carries provenance (K*) through the identical chunking:
+k-chunks are folded in ascending order with strict improvement, so ties
+resolve to the smallest k exactly like the oracle and the Pallas kernel,
+and the XLA and Pallas backends are bit-exact on the same inputs (min over
+the same candidate set; fp min is order-insensitive).
+
+Chunk sizes: explicit arguments win; otherwise a fixed heuristic applies
+(``k_chunk=32`` for k > 32, ``row_chunk=32``; single-pass sizing via
+``semiring.auto_row_chunk`` otherwise).  The autotuner
+(``repro.kernels.autotune``) overrides both per shape bucket via
+``repro.kernels.ops`` dispatch.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+__all__ = ["minplus_xla", "minplus_argmin_xla"]
+
+
+def _auto(m: int, n: int, k: int, row_chunk, k_chunk) -> Tuple[int, int]:
+    """Resolve chunk defaults; k_chunk 0 = single pass over the full k."""
+    if k_chunk is None:
+        k_chunk = 32 if k > 32 else 0
+    if k_chunk >= k:
+        k_chunk = 0
+    if row_chunk is None:
+        if k_chunk:
+            row_chunk = min(m, 32)
+        else:
+            from repro.core.semiring import auto_row_chunk  # lazy: no cycle
+
+            row_chunk = auto_row_chunk(m, n, k)
+    return int(row_chunk), int(k_chunk)
+
+
+def _row_blocks(x, a, m: int, k: int, n: int, rc: int, kc: int):
+    """Pad rows (and k, when k-chunked) with +inf and reshape into blocks.
+
+    ``ab`` is None when there is no accumulate operand — callers scan over
+    ``xb`` alone rather than streaming a redundant +inf accumulator."""
+    pad = (-m) % rc
+    kp = k + ((-k) % kc if kc else 0)
+    xp = jnp.pad(x, ((0, pad), (0, kp - k)), constant_values=INF)
+    nblk = xp.shape[0] // rc
+    xb = xp.reshape(nblk, rc, kp)
+    ab = None
+    if a is not None:
+        ab = jnp.pad(a, ((0, pad), (0, 0)), constant_values=INF).reshape(
+            nblk, rc, n
+        )
+    return xb, ab, kp
+
+
+@partial(jax.jit, static_argnames=("row_chunk", "k_chunk"))
+def minplus_xla(
+    x: jax.Array,
+    y: jax.Array,
+    a: Optional[jax.Array] = None,
+    *,
+    row_chunk: Optional[int] = None,
+    k_chunk: Optional[int] = None,
+) -> jax.Array:
+    """Z[i,j] = min_k x[i,k]+y[k,:]; fused Z = min(a, .) when ``a`` is given."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    if a is not None:
+        assert a.shape == (m, n), (a.shape, m, n)
+    rc, kc = _auto(m, n, k, row_chunk, k_chunk)
+    yt = y.T
+
+    if not kc and rc >= m:
+        z = jnp.min(x[:, None, :] + yt[None, :, :], axis=-1)
+        return z if a is None else jnp.minimum(a, z)
+
+    rc = min(rc, m)
+    xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc)
+    ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=INF)
+
+    if kc:
+        def fold(xi, acc0):                            # (rc, kp) -> (rc, n)
+            def kstep(i, acc):
+                xs = jax.lax.dynamic_slice(xi, (0, i * kc), (rc, kc))
+                ys = jax.lax.dynamic_slice(ytp, (0, i * kc), (n, kc))
+                cand = jnp.min(xs[:, None, :] + ys[None, :, :], axis=-1)
+                return jnp.minimum(acc, cand)
+
+            return jax.lax.fori_loop(0, kp // kc, kstep, acc0)
+
+        if a is None:
+            def row(carry, xi):
+                return carry, fold(xi, jnp.full((rc, n), INF, x.dtype))
+
+            _, zb = jax.lax.scan(row, None, xb)
+        else:
+            def row(carry, inp):
+                return carry, fold(*inp)
+
+            _, zb = jax.lax.scan(row, None, (xb, ab))
+    elif a is None:
+        def row(carry, xi):
+            return carry, jnp.min(xi[:, None, :] + ytp[None, :, :], axis=-1)
+
+        _, zb = jax.lax.scan(row, None, xb)
+    else:
+        def row(carry, inp):
+            xi, ai = inp
+            return carry, jnp.minimum(
+                ai, jnp.min(xi[:, None, :] + ytp[None, :, :], axis=-1)
+            )
+
+        _, zb = jax.lax.scan(row, None, (xb, ab))
+    return zb.reshape(-1, n)[:m]
+
+
+@partial(jax.jit, static_argnames=("row_chunk", "k_chunk"))
+def minplus_argmin_xla(
+    x: jax.Array,
+    y: jax.Array,
+    a: Optional[jax.Array] = None,
+    *,
+    row_chunk: Optional[int] = None,
+    k_chunk: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(Z, K*) matching ``ref.minplus_argmin_ref`` / ``ref.minplus_acc_argmin_ref``.
+
+    Without ``a``: K* is the (smallest) argmin k, -1 where Z is inf.  With
+    ``a``: strict improvement over ``a`` is required; K* = -1 where ``a``
+    was kept (ties keep ``a``).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    if a is not None:
+        assert a.shape == (m, n), (a.shape, m, n)
+    rc, kc = _auto(m, n, k, row_chunk, k_chunk)
+    yt = y.T
+    rc = min(rc, m)
+    xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc)
+    ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=INF)
+    accumulate = a is not None
+
+    def finish(z, ks):
+        # non-accumulate single-pass: argmin over the full k, -1 only at inf
+        if accumulate:
+            return z, ks
+        return z, jnp.where(jnp.isinf(z), jnp.int32(-1), ks)
+
+    if kc:
+        def fold(xi, acc0):
+            def kstep(i, st):
+                acc, idx = st
+                xs = jax.lax.dynamic_slice(xi, (0, i * kc), (rc, kc))
+                ys = jax.lax.dynamic_slice(ytp, (0, i * kc), (n, kc))
+                l = xs[:, None, :] + ys[None, :, :]     # (rc, n, kc)
+                cand = jnp.min(l, axis=-1)
+                ka = jnp.argmin(l, axis=-1).astype(jnp.int32) + i * kc
+                better = cand < acc                      # strict: ties keep
+                return (
+                    jnp.where(better, cand, acc),        # earlier (smaller) k
+                    jnp.where(better, ka, idx),
+                )
+
+            idx0 = jnp.full((rc, n), -1, jnp.int32)
+            return jax.lax.fori_loop(0, kp // kc, kstep, (acc0, idx0))
+
+        if accumulate:
+            def row(carry, inp):
+                return carry, fold(*inp)
+
+            _, (zb, kb) = jax.lax.scan(row, None, (xb, ab))
+        else:
+            def row(carry, xi):
+                return carry, fold(xi, jnp.full((rc, n), INF, x.dtype))
+
+            _, (zb, kb) = jax.lax.scan(row, None, xb)
+    elif accumulate:
+        def row(carry, inp):
+            xi, ai = inp
+            l = xi[:, None, :] + ytp[None, :, :]
+            z = jnp.min(l, axis=-1)
+            ks = jnp.argmin(l, axis=-1).astype(jnp.int32)
+            better = z < ai
+            return carry, (
+                jnp.where(better, z, ai),
+                jnp.where(better, ks, jnp.int32(-1)),
+            )
+
+        _, (zb, kb) = jax.lax.scan(row, None, (xb, ab))
+    else:
+        def row(carry, xi):
+            l = xi[:, None, :] + ytp[None, :, :]
+            return carry, (
+                jnp.min(l, axis=-1),
+                jnp.argmin(l, axis=-1).astype(jnp.int32),
+            )
+
+        _, (zb, kb) = jax.lax.scan(row, None, xb)
+    return finish(zb.reshape(-1, n)[:m], kb.reshape(-1, n)[:m])

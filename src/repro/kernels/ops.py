@@ -1,14 +1,38 @@
-"""Public jit'd wrappers for the Pallas kernels, with backend dispatch.
+"""Tuned public dispatch for the fused min-plus / FW-block kernel surface.
+
+Every solver in ``repro.core`` routes its panel products through this module
+— it is the single seam behind which backends (TPU Pallas, interpret-mode
+Pallas, chunked XLA fallback, and later GPU/sharded paths) drop in.
+
+The tuned-dispatch contract:
+
+  * **Fused accumulate.**  ``minplus(x, y, a)`` computes
+    ``Z = min(A, X (x) Y)`` in one pass; solvers never call an unfused
+    product followed by a separate elementwise ``jnp.minimum``.
+  * **Fused provenance.**  ``minplus_argmin`` carries the winning global k
+    (K* = -1 where nothing improved / nothing is reachable);
+    ``minplus_pred`` derives predecessor matrices from K* via
+    :func:`pred_from_kstar` — one derivation rule shared by the Pallas and
+    XLA backends (lifted from the old ``semiring.minplus_pred``).
+  * **Batched lowering.**  (G, ., .) operands are one batched kernel
+    dispatch (leading grid dimension on the Pallas path, a single vmapped
+    XLA program on the fallback) — never a Python/vmap loop of
+    ``pallas_call``.
+  * **Self-tuning block sizes.**  Explicit ``**block_kw`` wins; otherwise
+    the persistent autotune cache (``repro.kernels.autotune``,
+    ``REPRO_AUTOTUNE*`` env vars) is consulted per (shape-bucket, dtype,
+    backend); otherwise compiled-in defaults apply.  The consult is a
+    trace-time dict read — no measurement ever runs on the dispatch path.
 
 On TPU the Pallas kernels are the hot path.  On this CPU container the
 kernels are validated in ``interpret=True`` mode (Python-level execution) by
-the test suite, while runtime callers get the pure-XLA fallback from
-``repro.kernels.ref`` — same semantics, fast on CPU, and the thing the
-dry-run lowers (so the roofline reads XLA HLO; DESIGN.md records that the
-kernel replaces that HLO region on real TPUs).
+the test suite, while runtime callers get the chunked pure-XLA fallback from
+``repro.kernels.minplus_xla`` — same semantics (bit-exact, see the parity
+suite), fast on CPU, and the thing the dry-run lowers.
 
-Backend selection:
-  * default          — pallas on TPU, XLA fallback elsewhere
+Backend selection (read at trace time — jit'd callers retrace only on shape
+change, so set the env before first use):
+  * default                  — pallas on TPU, XLA fallback elsewhere
   * REPRO_KERNELS=interpret  — force pallas interpret mode (kernel tests)
   * REPRO_KERNELS=xla        — force the fallback everywhere
 """
@@ -24,8 +48,17 @@ import jax.numpy as jnp
 from . import ref
 from .fw_block import fw_block_pallas, fw_block_pred_pallas
 from .minplus import minplus_argmin_pallas, minplus_pallas
+from .minplus_xla import minplus_argmin_xla, minplus_xla
 
-__all__ = ["minplus", "minplus_argmin", "fw_block", "fw_block_pred", "backend"]
+__all__ = [
+    "minplus",
+    "minplus_argmin",
+    "minplus_pred",
+    "pred_from_kstar",
+    "fw_block",
+    "fw_block_pred",
+    "backend",
+]
 
 
 def backend() -> str:
@@ -35,15 +68,43 @@ def backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def _dims(x, y):
+    batched = x.ndim == 3
+    g = x.shape[0] if batched else 0
+    return batched, g, x.shape[-2], x.shape[-1], y.shape[-1]
+
+
+def _tuned(b: str, x, y, block_kw: dict) -> dict:
+    """Block params for this dispatch: explicit kwargs win, else the
+    autotune cache; either way filtered to the active backend's knobs."""
+    if not block_kw:
+        from . import autotune  # lazy: cheap, and keeps import order trivial
+
+        batched, g, m, k, n = _dims(x, y)
+        block_kw = autotune.lookup(b, x.dtype, m, k, n, g=g)
+    keys = ("row_chunk", "k_chunk") if b == "xla" else ("bm", "bn", "bk", "kc")
+    return {k_: v for k_, v in block_kw.items() if k_ in keys}
+
+
 def minplus(
     x: jax.Array, y: jax.Array, a: Optional[jax.Array] = None, **block_kw
 ) -> jax.Array:
-    """Z = min_k x[:,k]+y[k,:]; fused Z = min(a, .) when ``a`` is given."""
+    """Z = min_k x[:,k]+y[k,:]; fused Z = min(a, .) when ``a`` is given.
+
+    2D or batched (G, ., .) operands; block sizes from ``block_kw`` or the
+    autotune cache (see module docstring).
+    """
     b = backend()
+    kw = _tuned(b, x, y, block_kw)
     if b == "xla":
-        return ref.minplus_acc_ref(a, x, y) if a is not None else ref.minplus_ref(x, y)
+        rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
+        if x.ndim == 3:
+            return jax.vmap(
+                lambda xx, yy, aa: minplus_xla(xx, yy, aa, row_chunk=rc, k_chunk=kc)
+            )(x, y, a)
+        return minplus_xla(x, y, a, row_chunk=rc, k_chunk=kc)
     return minplus_pallas(
-        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **block_kw
+        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **kw
     )
 
 
@@ -52,13 +113,86 @@ def minplus_argmin(
 ) -> Tuple[jax.Array, jax.Array]:
     """(Z, K*) with fused global-k argmin (see ref for tie/-1 semantics)."""
     b = backend()
+    kw = _tuned(b, x, y, block_kw)
     if b == "xla":
-        if a is not None:
-            return ref.minplus_acc_argmin_ref(a, x, y)
-        return ref.minplus_argmin_ref(x, y)
+        rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
+        if x.ndim == 3:
+            return jax.vmap(
+                lambda xx, yy, aa: minplus_argmin_xla(
+                    xx, yy, aa, row_chunk=rc, k_chunk=kc
+                )
+            )(x, y, a)
+        return minplus_argmin_xla(x, y, a, row_chunk=rc, k_chunk=kc)
     return minplus_argmin_pallas(
-        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **block_kw
+        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **kw
     )
+
+
+def pred_from_kstar(
+    kstar: jax.Array,
+    px: jax.Array,
+    py: jax.Array,
+    *,
+    k_offset=0,
+    j_offset=0,
+    fallback: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Derive predecessors from argmin winners — the one shared rule.
+
+    ``k* = argmin_k x[i,k] + y[k,j]`` means the combined path is
+    i --(x-path)--> k* --(y-path)--> j, so the predecessor of j is
+    ``py[k*, j]`` — *unless* the y-path is empty (global index of k* equals
+    global index of j, i.e. y contributed its tropical-diagonal zero), in
+    which case it is x's own last hop ``px[i, k*]``.
+
+    ``k_offset`` / ``j_offset`` are the global node ids of x's column 0 and
+    the output's column 0 (blocked-FW panels / R-Kleene quadrants are tiles
+    of a larger matrix).  Where ``kstar < 0`` (nothing improved / nothing
+    reachable) the entry comes from ``fallback`` (the pre-update
+    predecessors), or -1 when no fallback is given.  Accepts batched
+    (G, ., .) operands.
+    """
+    if kstar.ndim == 3:
+        fn = lambda kk, pxx, pyy, fb: pred_from_kstar(
+            kk, pxx, pyy, k_offset=k_offset, j_offset=j_offset, fallback=fb
+        )
+        return jax.vmap(fn)(kstar, px, py, fallback)
+    n = kstar.shape[-1]
+    cols = jnp.arange(n)
+    ks = jnp.maximum(kstar, 0)                       # safe gather index
+    p_via = py[ks, cols[None, :]]
+    p_own = jnp.take_along_axis(px, ks, axis=1)
+    same_node = (ks + k_offset) == (cols[None, :] + j_offset)
+    pz = jnp.where(same_node, p_own, p_via)
+    kept = fallback if fallback is not None else jnp.full_like(pz, -1)
+    return jnp.where(kstar < 0, kept, pz)
+
+
+def minplus_pred(
+    x: jax.Array,
+    y: jax.Array,
+    px: jax.Array,
+    py: jax.Array,
+    *,
+    a: Optional[jax.Array] = None,
+    pa: Optional[jax.Array] = None,
+    k_offset=0,
+    j_offset=0,
+    **block_kw,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused min-plus with predecessor propagation, on the argmin kernel.
+
+    Without ``a``: plain product; predecessors are -1 where Z is inf.  With
+    ``a``/``pa``: the strict-improvement accumulate update
+    ``Z = min(a, x (x) y)`` where entries that kept ``a`` keep ``pa`` —
+    i.e. exactly the old ``z, pz = minplus_pred(...); better = z < a``
+    pattern, in one fused dispatch.
+    """
+    z, kstar = minplus_argmin(x, y, a, **block_kw)
+    pz = pred_from_kstar(
+        kstar, px, py, k_offset=k_offset, j_offset=j_offset, fallback=pa
+    )
+    return z, pz
 
 
 def fw_block(d: jax.Array) -> jax.Array:

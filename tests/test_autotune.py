@@ -1,0 +1,109 @@
+"""Persistent block-size autotuner: cache round-trip, env control, dispatch."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+
+
+@pytest.fixture
+def at_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    return path
+
+
+def test_cache_roundtrip_no_remeasure(at_cache):
+    e1 = autotune.tune(64, 32, 64, backend="xla", reps=1)
+    assert e1["source"] == "measured"
+    assert e1["params"] and "row_chunk" in e1["params"]
+    # second run reuses the persisted winner — no re-measurement
+    e2 = autotune.tune(64, 32, 64, backend="xla", reps=1)
+    assert e2["source"] == "cache"
+    assert e2["params"] == {
+        k: v for k, v in e1["params"].items() if k in ("row_chunk", "k_chunk")
+    }
+    # file format: schema + entries keyed by backend|dtype|g|m|k|n buckets
+    data = json.loads(at_cache.read_text())
+    assert data["schema"] == autotune.SCHEMA
+    (key,) = data["entries"].keys()
+    assert key == "xla|float32|g0|m64|k32|n64"
+    assert data["entries"][key]["params"] == e1["params"]
+
+
+def test_lookup_buckets_and_backend_filter(at_cache):
+    e = autotune.tune(64, 32, 64, backend="xla", reps=1)
+    # nearby shapes land in the same power-of-two bucket
+    got = autotune.lookup("xla", jnp.float32, 60, 30, 58)
+    assert got == {k: v for k, v in e["params"].items()
+                   if k in autotune._XLA_KEYS}
+    # other backend / other bucket miss cleanly
+    assert autotune.lookup("interpret", jnp.float32, 60, 30, 58) == {}
+    assert autotune.lookup("xla", jnp.float32, 600, 30, 58) == {}
+    # batched lookup falls back to the unbatched entry
+    assert autotune.lookup("xla", jnp.float32, 60, 30, 58, g=4) == got
+
+
+def test_disabled_and_force_modes(at_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert autotune.mode() == "off"
+    assert autotune.tune(64, 32, 64, backend="xla")["source"] == "disabled"
+    assert autotune.lookup("xla", jnp.float32, 64, 32, 64) == {}
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    autotune.tune(64, 32, 64, backend="xla", reps=1)
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    assert autotune.mode() == "force"
+    assert autotune.tune(64, 32, 64, backend="xla", reps=1)["source"] == "measured"
+
+
+def test_corrupt_cache_is_ignored(at_cache):
+    at_cache.write_text("{not json")
+    assert autotune.load_entries(reload=True) == {}
+    e = autotune.tune(64, 32, 64, backend="xla", reps=1)   # overwrites cleanly
+    assert e["source"] == "measured"
+    assert json.loads(at_cache.read_text())["schema"] == autotune.SCHEMA
+
+
+def test_ops_dispatch_consults_cache(at_cache, monkeypatch):
+    """Seed the cache with a recognizable winner and verify ops.minplus
+    passes it to the XLA fallback (values unchanged either way)."""
+    import repro.kernels.ops as ops_mod
+
+    monkeypatch.setenv("REPRO_KERNELS", "xla")
+    key = autotune.key_for("xla", jnp.float32, 48, 24, 48)
+    autotune._save({key: {"params": {"row_chunk": 6, "k_chunk": 8},
+                          "source": "measured"}})
+    seen = {}
+    real = ops_mod.minplus_xla
+
+    def spy(x, y, a=None, **kw):
+        seen.update(kw)
+        return real(x, y, a, **kw)
+
+    monkeypatch.setattr(ops_mod, "minplus_xla", spy)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(1, 9, (48, 24)), jnp.float32)
+    y = jnp.asarray(rng.uniform(1, 9, (24, 48)), jnp.float32)
+    z = ops.minplus(x, y)
+    assert seen == {"row_chunk": 6, "k_chunk": 8}
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(real(x, y, row_chunk=48, k_chunk=0))
+    )
+    # explicit block_kw overrides the cache
+    seen.clear()
+    ops.minplus(x, y, row_chunk=4, k_chunk=0)
+    assert seen == {"row_chunk": 4, "k_chunk": 0}
+
+
+def test_candidates_respect_shape(at_cache):
+    for c in autotune.candidates("xla", 8, 8, 8):
+        assert c["row_chunk"] <= 8
+    lattice = autotune.candidates("xla", 1024, 128, 1024)
+    assert any(c.get("k_chunk") for c in lattice)      # two-level present
+    assert any(c.get("k_chunk") == 0 for c in lattice) # single-pass present
+    for c in autotune.candidates("pallas", 1024, 128, 1024):
+        assert c["bk"] % c["kc"] == 0

@@ -65,6 +65,60 @@ def test_minplus_kernel_acc_argmin(rng):
     assert np.array_equal(np.asarray(i), np.asarray(ir))
 
 
+def test_minplus_argmin_kernel_all_inf_and_ties(rng):
+    """Documented K* semantics: a fully-unreachable entry keeps K* = -1 (the
+    +inf init is never strictly improved), and exact ties across chunk and
+    grid-k boundaries resolve to the smallest k — both matching the oracle's
+    argmin/isinf convention."""
+    k = 40
+    # rows 0-2 of x all-inf; col 5 of y all-inf -> K* = -1 there
+    x = np.array(_mat(rng, 12, k, jnp.float32, inf_frac=0.3))
+    x[:3, :] = np.inf
+    y = np.array(_mat(rng, k, 9, jnp.float32, inf_frac=0.3))
+    y[:, 5] = np.inf
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    z, i = minplus_argmin_pallas(x, y, interpret=True, bk=16, kc=4)
+    zr, ir = ref.minplus_argmin_ref(x, y)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr))
+    assert np.array_equal(np.asarray(i), np.asarray(ir))
+    assert np.all(np.asarray(i)[:3, :] == -1)          # all-inf rows
+    assert np.all(np.asarray(i)[:, 5] == -1)           # all-inf column
+    # exact ties everywhere: every k wins with the same value -> smallest k
+    zt, it = minplus_argmin_pallas(
+        jnp.zeros((8, k)), jnp.zeros((k, 130)), interpret=True, bk=16, kc=4
+    )
+    assert np.all(np.asarray(it) == 0)
+    assert np.array_equal(
+        np.asarray(it), np.asarray(ref.minplus_argmin_ref(
+            jnp.zeros((8, k)), jnp.zeros((k, 130)))[1])
+    )
+
+
+BATCHED_SHAPES = [(3, 16, 24, 130), (2, 33, 40, 50)]
+
+
+@pytest.mark.parametrize("g,m,k,n", BATCHED_SHAPES)
+def test_minplus_kernel_batched_grid(g, m, k, n, rng):
+    """(G, ., .) operands run on one kernel grid and match per-slice oracles."""
+    x = jnp.stack([_mat(rng, m, k, jnp.float32) for _ in range(g)])
+    y = jnp.stack([_mat(rng, k, n, jnp.float32) for _ in range(g)])
+    a = jnp.stack([_mat(rng, m, n, jnp.float32) for _ in range(g)])
+    z = minplus_pallas(x, y, interpret=True)
+    za = minplus_pallas(x, y, a, accumulate=True, interpret=True)
+    zi, ii = minplus_argmin_pallas(x, y, a, accumulate=True, interpret=True)
+    assert z.shape == (g, m, n) and za.shape == (g, m, n)
+    for t in range(g):
+        np.testing.assert_allclose(
+            np.asarray(z[t]), np.asarray(ref.minplus_ref(x[t], y[t]))
+        )
+        np.testing.assert_allclose(
+            np.asarray(za[t]), np.asarray(ref.minplus_acc_ref(a[t], x[t], y[t]))
+        )
+        zr, ir = ref.minplus_acc_argmin_ref(a[t], x[t], y[t])
+        np.testing.assert_allclose(np.asarray(zi[t]), np.asarray(zr))
+        assert np.array_equal(np.asarray(ii[t]), np.asarray(ir))
+
+
 @pytest.mark.parametrize("b", [8, 32, 64, 100])
 def test_fw_block_kernel(b, rng):
     d = _mat(rng, b, b, jnp.float32, inf_frac=0.4)
