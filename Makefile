@@ -2,13 +2,17 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke serve-apsp
+.PHONY: test test-fast check bench bench-smoke serve-apsp
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
 
-test-fast:      ## skip the slow multi-device subprocess tests
-	$(PY) -m pytest -x -q -m "not slow"
+test-fast:      ## smoke path: skip slow subprocess tests and O(n^3) oracle sweeps
+	$(PY) -m pytest -x -q -m "not slow and not oracle"
+
+check:          ## tier-1 + fused backend parity + differential-oracle suite
+	$(PY) -m pytest -x -q -m "not oracle"
+	$(PY) -m pytest -q -m oracle tests/test_semiring_oracle.py
 
 bench:          ## paper-figure benchmark sweep (CSV to stdout + BENCH_apsp.json)
 	$(PY) -m benchmarks.run --quick

@@ -1,12 +1,13 @@
 """Quickstart: generate a random graph (the paper's generator), solve APSP
-with every method, reconstruct an explicit shortest path.
+with every method, reconstruct an explicit shortest path — then swap the
+semiring and reuse the same solvers for widest path and reachability.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import generate_np, reconstruct_path, solve
+from repro.core import SEMIRINGS, generate_np, reconstruct_path, solve
 from repro.core.paths import path_cost
 
 
@@ -36,6 +37,22 @@ def main():
           f"{len(path)} hops: {path}")
     assert abs(path_cost(g.h, path) - d[i, j]) < 1e-4
     print("path witnesses its distance ✓")
+
+    # -- same solvers, different algebra: the semiring registry ------------
+    # widest path (max, min): edge costs reinterpreted as link capacities
+    edge = np.isfinite(g.h) & ~np.eye(g.n_nodes, dtype=bool)
+    cap = np.where(edge, g.h, -np.inf).astype(np.float32)
+    np.fill_diagonal(cap, np.inf)
+    wide = np.asarray(solve(cap, method="blocked_fw", block_size=32,
+                            semiring="bottleneck").dist)
+    print(f"bottleneck: widest {i}->{j} bottleneck capacity {wide[i, j]:.0f}")
+
+    # reachability (∨, ∧): boolean adjacency, dist = transitive closure
+    adj = np.where(edge, 1.0, 0.0).astype(np.float32)
+    np.fill_diagonal(adj, 1.0)
+    closure = np.asarray(solve(adj, method="squaring", semiring="boolean").dist)
+    print(f"boolean: {int(closure.sum())} reachable pairs of {closure.size} "
+          f"(registry: {sorted(SEMIRINGS)})")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Core tropical-semiring APSP library (the paper's contribution)."""
+"""Core closed-semiring APSP library (the paper's contribution, generalized
+over the semiring registry — tropical shortest path by default)."""
 
 from .apsp import (
     APSPResult,
@@ -23,10 +24,15 @@ from .graphgen import generate, generate_batch, generate_np, graph_stats, paper_
 from .paths import reconstruct_path, reconstruct_path_jit, spd_features, validate_tree
 from .rkleene import rkleene
 from .semiring import (
+    SEMIRINGS,
+    Semiring,
+    get_semiring,
     minplus,
     minplus_3d,
     minplus_3d_argmin,
     minplus_pred,
+    register_semiring,
+    semiring_eye,
     softmin_matmul,
     tropical_eye,
 )
@@ -41,4 +47,6 @@ __all__ = [
     "reconstruct_path", "reconstruct_path_jit", "spd_features", "validate_tree",
     "rkleene", "minplus", "minplus_3d", "minplus_3d_argmin", "minplus_pred",
     "softmin_matmul", "tropical_eye",
+    "Semiring", "SEMIRINGS", "get_semiring", "register_semiring",
+    "semiring_eye",
 ]

@@ -26,6 +26,14 @@ predecessors), with block sizes served from the persistent autotune cache
 (``repro.kernels.autotune``; ``REPRO_AUTOTUNE*`` env vars) — tune before
 first solve of a shape to get measured winners instead of defaults.
 
+Both entry points take ``semiring=`` (a registry name or
+``repro.core.semiring.Semiring`` instance): the same solvers then compute
+widest paths (``"bottleneck"``), most-reliable paths (``"reliability"``),
+or transitive closure (``"boolean"``) instead of shortest paths.  Input
+conventions per semiring: off-diagonal "no edge" entries are the semiring
+zero, the diagonal is the semiring one (tropical: inf / 0).  The default
+``"tropical"`` is bit-exact with the pre-registry solvers.
+
 Distributed execution lives in ``core/distributed.py`` and is selected via
 ``launch/apsp_run.py`` on a real mesh; the serving loop over batches lives
 in ``launch/serve.py --arch apsp``.
@@ -48,6 +56,7 @@ from .floyd_warshall import (
     fw_squaring_batch,
 )
 from .rkleene import rkleene
+from .semiring import TROPICAL, Semiring, SemiringLike, get_semiring
 
 __all__ = [
     "APSPResult",
@@ -95,24 +104,26 @@ class BatchAPSPResult:
         )
 
 
-def _squaring(h, with_pred, **kw):
-    return fw_squaring(h, with_pred=with_pred)
+def _squaring(h, with_pred, semiring=TROPICAL, **kw):
+    return fw_squaring(h, with_pred=with_pred, semiring=semiring)
 
 
-def _squaring_3d(h, with_pred, **kw):
-    return fw_squaring(h, with_pred=with_pred, use_3d=True)
+def _squaring_3d(h, with_pred, semiring=TROPICAL, **kw):
+    return fw_squaring(h, with_pred=with_pred, use_3d=True, semiring=semiring)
 
 
-def _classic(h, with_pred, **kw):
-    return fw_classic(h, with_pred=with_pred)
+def _classic(h, with_pred, semiring=TROPICAL, **kw):
+    return fw_classic(h, with_pred=with_pred, semiring=semiring)
 
 
-def _blocked(h, with_pred, block_size=256, **kw):
-    return blocked_fw(h, block_size=block_size, with_pred=with_pred)
+def _blocked(h, with_pred, block_size=256, semiring=TROPICAL, **kw):
+    return blocked_fw(
+        h, block_size=block_size, with_pred=with_pred, semiring=semiring
+    )
 
 
-def _rkleene(h, with_pred, base=64, **kw):
-    return rkleene(h, base=base, with_pred=with_pred)
+def _rkleene(h, with_pred, base=64, semiring=TROPICAL, **kw):
+    return rkleene(h, base=base, with_pred=with_pred, semiring=semiring)
 
 
 METHODS: Dict[str, Callable] = {
@@ -124,20 +135,24 @@ METHODS: Dict[str, Callable] = {
 }
 
 
-def _squaring_batch(hs, with_pred, **kw):
-    return fw_squaring_batch(hs, with_pred=with_pred)
+def _squaring_batch(hs, with_pred, semiring=TROPICAL, **kw):
+    return fw_squaring_batch(hs, with_pred=with_pred, semiring=semiring)
 
 
-def _squaring_3d_batch(hs, with_pred, **kw):
-    return fw_squaring_batch(hs, with_pred=with_pred, use_3d=True)
+def _squaring_3d_batch(hs, with_pred, semiring=TROPICAL, **kw):
+    return fw_squaring_batch(
+        hs, with_pred=with_pred, use_3d=True, semiring=semiring
+    )
 
 
-def _classic_batch(hs, with_pred, **kw):
-    return fw_classic_batch(hs, with_pred=with_pred)
+def _classic_batch(hs, with_pred, semiring=TROPICAL, **kw):
+    return fw_classic_batch(hs, with_pred=with_pred, semiring=semiring)
 
 
-def _blocked_batch(hs, with_pred, block_size=256, **kw):
-    return blocked_fw_batch(hs, block_size=block_size, with_pred=with_pred)
+def _blocked_batch(hs, with_pred, block_size=256, semiring=TROPICAL, **kw):
+    return blocked_fw_batch(
+        hs, block_size=block_size, with_pred=with_pred, semiring=semiring
+    )
 
 
 BATCH_METHODS: Dict[str, Callable] = {
@@ -167,13 +182,20 @@ def solve(
     *,
     method: str = "blocked_fw",
     with_pred: bool = False,
+    semiring: SemiringLike = "tropical",
     **kwargs,
 ) -> APSPResult:
-    """Solve APSP on a dense cost matrix (inf = no edge, zero diagonal)."""
+    """Solve the all-pairs path problem on a dense cost matrix.
+
+    Input conventions: off-diagonal "no edge" = semiring zero (tropical:
+    inf), diagonal = semiring one (tropical: 0).  ``semiring`` is a
+    registry name or instance; see ``repro.core.semiring.SEMIRINGS``.
+    """
     if method not in METHODS:
         raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
+    sr = get_semiring(semiring)
     h = jnp.asarray(h, jnp.float32)
-    dist, pred = METHODS[method](h, with_pred, **kwargs)
+    dist, pred = METHODS[method](h, with_pred, semiring=sr, **kwargs)
     return APSPResult(dist=dist, pred=pred, method=method)
 
 
@@ -182,15 +204,18 @@ def pad_batch(
     sizes: Optional[Sequence[int]] = None,
     *,
     n_max: Optional[int] = None,
+    semiring: SemiringLike = "tropical",
 ) -> Tuple[jax.Array, np.ndarray]:
-    """Pack graphs into an inf-padded (G, N, N) stack + true-size vector.
+    """Pack graphs into a zero-padded (G, N, N) stack + true-size vector.
 
     Accepts a ragged list of (n_i, n_i) cost matrices or an already-stacked
     (G, N, N) array (with optional ``sizes``; defaults to N for every
     graph).  ``n_max`` forces the padded edge (>= max graph size) so a
     serving loop can keep one compiled shape across batches.  Padding is a
-    phantom node: inf off-diagonal, 0 self-loop — inert under (min, +).
+    phantom node: semiring zero off-diagonal, semiring one self-loop —
+    inert under every registered semiring (tropical: inf / 0).
     """
+    sr = get_semiring(semiring)
     if hasattr(hs, "ndim") and hs.ndim == 3:
         g, n, _ = hs.shape
         sizes = np.full(g, n) if sizes is None else np.asarray(sizes, np.int64)
@@ -208,21 +233,23 @@ def pad_batch(
     n = int(max(m.shape[0] for m in mats)) if n_max is None else int(n_max)
     if any(m.shape[0] > n for m in mats):
         raise ValueError(f"n_max={n} smaller than largest graph")
-    out = np.full((len(mats), n, n), np.inf, np.float32)
+    out = np.full((len(mats), n, n), sr.zero, np.float32)
     idx = np.arange(n)
-    out[:, idx, idx] = 0.0
+    out[:, idx, idx] = sr.one
     for i, m in enumerate(mats):
         k = m.shape[0]
         out[i, :k, :k] = m
     return jnp.asarray(out), sizes
 
 
-def _solve_stack(stack, with_pred, method, **kwargs):
-    """Run one (G, N, N) inf-padded stack through the batched solver."""
+def _solve_stack(stack, with_pred, method, semiring=TROPICAL, **kwargs):
+    """Run one (G, N, N) zero-padded stack through the batched solver."""
     batch_fn = BATCH_METHODS.get(method)
     if batch_fn is not None:
-        return batch_fn(stack, with_pred, **kwargs)
-    return jax.vmap(lambda h: METHODS[method](h, with_pred, **kwargs))(stack)
+        return batch_fn(stack, with_pred, semiring=semiring, **kwargs)
+    return jax.vmap(
+        lambda h: METHODS[method](h, with_pred, semiring=semiring, **kwargs)
+    )(stack)
 
 
 def _bucket_edge(n: int) -> int:
@@ -247,7 +274,7 @@ def _bucket_count(c: int) -> int:
 
 def _solve_bucketed(
     mats: List[np.ndarray], sizes: np.ndarray, n: int, method: str,
-    with_pred: bool, **kwargs
+    with_pred: bool, semiring=TROPICAL, **kwargs
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Size-bucketed batched solve: graphs grouped by power-of-two padded
     edge, one batched program per bucket, results scattered back into the
@@ -255,9 +282,9 @@ def _solve_bucketed(
     padding is inert either way — but a ragged corpus does ~size^3 work per
     graph instead of n_max^3."""
     g = len(mats)
-    dist = np.full((g, n, n), np.inf, np.float32)
+    dist = np.full((g, n, n), semiring.zero, np.float32)
     idx = np.arange(n)
-    dist[:, idx, idx] = 0.0
+    dist[:, idx, idx] = semiring.one
     pred = None
     if with_pred:
         pred = np.full((g, n, n), -1, np.int32)
@@ -271,8 +298,8 @@ def _solve_bucketed(
         slots = _bucket_count(len(members))
         sub = [mats[i] for i in members]
         sub += [np.zeros((0, 0), np.float32)] * (slots - len(members))
-        stack, _ = pad_batch(sub, n_max=edge)
-        d, p = _solve_stack(stack, with_pred, method, **kwargs)
+        stack, _ = pad_batch(sub, n_max=edge, semiring=semiring)
+        d, p = _solve_stack(stack, with_pred, method, semiring=semiring, **kwargs)
         d = np.asarray(d)
         p = None if p is None else np.asarray(p)
         for j, i in enumerate(members):
@@ -291,15 +318,17 @@ def solve_batch(
     with_pred: bool = False,
     n_max: Optional[int] = None,
     bucket_by_size: bool = False,
+    semiring: SemiringLike = "tropical",
     **kwargs,
 ) -> BatchAPSPResult:
-    """Solve APSP on a batch of independent graphs in one compiled program.
+    """Solve the all-pairs path problem on a batch of independent graphs in
+    one compiled program.
 
     ``hs`` is a (G, N, N) stack or a ragged list of (n_i, n_i) matrices
-    (auto-padded; see :func:`pad_batch`).  Every registered method is
-    supported; results agree with per-graph :func:`solve` on the unpadded
-    blocks.  Use :meth:`BatchAPSPResult.unpadded` to slice graph i back
-    out.
+    (auto-padded; see :func:`pad_batch`).  Every registered method and
+    semiring is supported; results agree with per-graph :func:`solve` on
+    the unpadded blocks.  Use :meth:`BatchAPSPResult.unpadded` to slice
+    graph i back out.
 
     ``bucket_by_size=True`` turns on the ragged-batch scheduler: graphs are
     grouped into power-of-two edge buckets and each bucket runs as its own
@@ -309,6 +338,7 @@ def solve_batch(
     """
     if method not in METHODS:
         raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
+    semiring = get_semiring(semiring)
     if bucket_by_size:
         if hasattr(hs, "ndim") and hs.ndim == 3:
             mats = [np.asarray(h) for h in hs]
@@ -325,9 +355,9 @@ def solve_batch(
         if int(sizes_.max()) > n:
             raise ValueError(f"n_max={n} smaller than largest graph")
         dist, pred = _solve_bucketed(
-            mats, sizes_, n, method, with_pred, **kwargs
+            mats, sizes_, n, method, with_pred, semiring=semiring, **kwargs
         )
         return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes_, method=method)
-    stack, sizes = pad_batch(hs, sizes, n_max=n_max)
-    dist, pred = _solve_stack(stack, with_pred, method, **kwargs)
+    stack, sizes = pad_batch(hs, sizes, n_max=n_max, semiring=semiring)
+    dist, pred = _solve_stack(stack, with_pred, method, semiring=semiring, **kwargs)
     return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes, method=method)

@@ -2,21 +2,24 @@
 
 This is the paper's future-work item ("divide the 3D-Tensor L") realized as
 the classic 3-phase blocked FW (Katz & Kider style), restructured so every
-phase is a dense min-plus product over tiles:
+phase is a dense ⊕⊗ product over tiles:
 
 for each pivot block t (size B):
   phase 1: close the pivot block      D_tt <- FW(D_tt)
-  phase 2: row panel  D_t* <- D_tt (x) D_t*        (min-plus)
+  phase 2: row panel  D_t* <- D_tt (x) D_t*        (⊕⊗ product)
            col panel  D_*t <- D_*t (x) D_tt
-  phase 3: global     D    <- D (+) D_*t (x) D_t*  (elementwise min)
+  phase 3: global     D    <- D (+) D_*t (x) D_t*  (elementwise ⊕)
 
 Because the updated column stripe's pivot rows equal the closed pivot block,
 the single phase-3 product also re-derives the stripes — the implementation
-below exploits that to touch the full matrix exactly once per pivot.
+below exploits that to touch the full matrix exactly once per pivot.  The
+subsumption argument ("pivot diag = semiring one => the product includes the
+old panel") holds for every registered semiring: ⊕ is selective and the
+diagonal contributes ``one ⊗ old = old`` to each candidate set.
 
 Every panel product goes through the fused ``kernels.ops`` dispatch: phase 3
 is one fused-accumulate ``ops.minplus(col, row, d)`` (no separate elementwise
-min pass), predecessor propagation rides the fused-argmin kernel via
+⊕ pass), predecessor propagation rides the fused-argmin kernel via
 ``ops.minplus_pred``, and the batched solver's panel products lower to a
 single (G, ., .) kernel dispatch.  Block/chunk sizes come from the autotune
 cache (``kernels/autotune.py``) when it has measured winners.
@@ -35,6 +38,8 @@ import jax
 
 from .floyd_warshall import init_pred
 from .semiring import (
+    TROPICAL,
+    Semiring,
     pad_pred_to_multiple,
     pad_to_multiple,
     unpad,
@@ -49,26 +54,29 @@ def _ops():
     return _kops
 
 
-def closure_block(d: jax.Array) -> jax.Array:
+def closure_block(d: jax.Array, semiring: Semiring = TROPICAL) -> jax.Array:
     """In-block FW closure (phase 1) — B pivot steps on a (B, B) tile or a
     (T, B, B) batch of tiles, one kernel dispatch either way.
 
     Routed through ``kernels/ops.py``: the Pallas kernel on TPU (whole tile
     resident in VMEM, tile batches on the grid), the equivalent XLA
     fori_loop elsewhere."""
-    return _ops().fw_block(d)
+    return _ops().fw_block(d, semiring=semiring)
 
 
-def _closure_block_pred(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    return _ops().fw_block_pred(d, p)
+def _closure_block_pred(
+    d: jax.Array, p: jax.Array, semiring: Semiring = TROPICAL
+) -> Tuple[jax.Array, jax.Array]:
+    return _ops().fw_block_pred(d, p, semiring=semiring)
 
 
-@partial(jax.jit, static_argnames=("block_size", "with_pred"))
+@partial(jax.jit, static_argnames=("block_size", "with_pred", "semiring"))
 def blocked_fw(
     h: jax.Array,
     *,
     block_size: int = 256,
     with_pred: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """3-phase blocked Floyd-Warshall.
 
@@ -77,10 +85,11 @@ def blocked_fw(
     a ``lax.fori_loop`` with ``dynamic_slice`` stripes so the HLO stays
     O(1) in n/B.
     """
+    sr = semiring
     kops = _ops()
     n = h.shape[0]
     b = min(block_size, n)
-    d = pad_to_multiple(h, b)
+    d = pad_to_multiple(h, b, sr)
     np_ = d.shape[0]
     nblk = np_ // b
 
@@ -88,26 +97,26 @@ def blocked_fw(
         def body(t, d):
             o = t * b
             pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
-            pivot = closure_block(pivot)
+            pivot = closure_block(pivot, sr)
             row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))      # (B, N)
             col = jax.lax.dynamic_slice(d, (0, o), (np_, b))      # (N, B)
-            row = kops.minplus(pivot, row)      # pivot diag 0 => subsumes old
-            col = kops.minplus(col, pivot)
+            row = kops.minplus(pivot, row, semiring=sr)   # pivot diag one => subsumes old
+            col = kops.minplus(col, pivot, semiring=sr)
             # col's pivot rows == closed pivot, so this also updates stripes.
             col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
-            return kops.minplus(col, row, d)    # fused phase-3 accumulate
+            return kops.minplus(col, row, d, semiring=sr)  # fused phase-3 accumulate
 
         d = jax.lax.fori_loop(0, nblk, body, d)
         return unpad(d, n), None
 
-    p = pad_pred_to_multiple(init_pred(h), b)
+    p = pad_pred_to_multiple(init_pred(h, sr), b)
 
     def body_p(t, dp):
         d, p = dp
         o = t * b
         pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
         ppivot = jax.lax.dynamic_slice(p, (o, o), (b, b))
-        pivot, ppivot = _closure_block_pred(pivot, ppivot)
+        pivot, ppivot = _closure_block_pred(pivot, ppivot, sr)
 
         row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))
         prow = jax.lax.dynamic_slice(p, (o, 0), (b, np_))
@@ -117,47 +126,53 @@ def blocked_fw(
         # Row panel: paths pivot-row -> anywhere; x-cols/y-rows are the pivot
         # block (global offset o), output cols are global (offset 0).
         row, prow = kops.minplus_pred(
-            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0
+            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0,
+            semiring=sr,
         )
         # Col panel: paths anywhere -> pivot cols; output cols offset o too.
         col, pcol = kops.minplus_pred(
-            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o
+            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o,
+            semiring=sr,
         )
 
         col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
         pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (o, 0))
 
         return kops.minplus_pred(
-            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0
+            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0,
+            semiring=sr,
         )
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
     return unpad(d, n), unpad(p, n)
 
 
-@partial(jax.jit, static_argnames=("block_size", "with_pred"))
+@partial(jax.jit, static_argnames=("block_size", "with_pred", "semiring"))
 def blocked_fw_batch(
     hs: jax.Array,
     *,
     block_size: int = 256,
     with_pred: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Blocked FW over a (G, N, N) stack of independent graphs.
 
     Same 3-phase pivot loop as :func:`blocked_fw`, but at every pivot step
     the G pivot blocks are gathered into one (G, B, B) stack and closed by a
     *single* ``kernels.ops.fw_block`` dispatch (the Pallas kernel takes tile
-    batches on its grid), and the panel min-plus products are (G, ., .)
-    operands of the batched fused dispatch — one kernel grid per phase for
-    the whole batch (leading batch grid dimension on the Pallas path, a
-    single vmapped XLA program on the fallback) instead of G sequential
-    launches.  Ragged batches are handled upstream by inf-padding
-    (``apsp.solve_batch``): phantom nodes are inert under (min, +).
+    batches on its grid), and the panel ⊕⊗ products are (G, ., .) operands
+    of the batched fused dispatch — one kernel grid per phase for the whole
+    batch (leading batch grid dimension on the Pallas path, a single
+    vmapped XLA program on the fallback) instead of G sequential launches.
+    Ragged batches are handled upstream by zero-padding
+    (``apsp.solve_batch``): phantom nodes are inert under every registered
+    semiring.
     """
+    sr = semiring
     kops = _ops()
     g, n, _ = hs.shape
     b = min(block_size, n)
-    d = jax.vmap(lambda h: pad_to_multiple(h, b))(hs)
+    d = jax.vmap(lambda h: pad_to_multiple(h, b, sr))(hs)
     np_ = d.shape[1]
     nblk = np_ // b
 
@@ -165,26 +180,26 @@ def blocked_fw_batch(
         def body(t, d):
             o = t * b
             pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
-            pivot = closure_block(pivot)                       # one (G,B,B) dispatch
+            pivot = closure_block(pivot, sr)               # one (G,B,B) dispatch
             row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
             col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
-            row = kops.minplus(pivot, row)
-            col = kops.minplus(col, pivot)
+            row = kops.minplus(pivot, row, semiring=sr)
+            col = kops.minplus(col, pivot, semiring=sr)
             # col's pivot rows == closed pivot, so this also updates stripes.
             col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
-            return kops.minplus(col, row, d)    # fused batched phase-3
+            return kops.minplus(col, row, d, semiring=sr)  # fused batched phase-3
 
         d = jax.lax.fori_loop(0, nblk, body, d)
         return d[:, :n, :n], None
 
-    p = jax.vmap(lambda h: pad_pred_to_multiple(init_pred(h), b))(hs)
+    p = jax.vmap(lambda h: pad_pred_to_multiple(init_pred(h, sr), b))(hs)
 
     def body_p(t, dp):
         d, p = dp
         o = t * b
         pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
         ppivot = jax.lax.dynamic_slice(p, (0, o, o), (g, b, b))
-        pivot, ppivot = _closure_block_pred(pivot, ppivot)
+        pivot, ppivot = _closure_block_pred(pivot, ppivot, sr)
 
         row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
         prow = jax.lax.dynamic_slice(p, (0, o, 0), (g, b, np_))
@@ -192,17 +207,20 @@ def blocked_fw_batch(
         pcol = jax.lax.dynamic_slice(p, (0, 0, o), (g, np_, b))
 
         row, prow = kops.minplus_pred(
-            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0
+            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0,
+            semiring=sr,
         )
         col, pcol = kops.minplus_pred(
-            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o
+            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o,
+            semiring=sr,
         )
 
         col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
         pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (0, o, 0))
 
         return kops.minplus_pred(
-            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0
+            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0,
+            semiring=sr,
         )
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))

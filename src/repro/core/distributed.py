@@ -44,7 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 
-from .semiring import INF, ceil_log2
+from .semiring import INF, TROPICAL, Semiring, ceil_log2
 
 
 def _kops():
@@ -89,7 +89,7 @@ def _panel_coords(p, k_shard: int, panels_per_shard: int, panel: int):
     return shard, off
 
 
-@partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes"))
+@partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes", "semiring"))
 def summa_minplus(
     x: jax.Array,
     y: jax.Array,
@@ -98,18 +98,22 @@ def summa_minplus(
     mesh: Mesh,
     row_axes: Tuple[str, ...] = ("data",),
     col_axes: Tuple[str, ...] = ("model",),
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
-    """Tropical SUMMA: Z = X (x) Y on the 2D block grid.
+    """Semiring SUMMA (tropical by default): Z = X (x) Y on the 2D block grid.
 
     Panel count = lcm(nr, nc) so it works on non-square grids (the multi-pod
     (32-row, 16-col) layout).  Per panel: X's (m_l, k/P) column slice is
     broadcast along ``col_axes`` from its owner, Y's (k/P, n_l) row slice
     along ``row_axes``, then a local fused min-plus accumulate.
 
-    ``acc`` (same sharding as Z) fuses Z = min(acc, X (x) Y): it seeds the
-    panel loop's running min, so the accumulate costs no second pass over
-    the output shards.
+    ``acc`` (same sharding as Z) fuses Z = acc (+) X (x) Y: it seeds the
+    panel loop's running ⊕, so the accumulate costs no second pass over
+    the output shards.  The masked-psum broadcasts are untouched by the
+    semiring choice — non-owners contribute arithmetic zeros and exactly
+    one shard contributes the panel, so any payload value survives.
     """
+    sr = semiring
     nr = _axes_size(mesh, row_axes)
     nc = _axes_size(mesh, col_axes)
     m, k = x.shape
@@ -136,13 +140,14 @@ def summa_minplus(
             yp = lax.dynamic_slice(yl, (yoff, 0), (panel, n_l))
             xp = _bcast(xp, tuple(col_axes), xc, c)
             yp = _bcast(yp, tuple(row_axes), yc, r)
-            return _kops().minplus(xp, yp, a)       # fused local accumulate
+            return _kops().minplus(xp, yp, a, semiring=sr)  # fused local accumulate
 
         if rest:
             acc0 = rest[0]                          # fused Z = min(acc, X(x)Y)
         else:
             acc0 = compat.pvary(
-                jnp.full((m_l, n_l), INF, x.dtype), tuple(row_axes) + tuple(col_axes)
+                jnp.full((m_l, n_l), sr.zero, x.dtype),
+                tuple(row_axes) + tuple(col_axes),
             )
         return lax.fori_loop(0, npanels, step, acc0)
 
@@ -153,7 +158,7 @@ def summa_minplus(
     return fn(x, y, acc)
 
 
-@partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes", "iters"))
+@partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes", "iters", "semiring"))
 def squaring_distributed(
     h: jax.Array,
     *,
@@ -161,20 +166,22 @@ def squaring_distributed(
     row_axes: Tuple[str, ...] = ("data",),
     col_axes: Tuple[str, ...] = ("model",),
     iters: int | None = None,
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
-    """Paper-faithful FW-GPU at scale: D <- min(D, D (x) D), ceil(log2 N) times."""
+    """Paper-faithful FW-GPU at scale: D <- D (+) D (x) D, ceil(log2 N) times."""
     n = h.shape[0]
     it = ceil_log2(n) if iters is None else iters
 
     def body(_, d):
         return summa_minplus(
-            d, d, d, mesh=mesh, row_axes=row_axes, col_axes=col_axes
+            d, d, d, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+            semiring=semiring,
         )
 
     return lax.fori_loop(0, it, body, h)
 
 
-@partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes", "block_size"))
+@partial(jax.jit, static_argnames=("mesh", "row_axes", "col_axes", "block_size", "semiring"))
 def fw_distributed(
     h: jax.Array,
     *,
@@ -182,6 +189,7 @@ def fw_distributed(
     row_axes: Tuple[str, ...] = ("data",),
     col_axes: Tuple[str, ...] = ("model",),
     block_size: int = 512,
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
     """Distributed 3-phase blocked Floyd-Warshall (O(N^3) work total).
 
@@ -190,6 +198,7 @@ def fw_distributed(
     the row axes; col panel (m_l, B) broadcast along the col axes; one local
     min-plus accumulate touches every local element once.
     """
+    sr = semiring
     nr = _axes_size(mesh, row_axes)
     nc = _axes_size(mesh, col_axes)
     n = h.shape[0]
@@ -214,16 +223,16 @@ def fw_distributed(
             pv = lax.dynamic_slice(d, (roff, coff), (b, b))
             pv = jnp.where(mine, pv, jnp.zeros_like(pv))
             pv = lax.psum(pv, tuple(row_axes) + tuple(col_axes))
-            pv = closure_block(pv)
+            pv = closure_block(pv, sr)
 
             # -- phase 2a: row panel (pivot rows x my cols), owner row computes
             rp = lax.dynamic_slice(d, (roff, 0), (b, n_l))
-            rp = _kops().minplus(pv, rp)               # pivot diag 0 => subsumes old
+            rp = _kops().minplus(pv, rp, semiring=sr)  # pivot diag one => subsumes old
             rp = _bcast(rp, tuple(row_axes), orow, r)
 
             # -- phase 2b: col panel (my rows x pivot cols), owner col computes
             cp = lax.dynamic_slice(d, (0, coff), (m_l, b))
-            cp = _kops().minplus(cp, pv)
+            cp = _kops().minplus(cp, pv, semiring=sr)
             # owner-row devices overwrite their pivot rows with the closed
             # pivot so phase 3 re-derives the row/col panels exactly.
             cp_fixed = lax.dynamic_update_slice(cp, pv, (roff, 0))
@@ -231,7 +240,7 @@ def fw_distributed(
             cp = _bcast(cp, tuple(col_axes), ocol, c)
 
             # -- phase 3: one fused local update touches all of d once --
-            return _kops().minplus(cp, rp, d)
+            return _kops().minplus(cp, rp, d, semiring=sr)
 
         return lax.fori_loop(0, nblk, pivot_step, dl)
 
@@ -247,6 +256,7 @@ def rkleene_distributed(
     col_axes: Tuple[str, ...] = ("model",),
     leaf: int = 4096,
     block_size: int = 512,
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
     """R-Kleene over the 2D block grid: host-level recursion, SUMMA products,
     leaves closed with the distributed blocked FW.
@@ -259,7 +269,8 @@ def rkleene_distributed(
 
     def mp(x, y, acc=None):
         return summa_minplus(
-            x, y, acc, mesh=mesh, row_axes=row_axes, col_axes=col_axes
+            x, y, acc, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+            semiring=semiring,
         )
 
     nr = _axes_size(mesh, row_axes)
@@ -272,7 +283,7 @@ def rkleene_distributed(
             b = min(block_size, m // nr, m // nc)
             return fw_distributed(
                 d, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
-                block_size=max(b, 1),
+                block_size=max(b, 1), semiring=semiring,
             )
         half = m // 2
         a, bq = d[:half, :half], d[:half, half:]
@@ -299,6 +310,7 @@ def apsp_distributed(
     method: str = "fw",
     multi_pod: bool = False,
     block_size: int = 512,
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
     """Place a (padded) cost matrix on the mesh and solve.
 
@@ -316,20 +328,25 @@ def apsp_distributed(
     else:
         # squaring: shards + SUMMA panels must divide evenly
         mult = math.lcm(nr, nc)
-    from .semiring import pad_to_multiple
+    from .semiring import get_semiring, pad_to_multiple
 
-    d = pad_to_multiple(h, mult)
+    semiring = get_semiring(semiring)
+    d = pad_to_multiple(h, mult, semiring)
     spec = dist_spec(multi_pod)
     d = jax.device_put(d, NamedSharding(mesh, spec))
     if method == "squaring":
-        out = squaring_distributed(d, mesh=mesh, row_axes=row_axes, col_axes=col_axes)
+        out = squaring_distributed(
+            d, mesh=mesh, row_axes=row_axes, col_axes=col_axes, semiring=semiring
+        )
     elif method == "fw":
         out = fw_distributed(
-            d, mesh=mesh, row_axes=row_axes, col_axes=col_axes, block_size=block_size
+            d, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+            block_size=block_size, semiring=semiring,
         )
     elif method == "rkleene":
         out = rkleene_distributed(
-            d, mesh=mesh, row_axes=row_axes, col_axes=col_axes, block_size=block_size
+            d, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+            block_size=block_size, semiring=semiring,
         )
     else:
         raise ValueError(f"unknown distributed method {method!r}")

@@ -1,9 +1,11 @@
 """Floyd-Warshall solvers: paper-faithful GPU formulation + classic O(n^3).
 
-Three variants, all jit-compatible:
+Three variants, all jit-compatible and generalized over the closed-semiring
+registry (``semiring=`` kwarg; default tropical reproduces the original
+min-plus bit-exactly):
 
 * ``fw_squaring``   — the paper's "FW-GPU": repeated tropical matrix squaring
-                      until fixpoint.  ceil(log2 n) min-plus products, i.e.
+                      until fixpoint.  ceil(log2 n) ⊕⊗ products, i.e.
                       O(n^3 log n) work.  Paper-faithful baseline.
 * ``fw_squaring_early_exit`` — same, with the paper's "stop when no change"
                       rule via ``lax.while_loop`` (data-dependent trip count).
@@ -11,8 +13,13 @@ Three variants, all jit-compatible:
                       with ``lax.fori_loop`` over k.  Ground-truth oracle and
                       the building block for the blocked pivot closure.
 
+log2 squarings suffice for every registered semiring: each is idempotent
+with a selective ⊕ and a ⊗ that never improves along a cycle (positive
+costs / capped capacities / probabilities <= 1 / booleans), so the optimum
+is attained by a simple path of <= n-1 hops.
+
 Predecessor conventions (paper §2): ``pred[i, j]`` is the last node before j
-on the current shortest i->j path; ``pred[i, i] = i``; unreachable = -1.
+on the current optimal i->j path; ``pred[i, i] = i``; unreachable = -1.
 """
 
 from __future__ import annotations
@@ -23,7 +30,15 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .semiring import INF, ceil_log2, minplus_3d
+from .semiring import (
+    INF,
+    TROPICAL,
+    Semiring,
+    SemiringLike,
+    ceil_log2,
+    get_semiring,
+    minplus_3d,
+)
 
 
 def _ops():
@@ -41,29 +56,33 @@ __all__ = [
 ]
 
 
-def init_pred(h: jax.Array) -> jax.Array:
-    """Initial predecessor matrix from a cost matrix (inf = no edge)."""
+def init_pred(h: jax.Array, semiring: SemiringLike = "tropical") -> jax.Array:
+    """Initial predecessor matrix from a cost matrix (semiring zero = no
+    edge; tropical: inf)."""
+    sr = get_semiring(semiring)
     n = h.shape[0]
     rows = jnp.arange(n)[:, None]
-    has_edge = jnp.isfinite(h)
+    has_edge = ~sr.is_zero(h)
     p = jnp.where(has_edge, jnp.broadcast_to(rows, (n, n)), -1)
     return p.at[jnp.arange(n), jnp.arange(n)].set(jnp.arange(n)).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("with_pred", "use_3d"))
+@partial(jax.jit, static_argnames=("with_pred", "use_3d", "semiring"))
 def fw_squaring(
     h: jax.Array,
     *,
     with_pred: bool = False,
     use_3d: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Paper's FW-GPU: tropical squaring, fixed ceil(log2 n) iterations.
+    """Paper's FW-GPU: matrix squaring, fixed ceil(log2 n) iterations.
 
-    After t squarings, all shortest paths of <= 2^t hops are exact, so
+    After t squarings, all optimal paths of <= 2^t hops are exact, so
     ceil(log2 n) iterations suffice (paper bounds the loop by N; log2 N is
     the tight bound for squaring).  ``use_3d=True`` selects the literal
     N×N×N broadcast of the paper (memory-faithful; small n only).
     """
+    sr = semiring
     n = h.shape[0]
     iters = ceil_log2(n)
     d0 = h
@@ -72,32 +91,33 @@ def fw_squaring(
     if not with_pred:
         if use_3d:
             # paper-faithful *and* memory-faithful: keep the literal N^3
-            # broadcast + separate elementwise min (this is the baseline the
+            # broadcast + separate elementwise ⊕ (this is the baseline the
             # fused kernels are measured against).
             def body(_, d):
-                return jnp.minimum(d, minplus_3d(d, d))
+                return sr.add(d, minplus_3d(d, d, sr))
         else:
             def body(_, d):
-                return kops.minplus(d, d, d)       # fused D <- D (+) D (x) D
+                return kops.minplus(d, d, d, semiring=sr)  # fused D <- D ⊕ D⊗D
 
         return jax.lax.fori_loop(0, iters, body, d0), None
 
-    p0 = init_pred(h)
+    p0 = init_pred(h, sr)
 
     def body_p(_, dp):
         d, p = dp
-        return kops.minplus_pred(d, d, p, p, a=d, pa=p)
+        return kops.minplus_pred(d, d, p, p, a=d, pa=p, semiring=sr)
 
     d, p = jax.lax.fori_loop(0, iters, body_p, (d0, p0))
     return d, p
 
 
-@partial(jax.jit, static_argnames=("with_pred", "use_3d"))
+@partial(jax.jit, static_argnames=("with_pred", "use_3d", "semiring"))
 def fw_squaring_batch(
     hs: jax.Array,
     *,
     with_pred: bool = False,
     use_3d: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """:func:`fw_squaring` vmapped over a (G, N, N) stack of graphs.
 
@@ -106,68 +126,79 @@ def fw_squaring_batch(
     a (G, N, N, N) tensor; batch small.
     """
     return jax.vmap(
-        lambda h: fw_squaring(h, with_pred=with_pred, use_3d=use_3d)
+        lambda h: fw_squaring(
+            h, with_pred=with_pred, use_3d=use_3d, semiring=semiring
+        )
     )(hs)
 
 
-@partial(jax.jit, static_argnames=("with_pred",))
+@partial(jax.jit, static_argnames=("with_pred", "semiring"))
 def fw_classic_batch(
     hs: jax.Array,
     *,
     with_pred: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """:func:`fw_classic` vmapped over a (G, N, N) stack: each pivot step is
-    one rank-1 tropical update applied to all G graphs at once."""
-    return jax.vmap(lambda h: fw_classic(h, with_pred=with_pred))(hs)
+    one rank-1 ⊕⊗ update applied to all G graphs at once."""
+    return jax.vmap(
+        lambda h: fw_classic(h, with_pred=with_pred, semiring=semiring)
+    )(hs)
 
 
-@jax.jit
-def fw_squaring_early_exit(h: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Paper §3.2 verbatim: repeat min-plus "until we observe no changes".
+@partial(jax.jit, static_argnames=("semiring",))
+def fw_squaring_early_exit(
+    h: jax.Array, semiring: Semiring = TROPICAL
+) -> Tuple[jax.Array, jax.Array]:
+    """Paper §3.2 verbatim: repeat the squaring "until we observe no changes".
 
     Returns (distances, iterations_taken).  Uses ``lax.while_loop`` so the
     data-dependent trip count stays inside jit.
     """
+    sr = semiring
+
     def cond(state):
         _, changed, it = state
         return jnp.logical_and(changed, it < ceil_log2(h.shape[0]) + 1)
 
     def body(state):
         d, _, it = state
-        z = _ops().minplus(d, d, d)          # fused accumulate
-        return z, jnp.any(z < d), it + 1
+        z = _ops().minplus(d, d, d, semiring=sr)   # fused accumulate
+        return z, jnp.any(sr.better(z, d)), it + 1
 
     d, _, it = jax.lax.while_loop(cond, body, (h, jnp.bool_(True), jnp.int32(0)))
     return d, it
 
 
-@partial(jax.jit, static_argnames=("with_pred",))
+@partial(jax.jit, static_argnames=("with_pred", "semiring"))
 def fw_classic(
     h: jax.Array,
     *,
     with_pred: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Textbook Floyd-Warshall: n pivot steps, each a rank-1 tropical update.
+    """Textbook Floyd-Warshall: n pivot steps, each a rank-1 ⊕⊗ update.
 
-    ``d = min(d, d[:, k, None] + d[None, k, :])`` — O(n^3) total work,
+    ``d = d ⊕ (d[:, k, None] ⊗ d[None, k, :])`` — O(n^3) total work,
     O(n^2) memory.  With predecessors: on improvement through pivot k,
     ``pred[i, j] <- pred[k, j]``.
     """
+    sr = semiring
     n = h.shape[0]
 
     if not with_pred:
         def body(k, d):
-            via = d[:, k][:, None] + d[k, :][None, :]
-            return jnp.minimum(d, via)
+            via = sr.mul(d[:, k][:, None], d[k, :][None, :])
+            return sr.add(d, via)
 
         return jax.lax.fori_loop(0, n, body, h), None
 
-    p0 = init_pred(h)
+    p0 = init_pred(h, sr)
 
     def body_p(k, dp):
         d, p = dp
-        via = d[:, k][:, None] + d[k, :][None, :]
-        better = via < d
+        via = sr.mul(d[:, k][:, None], d[k, :][None, :])
+        better = sr.better(via, d)
         pk = jnp.broadcast_to(p[k, :][None, :], p.shape)
         return jnp.where(better, via, d), jnp.where(better, pk, p)
 

@@ -73,21 +73,52 @@ def reconstruct_path_jit(pred: jax.Array, i, j, *, max_len: int) -> tuple:
     return flipped, length
 
 
-def path_cost(h: np.ndarray, path: List[int]) -> float:
-    """Sum of edge costs along an explicit path."""
-    return float(sum(h[a, b] for a, b in zip(path[:-1], path[1:])))
+_NP_MUL = {
+    jnp.add: np.add,
+    jnp.minimum: np.minimum,
+    jnp.maximum: np.maximum,
+    jnp.multiply: np.multiply,
+}
 
 
-def validate_tree(h: np.ndarray, dist: np.ndarray, pred: np.ndarray) -> bool:
-    """Invariant: every finite dist[i,j] is witnessed by pred: walking back one
-    hop satisfies dist[i,j] == dist[i,pred[i,j]] + h[pred[i,j], j]."""
+def _np_mul(semiring):
+    """Host-side ⊗ for a semiring, keyed on the instance's own ``mul`` (not
+    its name, so a re-registered instance can't desync)."""
+    from .semiring import get_semiring
+
+    sr = get_semiring(semiring)
+    mul = _NP_MUL.get(sr.mul)
+    if mul is None:
+        # custom ⊗ with no numpy twin: fall back to the jnp op (slower)
+        mul = lambda a, b: np.asarray(sr.mul(a, b))
+    return sr, mul
+
+
+def path_cost(h: np.ndarray, path: List[int], semiring="tropical") -> float:
+    """⊗-accumulated cost along an explicit path (tropical: sum of edges).
+
+    The empty path (i == j) costs the semiring one (tropical: 0)."""
+    sr, mul = _np_mul(semiring)
+    cost = sr.one
+    for a, b in zip(path[:-1], path[1:]):
+        cost = mul(cost, h[a, b])
+    return float(cost)
+
+
+def validate_tree(
+    h: np.ndarray, dist: np.ndarray, pred: np.ndarray, semiring="tropical"
+) -> bool:
+    """Invariant: every reachable dist[i,j] is witnessed by pred: walking back
+    one hop satisfies dist[i,j] == dist[i,pred[i,j]] ⊗ h[pred[i,j], j]."""
+    sr, mul = _np_mul(semiring)
     n = h.shape[0]
-    ii, jj = np.nonzero(np.isfinite(dist) & ~np.eye(n, dtype=bool))
+    reach = ~np.asarray(sr.is_zero(dist)) & ~np.eye(n, dtype=bool)
+    ii, jj = np.nonzero(reach)
     p = pred[ii, jj]
     if np.any(p < 0):
         return False
     lhs = dist[ii, jj]
-    rhs = dist[ii, p] + h[p, jj]
+    rhs = mul(dist[ii, p], h[p, jj])
     return bool(np.allclose(lhs, rhs, rtol=1e-5, atol=1e-5))
 
 

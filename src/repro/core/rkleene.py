@@ -9,11 +9,13 @@ Split D = [[A, B], [C, D]] (A: first half <-> first half, etc.) and:
     B <- B (x) D ;  C <- D (x) C    # allow wandering inside the second half
     A <- A (+) B (x) C              # second-half detours between 1st-half nodes
 
-(x) = min-plus product, (+) = elementwise min.  Work is O(n^3) like blocked
-FW, but all the work lands in large dense min-plus GEMMs — the paper's
+(x) = the semiring ⊗-product, (+) = elementwise ⊕ — tropical min-plus by
+default, or any registry instance via ``semiring=``.  Work is O(n^3) like
+blocked FW, but all the work lands in large dense ⊕⊗ GEMMs — the paper's
 "GPU-friendly" scalable algorithm.  Recursion is static (python-level), so
 the whole solver jit-compiles; matrices are padded to a power-of-two times
-``base`` with unreachable phantom nodes.
+``base`` with unreachable phantom nodes (semiring zero off-diagonal, one on
+the diagonal).
 
 Every quadrant product goes through the fused ``kernels.ops`` dispatch: the
 two (+) accumulate steps are single fused ``ops.minplus(x, y, a)`` calls,
@@ -32,7 +34,7 @@ import jax.numpy as jnp
 
 from .blocked_fw import closure_block, _closure_block_pred
 from .floyd_warshall import init_pred
-from .semiring import INF, unpad
+from .semiring import INF, TROPICAL, Semiring, unpad
 
 __all__ = ["rkleene"]
 
@@ -57,32 +59,32 @@ def _pad_pow2(d: jax.Array, base: int, fill: float, diag) -> Tuple[jax.Array, in
     return out, n
 
 
-def _rk(d: jax.Array, base: int) -> jax.Array:
+def _rk(d: jax.Array, base: int, sr: Semiring) -> jax.Array:
     kops = _ops()
     n = d.shape[0]
     if n <= base:
-        return closure_block(d)
+        return closure_block(d, sr)
     m = n // 2
     a, b = d[:m, :m], d[:m, m:]
     c, dd = d[m:, :m], d[m:, m:]
 
-    a = _rk(a, base)
-    b = kops.minplus(a, b)
-    c = kops.minplus(c, a)
-    dd = kops.minplus(c, b, dd)         # fused D <- D (+) C (x) B
-    dd = _rk(dd, base)
-    b = kops.minplus(b, dd)
-    c = kops.minplus(dd, c)
-    a = kops.minplus(b, c, a)           # fused A <- A (+) B (x) C
+    a = _rk(a, base, sr)
+    b = kops.minplus(a, b, semiring=sr)
+    c = kops.minplus(c, a, semiring=sr)
+    dd = kops.minplus(c, b, dd, semiring=sr)   # fused D <- D (+) C (x) B
+    dd = _rk(dd, base, sr)
+    b = kops.minplus(b, dd, semiring=sr)
+    c = kops.minplus(dd, c, semiring=sr)
+    a = kops.minplus(b, c, a, semiring=sr)     # fused A <- A (+) B (x) C
     return jnp.block([[a, b], [c, dd]])
 
 
-def _rk_pred(d, p, base: int, off: int):
+def _rk_pred(d, p, base: int, off: int, sr: Semiring):
     """R-Kleene with predecessors. ``off`` = global id of this block's node 0."""
     kops = _ops()
     n = d.shape[0]
     if n <= base:
-        return _closure_block_pred(d, p)
+        return _closure_block_pred(d, p, sr)
     m = n // 2
     a, b = d[:m, :m], d[:m, m:]
     c, dd = d[m:, :m], d[m:, m:]
@@ -93,14 +95,15 @@ def _rk_pred(d, p, base: int, off: int):
     def upd(x, y, px, py, ko, jo, zold, pold):
         # fused strict-improvement accumulate + pred propagation
         return kops.minplus_pred(
-            x, y, px, py, a=zold, pa=pold, k_offset=ko, j_offset=jo
+            x, y, px, py, a=zold, pa=pold, k_offset=ko, j_offset=jo,
+            semiring=sr,
         )
 
-    a, pa = _rk_pred(a, pa, base, o1)
+    a, pa = _rk_pred(a, pa, base, o1, sr)
     b, pb = upd(a, b, pa, pb, o1, o2, b, pb)
     c, pc = upd(c, a, pc, pa, o1, o1, c, pc)
     dd, pd = upd(c, b, pc, pb, o1, o2, dd, pd)
-    dd, pd = _rk_pred(dd, pd, base, o2)
+    dd, pd = _rk_pred(dd, pd, base, o2, sr)
     b, pb = upd(b, dd, pb, pd, o2, o2, b, pb)
     c, pc = upd(dd, c, pd, pc, o2, o1, c, pc)
     a, pa = upd(b, c, pb, pc, o2, o1, a, pa)
@@ -110,20 +113,22 @@ def _rk_pred(d, p, base: int, off: int):
     )
 
 
-@partial(jax.jit, static_argnames=("base", "with_pred"))
+@partial(jax.jit, static_argnames=("base", "with_pred", "semiring"))
 def rkleene(
     h: jax.Array,
     *,
     base: int = 64,
     with_pred: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """R-Kleene APSP.  ``base`` is the leaf size closed with in-block FW."""
+    sr = semiring
     n = h.shape[0]
-    d, _ = _pad_pow2(h, base, INF, 0.0)
+    d, _ = _pad_pow2(h, base, sr.zero, sr.one)
     if not with_pred:
-        z = _rk(d, base)
+        z = _rk(d, base, sr)
         return unpad(z, n), None
-    p0 = init_pred(h)
+    p0 = init_pred(h, sr)
     p, _ = _pad_pow2(p0.astype(jnp.int32), base, -1, lambda idx: idx.astype(jnp.int32))
-    z, pz = _rk_pred(d, p, base, 0)
+    z, pz = _rk_pred(d, p, base, 0, sr)
     return unpad(z, n), unpad(pz, n)

@@ -1,12 +1,20 @@
-"""Tropical (min-plus) semiring linear algebra — the paper's core primitive.
+"""Closed-semiring linear algebra — the paper's core primitive, generalized.
 
 The paper (Anjary 2023) realizes ``Z[i, j] = min_k (X[i, k] + Y[k, j])`` by
 materializing the 3D broadcast tensor ``L[i, k, j] = X[i, k] + Y[k, j]`` and
 reducing with min/argmin over axis 1.  That costs O(n^3) memory — the paper's
 own stated scaling wall (N <= 1000 on a 24 GB GPU).
 
+(min, +) is just one instance of matrix closure over an idempotent closed
+semiring: swap the (⊕, ⊗) pair and exactly the same kernels and solvers
+compute widest paths (max, min), most-reliable paths (max, ×), and
+transitive closure (∨, ∧).  The :class:`Semiring` records the pair plus the
+constants and reduction ops the kernels need; ``SEMIRINGS`` is the registry
+every solver entry point resolves its ``semiring=`` argument against.
+
 This module provides:
 
+* ``Semiring`` / ``SEMIRINGS`` / ``get_semiring`` / ``register_semiring``,
 * ``minplus_3d``          — the paper-faithful 3D-broadcast formulation,
 * ``minplus``             — memory-bounded chunked formulation (XLA fallback;
                             the Pallas kernel in ``repro.kernels`` is the
@@ -16,27 +24,35 @@ This module provides:
 * ``softmin_matmul``      — beyond-paper experimental MXU path via the
                             tropical soft-min limit (log-sum-exp transform).
 
-Conventions: distance matrices are float (``jnp.inf`` = "no path"), diagonal
-is 0, edge weights are strictly positive (paper §3.1: no zero-cost edges
-except self-loops, no negative cycles).
+Tropical conventions: distance matrices are float (``jnp.inf`` = "no path"),
+diagonal is 0, edge weights are strictly positive (paper §3.1: no zero-cost
+edges except self-loops, no negative cycles).  Each registry instance
+documents its own domain.
 """
 
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "Semiring",
+    "SEMIRINGS",
+    "TROPICAL",
+    "get_semiring",
+    "register_semiring",
     "minplus_3d",
     "minplus_3d_argmin",
     "minplus",
     "minplus_pred",
     "auto_row_chunk",
     "tropical_eye",
+    "semiring_eye",
     "softmin_matmul",
     "pad_to_multiple",
     "unpad",
@@ -45,29 +61,160 @@ __all__ = [
 INF = jnp.inf
 
 
+# ---------------------------------------------------------------------------
+# The closed-semiring abstraction.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Semiring:
+    """An idempotent closed semiring (S, ⊕, ⊗, 0̄, 1̄) with a selective ⊕.
+
+    The kernels assume ``add`` is *selective* (always returns one of its
+    operands — min or max on a totally ordered domain), which every classic
+    path-problem semiring satisfies; that is what makes the fused-argmin
+    witness rule (``better`` + ``argreduce``) well-defined: the k whose
+    candidate ``x[i,k] ⊗ y[k,j]`` the ⊕-reduction selected is the pivot
+    witness predecessor propagation needs.  Ties resolve to the smallest k
+    on every backend (see tests/test_fused_parity.py).
+
+    ``zero`` is the ⊕-identity and ⊗-annihilator (the "no path" value, also
+    used as the inert padding fill); ``one`` is the ⊗-identity (the diagonal
+    / empty-path value).  Both are plain Python floats so instances hash and
+    can be jit static arguments.
+
+    Instances are registered in ``SEMIRINGS``; solver entry points accept
+    either a registered name or an instance (see :func:`get_semiring`).
+    """
+
+    name: str
+    add: Callable            # elementwise ⊕ (selective): jnp.minimum / maximum
+    mul: Callable            # elementwise ⊗: jnp.add / minimum / multiply
+    zero: float              # ⊕-identity, ⊗-annihilator, padding fill
+    one: float               # ⊗-identity, diagonal value
+    reduce: Callable         # ⊕ over an axis: jnp.min / jnp.max
+    argreduce: Callable      # index of the ⊕-winner: jnp.argmin / jnp.argmax
+    better: Callable         # strict improvement: (cand, acc) -> bool mask
+    # True when ⊗ by any non-``one`` edge strictly worsens the value on the
+    # instance domain (tropical: costs > 0; reliability: p < 1).  Then
+    # optimal values strictly improve walking a path toward its source, so
+    # the per-source predecessor rows form acyclic trees and full-path
+    # reconstruction (core.paths.reconstruct_path) is guaranteed to
+    # terminate.  Plateau semirings (bottleneck, boolean) still emit valid
+    # *one-hop* witnesses (dist[i,j] == dist[i,p] ⊗ h[p,j], see
+    # core.paths.validate_tree) but tied entries may reference each other,
+    # so chains can cycle and reconstruction is not guaranteed.
+    monotone_mul: bool = True
+    doc: str = field(default="", compare=False)
+
+    def is_zero(self, x):
+        """Mask of "no path" entries (works on jnp and np arrays alike)."""
+        return x == self.zero
+
+    def eye(self, n: int, dtype=jnp.float32) -> jax.Array:
+        """⊗-identity matrix: ``one`` on the diagonal, ``zero`` elsewhere."""
+        return jnp.where(
+            jnp.eye(n, dtype=bool),
+            jnp.asarray(self.one, dtype),
+            jnp.asarray(self.zero, dtype),
+        )
+
+
+def _lt(cand, acc):
+    return cand < acc
+
+
+def _gt(cand, acc):
+    return cand > acc
+
+
+TROPICAL = Semiring(
+    name="tropical",
+    add=jnp.minimum, mul=jnp.add, zero=float("inf"), one=0.0,
+    reduce=jnp.min, argreduce=jnp.argmin, better=_lt,
+    doc="(min, +) shortest path.  Domain: costs > 0, inf = no edge.",
+)
+
+BOTTLENECK = Semiring(
+    name="bottleneck",
+    add=jnp.maximum, mul=jnp.minimum, zero=float("-inf"), one=float("inf"),
+    reduce=jnp.max, argreduce=jnp.argmax, better=_gt, monotone_mul=False,
+    doc="(max, min) widest path.  Domain: capacities, -inf = no edge.",
+)
+
+RELIABILITY = Semiring(
+    name="reliability",
+    add=jnp.maximum, mul=jnp.multiply, zero=0.0, one=1.0,
+    reduce=jnp.max, argreduce=jnp.argmax, better=_gt,
+    doc="(max, ×) most-reliable path.  Domain: probabilities in (0, 1), "
+        "0 = no edge (p = 1 edges plateau: see monotone_mul).  Keep values "
+        "finite: 0 × inf is NaN.",
+)
+
+BOOLEAN = Semiring(
+    name="boolean",
+    add=jnp.maximum, mul=jnp.minimum, zero=0.0, one=1.0,
+    reduce=jnp.max, argreduce=jnp.argmax, better=_gt, monotone_mul=False,
+    doc="(∨, ∧) reachability / transitive closure.  Domain: {0.0, 1.0}.",
+)
+
+SEMIRINGS: Dict[str, Semiring] = {
+    s.name: s for s in (TROPICAL, BOTTLENECK, RELIABILITY, BOOLEAN)
+}
+
+SemiringLike = Union[str, Semiring]
+
+
+def get_semiring(s: SemiringLike = "tropical") -> Semiring:
+    """Resolve a registry name or pass an instance through."""
+    if isinstance(s, Semiring):
+        return s
+    try:
+        return SEMIRINGS[s]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {s!r}; registered: {sorted(SEMIRINGS)}"
+        ) from None
+
+
+def register_semiring(sr: Semiring) -> Semiring:
+    """Add (or replace) a registry entry; returns ``sr`` for chaining."""
+    SEMIRINGS[sr.name] = sr
+    return sr
+
+
 def tropical_eye(n: int, dtype=jnp.float32) -> jax.Array:
     """Identity of the tropical semiring: 0 on the diagonal, +inf elsewhere."""
-    return jnp.where(jnp.eye(n, dtype=bool), jnp.zeros((), dtype), jnp.asarray(INF, dtype))
+    return TROPICAL.eye(n, dtype)
+
+
+def semiring_eye(n: int, semiring: SemiringLike = "tropical", dtype=jnp.float32) -> jax.Array:
+    return get_semiring(semiring).eye(n, dtype)
 
 
 # ---------------------------------------------------------------------------
 # Paper-faithful 3D-broadcast formulation (Figure 8 of the paper).
 # ---------------------------------------------------------------------------
 
-def minplus_3d(x: jax.Array, y: jax.Array) -> jax.Array:
-    """Min-plus product via the paper's N×N×N broadcast tensor.
+def minplus_3d(
+    x: jax.Array, y: jax.Array, semiring: SemiringLike = "tropical"
+) -> jax.Array:
+    """⊕⊗ product via the paper's N×N×N broadcast tensor.
 
-    ``L[i, k, j] = x[i, k] + y[k, j]`` then ``min`` over axis 1.  O(n^3)
+    ``L[i, k, j] = x[i, k] ⊗ y[k, j]`` then ⊕-reduce over axis 1.  O(n^3)
     memory — kept as the faithful reference; do not use at scale.
     """
-    l = x[:, :, None] + y[None, :, :]
-    return jnp.min(l, axis=1)
+    sr = get_semiring(semiring)
+    l = sr.mul(x[:, :, None], y[None, :, :])
+    return sr.reduce(l, axis=1)
 
 
-def minplus_3d_argmin(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Paper-faithful min-plus + argmin (paper Fig 8 steps 4-6)."""
-    l = x[:, :, None] + y[None, :, :]
-    return jnp.min(l, axis=1), jnp.argmin(l, axis=1)
+def minplus_3d_argmin(
+    x: jax.Array, y: jax.Array, semiring: SemiringLike = "tropical"
+) -> Tuple[jax.Array, jax.Array]:
+    """Paper-faithful product + witness argreduce (paper Fig 8 steps 4-6)."""
+    sr = get_semiring(semiring)
+    l = sr.mul(x[:, :, None], y[None, :, :])
+    return sr.reduce(l, axis=1), sr.argreduce(l, axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -199,18 +346,22 @@ def softmin_matmul(x: jax.Array, y: jax.Array, *, tau: float = 2e-2) -> jax.Arra
 # Padding helpers (blocked / recursive algorithms need divisible sizes).
 # ---------------------------------------------------------------------------
 
-def pad_to_multiple(d: jax.Array, multiple: int) -> jax.Array:
+def pad_to_multiple(
+    d: jax.Array, multiple: int, semiring: SemiringLike = "tropical"
+) -> jax.Array:
     """Pad a distance matrix to a multiple of ``multiple`` with unreachable
-    (inf off-diagonal, 0 diagonal) phantom nodes — semantically inert."""
+    (``zero`` off-diagonal, ``one`` diagonal) phantom nodes — semantically
+    inert under any registered semiring."""
+    sr = get_semiring(semiring)
     n = d.shape[0]
     pad = (-n) % multiple
     if pad == 0:
         return d
     np_ = n + pad
-    out = jnp.full((np_, np_), INF, dtype=d.dtype)
+    out = jnp.full((np_, np_), sr.zero, dtype=d.dtype)
     out = out.at[:n, :n].set(d)
     idx = jnp.arange(n, np_)
-    return out.at[idx, idx].set(0.0)
+    return out.at[idx, idx].set(sr.one)
 
 
 def pad_pred_to_multiple(p: jax.Array, multiple: int) -> jax.Array:

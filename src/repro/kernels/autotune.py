@@ -109,10 +109,19 @@ def bucket(v: int) -> int:
     return p
 
 
-def key_for(backend: str, dtype, m: int, k: int, n: int, g: int = 0) -> str:
+def key_for(
+    backend: str, dtype, m: int, k: int, n: int, g: int = 0,
+    semiring: str = "tropical",
+) -> str:
+    """Cache key.  Non-tropical semirings get an extra ``|s:<name>`` segment;
+    tropical keeps the legacy key format, so caches tuned before the
+    semiring registry existed stay valid."""
     name = jnp.dtype(dtype).name
     gb = bucket(g) if g else 0
-    return f"{backend}|{name}|g{gb}|m{bucket(m)}|k{bucket(k)}|n{bucket(n)}"
+    key = f"{backend}|{name}|g{gb}|m{bucket(m)}|k{bucket(k)}|n{bucket(n)}"
+    if semiring != "tropical":
+        key += f"|s:{semiring}"
+    return key
 
 
 def load_entries(*, reload: bool = False) -> Dict[str, dict]:
@@ -167,21 +176,30 @@ def _filter(backend: str, params: dict) -> dict:
     return {k: int(v) for k, v in params.items() if k in keys}
 
 
-def lookup(backend: str, dtype, m: int, k: int, n: int, g: int = 0) -> dict:
+def lookup(
+    backend: str, dtype, m: int, k: int, n: int, g: int = 0,
+    semiring: str = "tropical",
+) -> dict:
     """Winner params for a dispatch site, or {} (miss / disabled).
 
     Falls back to the unbatched (g=0) bucket when no batched entry exists —
-    the per-slice working set is what the chunk sizes bound.
+    the per-slice working set is what the chunk sizes bound.  Non-tropical
+    semirings additionally fall back to the tropical entry of the same
+    shape: the memory-traffic shape is identical, only the elementwise ⊕⊗
+    pair differs, so a tropical winner is a good prior until a per-semiring
+    ``tune`` runs.
     """
     if mode() == "off":
         return {}
     entries = load_entries()
-    for gq in ((g, 0) if g else (0,)):
-        key = key_for(backend, dtype, m, k, n, g=gq)
-        e = entries.get(key)
-        if e and isinstance(e.get("params"), dict):
-            _touched.add(key)
-            return _filter(backend, e["params"])
+    srs = (semiring, "tropical") if semiring != "tropical" else ("tropical",)
+    for sq in srs:
+        for gq in ((g, 0) if g else (0,)):
+            key = key_for(backend, dtype, m, k, n, g=gq, semiring=sq)
+            e = entries.get(key)
+            if e and isinstance(e.get("params"), dict):
+                _touched.add(key)
+                return _filter(backend, e["params"])
     return {}
 
 
@@ -244,12 +262,24 @@ def measure(fn, reps: int) -> float:
     return best * 1e6
 
 
-def _inputs(m: int, k: int, n: int, g: int, dtype, seed: int = 0):
+def _inputs(m: int, k: int, n: int, g: int, dtype, seed: int = 0,
+            semiring: str = "tropical"):
     rng = np.random.default_rng(seed)
 
     def mk(*shape):
-        a = rng.uniform(1, 100, size=shape).astype(np.float32)
-        a = np.where(rng.uniform(size=shape) < 0.3, np.inf, a)
+        # in-domain values per semiring; ~30% "no edge" (semiring zero)
+        no_edge = rng.uniform(size=shape) < 0.3
+        if semiring == "reliability":
+            a = rng.uniform(0.05, 1.0, size=shape).astype(np.float32)
+            a = np.where(no_edge, 0.0, a)
+        elif semiring == "boolean":
+            a = np.where(no_edge, 0.0, 1.0).astype(np.float32)
+        elif semiring == "bottleneck":
+            a = rng.uniform(1, 100, size=shape).astype(np.float32)
+            a = np.where(no_edge, -np.inf, a)
+        else:
+            a = rng.uniform(1, 100, size=shape).astype(np.float32)
+            a = np.where(no_edge, np.inf, a)
         return jnp.asarray(a, dtype)
 
     if g:
@@ -267,22 +297,27 @@ def tune(
     backend: Optional[str] = None,
     reps: int = 2,
     force: Optional[bool] = None,
+    semiring: str = "tropical",
 ) -> dict:
     """Measure the candidate lattice for one shape bucket and persist the
     winner.  Returns the cache entry; ``entry["source"]`` is ``"cache"``
     when a persisted winner was reused without re-measurement,
     ``"measured"`` after a fresh sweep, ``"disabled"`` under
-    ``REPRO_AUTOTUNE=0``.
+    ``REPRO_AUTOTUNE=0``.  ``semiring`` tunes (and keys) that registry
+    instance's dispatch with in-domain inputs.
     """
+    from repro.core.semiring import get_semiring
+
     from . import ops
     from .minplus import minplus_pallas
     from .minplus_xla import minplus_xla
 
     b = backend or ops.backend()
+    sr = get_semiring(semiring)
     md = mode()
     if md == "off":
         return {"params": {}, "source": "disabled"}
-    key = key_for(b, dtype, m, k, n, g=g)
+    key = key_for(b, dtype, m, k, n, g=g, semiring=sr.name)
     _touched.add(key)
     refresh = (md == "force") if force is None else force
     if not refresh:
@@ -295,7 +330,7 @@ def tune(
 
     mb, kb, nb = bucket(m), bucket(k), bucket(n)
     gb = min(bucket(g), 8) if g else 0       # cap batch for measurement cost
-    x, y, a = _inputs(mb, kb, nb, gb, dtype)
+    x, y, a = _inputs(mb, kb, nb, gb, dtype, semiring=sr.name)
 
     def make(params):
         if b == "xla":
@@ -303,12 +338,15 @@ def tune(
             if gb:
                 return lambda: jax.vmap(
                     lambda xx, yy, aa: minplus_xla(
-                        xx, yy, aa, row_chunk=rc, k_chunk=kc
+                        xx, yy, aa, row_chunk=rc, k_chunk=kc, semiring=sr
                     )
                 )(x, y, a)
-            return lambda: minplus_xla(x, y, a, row_chunk=rc, k_chunk=kc)
+            return lambda: minplus_xla(
+                x, y, a, row_chunk=rc, k_chunk=kc, semiring=sr
+            )
         return lambda: minplus_pallas(
-            x, y, a, accumulate=True, interpret=(b == "interpret"), **params
+            x, y, a, accumulate=True, interpret=(b == "interpret"),
+            semiring=sr, **params
         )
 
     best_params, best_us = None, float("inf")
@@ -336,6 +374,7 @@ def tune_blocked_fw(
     dtype=jnp.float32,
     backend: Optional[str] = None,
     reps: int = 2,
+    semiring: str = "tropical",
 ) -> Dict[str, dict]:
     """Tune the three panel-product shapes one blocked-FW pivot step hits:
     row panel (B,B)x(B,N), col panel (N,B)x(B,B), and the fused phase-3
@@ -347,6 +386,7 @@ def tune_blocked_fw(
         "phase3": (n, b, n),
     }
     return {
-        name: tune(m, k, nn, g=g, dtype=dtype, backend=backend, reps=reps)
+        name: tune(m, k, nn, g=g, dtype=dtype, backend=backend, reps=reps,
+                   semiring=semiring)
         for name, (m, k, nn) in shapes.items()
     }

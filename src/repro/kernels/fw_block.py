@@ -23,14 +23,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.semiring import TROPICAL, Semiring
+
 INF = jnp.inf
 
 __all__ = ["fw_block_pallas", "fw_block_pred_pallas"]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fw_block_pallas(d: jax.Array, *, interpret: bool = False) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("interpret", "semiring"))
+def fw_block_pallas(
+    d: jax.Array, *, interpret: bool = False, semiring: Semiring = TROPICAL
+) -> jax.Array:
     """Close one (B, B) tile, or a batch (T, B, B) of independent tiles."""
+    sr = semiring
     batched = d.ndim == 3
     dd = d if batched else d[None]
     t, b, b2 = dd.shape
@@ -43,7 +48,7 @@ def fw_block_pallas(d: jax.Array, *, interpret: bool = False) -> jax.Array:
         def body(k, cur):
             col = jax.lax.dynamic_slice(cur, (0, k), (b, 1))
             row = jax.lax.dynamic_slice(cur, (k, 0), (1, b))
-            return jnp.minimum(cur, col + row)
+            return sr.add(cur, sr.mul(col, row))
 
         o_ref[0] = jax.lax.fori_loop(0, b, body, d0)
 
@@ -58,11 +63,13 @@ def fw_block_pallas(d: jax.Array, *, interpret: bool = False) -> jax.Array:
     return out if batched else out[0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "semiring"))
 def fw_block_pred_pallas(
-    d: jax.Array, p: jax.Array, *, interpret: bool = False
+    d: jax.Array, p: jax.Array, *, interpret: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, jax.Array]:
     """Closure with predecessor tracking (global node ids in ``p``)."""
+    sr = semiring
     batched = d.ndim == 3
     dd = d if batched else d[None]
     pp = p if batched else p[None]
@@ -77,9 +84,9 @@ def fw_block_pred_pallas(
             cur, pcur = dp
             col = jax.lax.dynamic_slice(cur, (0, k), (b, 1))
             row = jax.lax.dynamic_slice(cur, (k, 0), (1, b))
-            via = col + row
+            via = sr.mul(col, row)
             pk = jax.lax.dynamic_slice(pcur, (k, 0), (1, b))
-            better = via < cur
+            better = sr.better(via, cur)
             return (
                 jnp.where(better, via, cur),
                 jnp.where(better, jnp.broadcast_to(pk, pcur.shape), pcur),

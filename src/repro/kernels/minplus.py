@@ -21,11 +21,17 @@ what lets ``blocked_fw_batch`` drive all G graphs per pivot step with a
 single dispatch.
 
 Variants (one kernel body, two flags):
-  * fused accumulate  — Z = min(A, X (x) Y): phase-3 blocked-FW / R-Kleene
+  * fused accumulate  — Z = A ⊕ (X ⊗ Y): phase-3 blocked-FW / R-Kleene
     update without a second HBM round-trip.
-  * fused argmin      — running argmin (global k index) carried with the
-    running min; K* = -1 where no finite path (or where A kept, in the
-    accumulate variant).  Feeds predecessor propagation.
+  * fused argmin      — running witness (global k index) carried with the
+    running ⊕; K* = -1 where no path (or where A kept, in the accumulate
+    variant).  Feeds predecessor propagation.
+
+The ``semiring`` argument (static, a ``repro.core.semiring.Semiring``)
+selects the (⊕, ⊗) pair, the padding fill, and the improvement direction —
+one kernel body serves tropical shortest path, bottleneck widest path,
+reliability, and boolean closure; the ⊕/⊗ swap stays on the VPU either way
+(none of the instances have a multiply-accumulate the MXU could take).
 
 Oracles: ``repro.kernels.ref``.  Public wrappers: ``repro.kernels.ops``.
 Default block sizes below are the compiled-in fallback; the measured
@@ -41,6 +47,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.semiring import TROPICAL, Semiring
 
 INF = jnp.inf
 
@@ -62,8 +70,8 @@ DEFAULT_BK = 512
 DEFAULT_KC = 8
 
 
-def _minplus_body(x, y, kc: int, k_base, acc, idx):
-    """Fold min over the k dim of x:(bm,bk), y:(bk,bn) into acc (and idx)."""
+def _minplus_body(x, y, kc: int, k_base, acc, idx, sr: Semiring):
+    """Fold ⊕ over the k dim of x:(bm,bk), y:(bk,bn) into acc (and idx)."""
     bm, bk = x.shape
     bn = y.shape[1]
     track = idx is not None
@@ -72,14 +80,14 @@ def _minplus_body(x, y, kc: int, k_base, acc, idx):
         acc = carry[0] if track else carry
         xs = jax.lax.dynamic_slice(x, (0, c * kc), (bm, kc))      # (bm, kc)
         ys = jax.lax.dynamic_slice(y, (c * kc, 0), (kc, bn))      # (kc, bn)
-        l = xs[:, :, None] + ys[None, :, :]                       # (bm, kc, bn)
-        cand = jnp.min(l, axis=1)
+        l = sr.mul(xs[:, :, None], ys[None, :, :])                # (bm, kc, bn)
+        cand = sr.reduce(l, axis=1)
         if not track:
-            return jnp.minimum(acc, cand)
+            return sr.add(acc, cand)
         idx = carry[1]
-        ka = jnp.argmin(l, axis=1).astype(jnp.int32)              # local in chunk
+        ka = sr.argreduce(l, axis=1).astype(jnp.int32)            # local in chunk
         kg = ka + (k_base + c * kc)                               # global k id
-        better = cand < acc
+        better = sr.better(cand, acc)
         return jnp.where(better, cand, acc), jnp.where(better, kg, idx)
 
     init = (acc, idx) if track else acc
@@ -97,42 +105,46 @@ def _st(ref, val):
     ref[...] = val[None] if len(ref.shape) == 3 else val
 
 
-def _kernel(x_ref, y_ref, z_ref, *, kc: int, bk: int, k_axis: int):
+def _kernel(x_ref, y_ref, z_ref, *, kc: int, bk: int, k_axis: int, sr: Semiring):
     @pl.when(pl.program_id(k_axis) == 0)
     def _init():
-        z_ref[...] = jnp.full_like(z_ref[...], INF)
+        z_ref[...] = jnp.full_like(z_ref[...], sr.zero)
 
     k_base = pl.program_id(k_axis) * bk
-    acc, _ = _minplus_body(_ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), None)
+    acc, _ = _minplus_body(_ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), None, sr)
     _st(z_ref, acc)
 
 
-def _kernel_acc(a_ref, x_ref, y_ref, z_ref, *, kc: int, bk: int, k_axis: int):
+def _kernel_acc(
+    a_ref, x_ref, y_ref, z_ref, *, kc: int, bk: int, k_axis: int, sr: Semiring
+):
     @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         z_ref[...] = a_ref[...]
 
     k_base = pl.program_id(k_axis) * bk
-    acc, _ = _minplus_body(_ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), None)
+    acc, _ = _minplus_body(_ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), None, sr)
     _st(z_ref, acc)
 
 
-def _kernel_argmin(x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, k_axis: int):
+def _kernel_argmin(
+    x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, k_axis: int, sr: Semiring
+):
     @pl.when(pl.program_id(k_axis) == 0)
     def _init():
-        z_ref[...] = jnp.full_like(z_ref[...], INF)
+        z_ref[...] = jnp.full_like(z_ref[...], sr.zero)
         i_ref[...] = jnp.full_like(i_ref[...], -1)
 
     k_base = pl.program_id(k_axis) * bk
     acc, idx = _minplus_body(
-        _ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), _ld(i_ref)
+        _ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), _ld(i_ref), sr
     )
     _st(z_ref, acc)
     _st(i_ref, idx)
 
 
 def _kernel_acc_argmin(
-    a_ref, x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, k_axis: int
+    a_ref, x_ref, y_ref, z_ref, i_ref, *, kc: int, bk: int, k_axis: int, sr: Semiring
 ):
     @pl.when(pl.program_id(k_axis) == 0)
     def _init():
@@ -141,7 +153,7 @@ def _kernel_acc_argmin(
 
     k_base = pl.program_id(k_axis) * bk
     acc, idx = _minplus_body(
-        _ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), _ld(i_ref)
+        _ld(x_ref), _ld(y_ref), kc, k_base, _ld(z_ref), _ld(i_ref), sr
     )
     _st(z_ref, acc)
     _st(i_ref, idx)
@@ -190,7 +202,7 @@ def _grid_call(kernel, grid, in_specs, out_specs, out_shape, interpret):
     )
 
 
-def _layout(x, y, bm, bn, bk, kc):
+def _layout(x, y, bm, bn, bk, kc, fill=INF):
     """Shared shape/grid/spec derivation for both kernel wrappers."""
     assert x.ndim in (2, 3) and y.ndim == x.ndim, (x.shape, y.shape)
     batched = x.ndim == 3
@@ -201,8 +213,8 @@ def _layout(x, y, bm, bn, bk, kc):
     assert k == k2, (x.shape, y.shape)
     bm, bn = min(bm, _rup(m, 8)), min(bn, _rup(n, 128))
     bk = min(_rup(bk, kc), _rup(k, kc))
-    xp = _pad(x, bm, bk, INF)
-    yp = _pad(y, bk, bn, INF)
+    xp = _pad(x, bm, bk, fill)
+    yp = _pad(y, bk, bn, fill)
     mp, kp = xp.shape[-2], xp.shape[-1]
     np_ = yp.shape[-1]
     grid = (mp // bm, np_ // bn, kp // bk)
@@ -216,7 +228,7 @@ def _layout(x, y, bm, bn, bk, kc):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "kc", "accumulate", "interpret"),
+    static_argnames=("bm", "bn", "bk", "kc", "accumulate", "interpret", "semiring"),
 )
 def minplus_pallas(
     x: jax.Array,
@@ -229,15 +241,18 @@ def minplus_pallas(
     kc: int = DEFAULT_KC,
     accumulate: bool = False,
     interpret: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
-    """Z = min_k x[:,k]+y[k,:]  (optionally fused Z = min(a, ...)).
+    """Z = ⊕_k x[:,k] ⊗ y[k,:]  (optionally fused Z = a ⊕ (...)).
 
-    Shapes need not be tile-aligned: panels are padded with +inf (inert under
-    (min,+)) and the result is sliced back.  (G, ., .) operands run the whole
-    batch on one kernel grid (leading batch dimension).
+    Shapes need not be tile-aligned: panels are padded with the semiring
+    zero (inert under ⊕, annihilating under ⊗) and the result is sliced
+    back.  (G, ., .) operands run the whole batch on one kernel grid
+    (leading batch dimension).
     """
+    sr = semiring
     batched, m, n, xp, yp, grid, x_spec, y_spec, z_spec, out_dims = _layout(
-        x, y, bm, bn, bk, kc
+        x, y, bm, bn, bk, kc, sr.zero
     )
     bk_eff = xp.shape[-1] // grid[-1]
     k_axis = len(grid) - 1
@@ -245,15 +260,15 @@ def minplus_pallas(
 
     if accumulate:
         assert a is not None and a.shape[-2:] == (m, n)
-        ap = _pad(a, z_spec.block_shape[-2], z_spec.block_shape[-1], INF)
+        ap = _pad(a, z_spec.block_shape[-2], z_spec.block_shape[-1], sr.zero)
         fn = _grid_call(
-            functools.partial(_kernel_acc, kc=kc, bk=bk_eff, k_axis=k_axis),
+            functools.partial(_kernel_acc, kc=kc, bk=bk_eff, k_axis=k_axis, sr=sr),
             grid, [z_spec, x_spec, y_spec], z_spec, out_shape, interpret,
         )
         zp = fn(ap, xp, yp)
     else:
         fn = _grid_call(
-            functools.partial(_kernel, kc=kc, bk=bk_eff, k_axis=k_axis),
+            functools.partial(_kernel, kc=kc, bk=bk_eff, k_axis=k_axis, sr=sr),
             grid, [x_spec, y_spec], z_spec, out_shape, interpret,
         )
         zp = fn(xp, yp)
@@ -262,7 +277,7 @@ def minplus_pallas(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "kc", "accumulate", "interpret"),
+    static_argnames=("bm", "bn", "bk", "kc", "accumulate", "interpret", "semiring"),
 )
 def minplus_argmin_pallas(
     x: jax.Array,
@@ -275,19 +290,22 @@ def minplus_argmin_pallas(
     kc: int = DEFAULT_KC,
     accumulate: bool = False,
     interpret: bool = False,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, jax.Array]:
-    """(Z, K*) with fused running argmin (global k ids; -1 = no winner).
+    """(Z, K*) with fused running witness (global k ids; -1 = no winner).
 
     Semantics match ``ref.minplus_argmin_ref`` / ``ref.minplus_acc_argmin_ref``:
     without ``accumulate`` ties resolve to the smallest k (the running
-    ``cand < acc`` comparison is strict, so the first — smallest-k — winner
-    is kept, and a fully-unreachable entry never improves on the +inf init
-    and keeps K* = -1, matching the oracle's isinf mask); with it, strict
-    improvement over ``a`` is required (K* = -1 where ``a`` was kept).
-    Batched (G, ., .) operands run on one kernel grid.
+    ``better(cand, acc)`` comparison is strict, so the first — smallest-k —
+    winner is kept, and a fully-unreachable entry never improves on the
+    semiring-zero init and keeps K* = -1, matching the oracle's is_zero
+    mask); with it, strict improvement over ``a`` is required (K* = -1
+    where ``a`` was kept).  Batched (G, ., .) operands run on one kernel
+    grid.
     """
+    sr = semiring
     batched, m, n, xp, yp, grid, x_spec, y_spec, z_spec, out_dims = _layout(
-        x, y, bm, bn, bk, kc
+        x, y, bm, bn, bk, kc, sr.zero
     )
     bk_eff = xp.shape[-1] // grid[-1]
     k_axis = len(grid) - 1
@@ -298,15 +316,19 @@ def minplus_argmin_pallas(
 
     if accumulate:
         assert a is not None and a.shape[-2:] == (m, n)
-        ap = _pad(a, z_spec.block_shape[-2], z_spec.block_shape[-1], INF)
+        ap = _pad(a, z_spec.block_shape[-2], z_spec.block_shape[-1], sr.zero)
         fn = _grid_call(
-            functools.partial(_kernel_acc_argmin, kc=kc, bk=bk_eff, k_axis=k_axis),
+            functools.partial(
+                _kernel_acc_argmin, kc=kc, bk=bk_eff, k_axis=k_axis, sr=sr
+            ),
             grid, [z_spec, x_spec, y_spec], (z_spec, z_spec), out_shape, interpret,
         )
         zp, ip = fn(ap, xp, yp)
     else:
         fn = _grid_call(
-            functools.partial(_kernel_argmin, kc=kc, bk=bk_eff, k_axis=k_axis),
+            functools.partial(
+                _kernel_argmin, kc=kc, bk=bk_eff, k_axis=k_axis, sr=sr
+            ),
             grid, [x_spec, y_spec], (z_spec, z_spec), out_shape, interpret,
         )
         zp, ip = fn(xp, yp)

@@ -1,4 +1,4 @@
-"""Chunked pure-XLA fallbacks for the fused min-plus kernels.
+"""Chunked pure-XLA fallbacks for the fused ⊕⊗ (min-plus family) kernels.
 
 Semantics contracts are the oracles in ``repro.kernels.ref``; these are the
 *runtime* fallbacks (CPU/GPU hosts without the Pallas path) and therefore
@@ -15,12 +15,18 @@ accumulator stays cache-resident).  ``k_chunk=0`` forces the single-pass
 row scan (one reduction over the full k axis per row block).
 
 Both entry points fuse the accumulate operand ``a`` into the same pass —
-``Z = min(A, X (x) Y)`` never takes a second full-matrix sweep — and the
+``Z = A ⊕ (X ⊗ Y)`` never takes a second full-matrix sweep — and the
 argmin variant carries provenance (K*) through the identical chunking:
 k-chunks are folded in ascending order with strict improvement, so ties
 resolve to the smallest k exactly like the oracle and the Pallas kernel,
-and the XLA and Pallas backends are bit-exact on the same inputs (min over
-the same candidate set; fp min is order-insensitive).
+and the XLA and Pallas backends are bit-exact on the same inputs (a
+selective ⊕ over the same candidate set is order-insensitive).
+
+The ``semiring`` argument (a :class:`repro.core.semiring.Semiring`, static
+under jit) supplies the (⊕, ⊗) pair, the padding fill (``zero`` — inert
+under ⊕ and annihilating under ⊗, so phantom rows/columns never win), and
+the improvement direction; the default tropical instance reproduces the
+original min-plus bit-exactly.
 
 Chunk sizes: explicit arguments win; otherwise a fixed heuristic applies
 (``k_chunk=32`` for k > 32, ``row_chunk=32``; single-pass sizing via
@@ -36,6 +42,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.semiring import TROPICAL, Semiring
 
 INF = jnp.inf
 
@@ -58,25 +66,26 @@ def _auto(m: int, n: int, k: int, row_chunk, k_chunk) -> Tuple[int, int]:
     return int(row_chunk), int(k_chunk)
 
 
-def _row_blocks(x, a, m: int, k: int, n: int, rc: int, kc: int):
-    """Pad rows (and k, when k-chunked) with +inf and reshape into blocks.
+def _row_blocks(x, a, m: int, k: int, n: int, rc: int, kc: int, fill):
+    """Pad rows (and k, when k-chunked) with the semiring zero and reshape
+    into blocks.
 
     ``ab`` is None when there is no accumulate operand — callers scan over
-    ``xb`` alone rather than streaming a redundant +inf accumulator."""
+    ``xb`` alone rather than streaming a redundant all-zero accumulator."""
     pad = (-m) % rc
     kp = k + ((-k) % kc if kc else 0)
-    xp = jnp.pad(x, ((0, pad), (0, kp - k)), constant_values=INF)
+    xp = jnp.pad(x, ((0, pad), (0, kp - k)), constant_values=fill)
     nblk = xp.shape[0] // rc
     xb = xp.reshape(nblk, rc, kp)
     ab = None
     if a is not None:
-        ab = jnp.pad(a, ((0, pad), (0, 0)), constant_values=INF).reshape(
+        ab = jnp.pad(a, ((0, pad), (0, 0)), constant_values=fill).reshape(
             nblk, rc, n
         )
     return xb, ab, kp
 
 
-@partial(jax.jit, static_argnames=("row_chunk", "k_chunk"))
+@partial(jax.jit, static_argnames=("row_chunk", "k_chunk", "semiring"))
 def minplus_xla(
     x: jax.Array,
     y: jax.Array,
@@ -84,8 +93,10 @@ def minplus_xla(
     *,
     row_chunk: Optional[int] = None,
     k_chunk: Optional[int] = None,
+    semiring: Semiring = TROPICAL,
 ) -> jax.Array:
-    """Z[i,j] = min_k x[i,k]+y[k,:]; fused Z = min(a, .) when ``a`` is given."""
+    """Z[i,j] = ⊕_k x[i,k] ⊗ y[k,:]; fused Z = A ⊕ (.) when ``a`` is given."""
+    sr = semiring
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)
@@ -95,26 +106,26 @@ def minplus_xla(
     yt = y.T
 
     if not kc and rc >= m:
-        z = jnp.min(x[:, None, :] + yt[None, :, :], axis=-1)
-        return z if a is None else jnp.minimum(a, z)
+        z = sr.reduce(sr.mul(x[:, None, :], yt[None, :, :]), axis=-1)
+        return z if a is None else sr.add(a, z)
 
     rc = min(rc, m)
-    xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc)
-    ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=INF)
+    xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc, sr.zero)
+    ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=sr.zero)
 
     if kc:
         def fold(xi, acc0):                            # (rc, kp) -> (rc, n)
             def kstep(i, acc):
                 xs = jax.lax.dynamic_slice(xi, (0, i * kc), (rc, kc))
                 ys = jax.lax.dynamic_slice(ytp, (0, i * kc), (n, kc))
-                cand = jnp.min(xs[:, None, :] + ys[None, :, :], axis=-1)
-                return jnp.minimum(acc, cand)
+                cand = sr.reduce(sr.mul(xs[:, None, :], ys[None, :, :]), axis=-1)
+                return sr.add(acc, cand)
 
             return jax.lax.fori_loop(0, kp // kc, kstep, acc0)
 
         if a is None:
             def row(carry, xi):
-                return carry, fold(xi, jnp.full((rc, n), INF, x.dtype))
+                return carry, fold(xi, jnp.full((rc, n), sr.zero, x.dtype))
 
             _, zb = jax.lax.scan(row, None, xb)
         else:
@@ -124,21 +135,21 @@ def minplus_xla(
             _, zb = jax.lax.scan(row, None, (xb, ab))
     elif a is None:
         def row(carry, xi):
-            return carry, jnp.min(xi[:, None, :] + ytp[None, :, :], axis=-1)
+            return carry, sr.reduce(sr.mul(xi[:, None, :], ytp[None, :, :]), axis=-1)
 
         _, zb = jax.lax.scan(row, None, xb)
     else:
         def row(carry, inp):
             xi, ai = inp
-            return carry, jnp.minimum(
-                ai, jnp.min(xi[:, None, :] + ytp[None, :, :], axis=-1)
+            return carry, sr.add(
+                ai, sr.reduce(sr.mul(xi[:, None, :], ytp[None, :, :]), axis=-1)
             )
 
         _, zb = jax.lax.scan(row, None, (xb, ab))
     return zb.reshape(-1, n)[:m]
 
 
-@partial(jax.jit, static_argnames=("row_chunk", "k_chunk"))
+@partial(jax.jit, static_argnames=("row_chunk", "k_chunk", "semiring"))
 def minplus_argmin_xla(
     x: jax.Array,
     y: jax.Array,
@@ -146,13 +157,15 @@ def minplus_argmin_xla(
     *,
     row_chunk: Optional[int] = None,
     k_chunk: Optional[int] = None,
+    semiring: Semiring = TROPICAL,
 ) -> Tuple[jax.Array, jax.Array]:
     """(Z, K*) matching ``ref.minplus_argmin_ref`` / ``ref.minplus_acc_argmin_ref``.
 
-    Without ``a``: K* is the (smallest) argmin k, -1 where Z is inf.  With
-    ``a``: strict improvement over ``a`` is required; K* = -1 where ``a``
-    was kept (ties keep ``a``).
+    Without ``a``: K* is the (smallest) winning k, -1 where Z is the
+    semiring zero.  With ``a``: strict improvement over ``a`` is required;
+    K* = -1 where ``a`` was kept (ties keep ``a``).
     """
+    sr = semiring
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)
@@ -161,15 +174,15 @@ def minplus_argmin_xla(
     rc, kc = _auto(m, n, k, row_chunk, k_chunk)
     yt = y.T
     rc = min(rc, m)
-    xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc)
-    ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=INF)
+    xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc, sr.zero)
+    ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=sr.zero)
     accumulate = a is not None
 
     def finish(z, ks):
-        # non-accumulate single-pass: argmin over the full k, -1 only at inf
+        # non-accumulate single-pass: winner over the full k, -1 only at zero
         if accumulate:
             return z, ks
-        return z, jnp.where(jnp.isinf(z), jnp.int32(-1), ks)
+        return z, jnp.where(sr.is_zero(z), jnp.int32(-1), ks)
 
     if kc:
         def fold(xi, acc0):
@@ -177,10 +190,10 @@ def minplus_argmin_xla(
                 acc, idx = st
                 xs = jax.lax.dynamic_slice(xi, (0, i * kc), (rc, kc))
                 ys = jax.lax.dynamic_slice(ytp, (0, i * kc), (n, kc))
-                l = xs[:, None, :] + ys[None, :, :]     # (rc, n, kc)
-                cand = jnp.min(l, axis=-1)
-                ka = jnp.argmin(l, axis=-1).astype(jnp.int32) + i * kc
-                better = cand < acc                      # strict: ties keep
+                l = sr.mul(xs[:, None, :], ys[None, :, :])  # (rc, n, kc)
+                cand = sr.reduce(l, axis=-1)
+                ka = sr.argreduce(l, axis=-1).astype(jnp.int32) + i * kc
+                better = sr.better(cand, acc)            # strict: ties keep
                 return (
                     jnp.where(better, cand, acc),        # earlier (smaller) k
                     jnp.where(better, ka, idx),
@@ -196,16 +209,16 @@ def minplus_argmin_xla(
             _, (zb, kb) = jax.lax.scan(row, None, (xb, ab))
         else:
             def row(carry, xi):
-                return carry, fold(xi, jnp.full((rc, n), INF, x.dtype))
+                return carry, fold(xi, jnp.full((rc, n), sr.zero, x.dtype))
 
             _, (zb, kb) = jax.lax.scan(row, None, xb)
     elif accumulate:
         def row(carry, inp):
             xi, ai = inp
-            l = xi[:, None, :] + ytp[None, :, :]
-            z = jnp.min(l, axis=-1)
-            ks = jnp.argmin(l, axis=-1).astype(jnp.int32)
-            better = z < ai
+            l = sr.mul(xi[:, None, :], ytp[None, :, :])
+            z = sr.reduce(l, axis=-1)
+            ks = sr.argreduce(l, axis=-1).astype(jnp.int32)
+            better = sr.better(z, ai)
             return carry, (
                 jnp.where(better, z, ai),
                 jnp.where(better, ks, jnp.int32(-1)),
@@ -214,10 +227,10 @@ def minplus_argmin_xla(
         _, (zb, kb) = jax.lax.scan(row, None, (xb, ab))
     else:
         def row(carry, xi):
-            l = xi[:, None, :] + ytp[None, :, :]
+            l = sr.mul(xi[:, None, :], ytp[None, :, :])
             return carry, (
-                jnp.min(l, axis=-1),
-                jnp.argmin(l, axis=-1).astype(jnp.int32),
+                sr.reduce(l, axis=-1),
+                sr.argreduce(l, axis=-1).astype(jnp.int32),
             )
 
         _, (zb, kb) = jax.lax.scan(row, None, xb)

@@ -21,8 +21,14 @@ The tuned-dispatch contract:
   * **Self-tuning block sizes.**  Explicit ``**block_kw`` wins; otherwise
     the persistent autotune cache (``repro.kernels.autotune``,
     ``REPRO_AUTOTUNE*`` env vars) is consulted per (shape-bucket, dtype,
-    backend); otherwise compiled-in defaults apply.  The consult is a
-    trace-time dict read — no measurement ever runs on the dispatch path.
+    backend, semiring); otherwise compiled-in defaults apply.  The consult
+    is a trace-time dict read — no measurement ever runs on the dispatch
+    path.
+  * **Pluggable semiring.**  Every entry point takes ``semiring=`` (a
+    registry name or ``repro.core.semiring.Semiring`` instance; default
+    ``"tropical"`` reproduces classic min-plus bit-exactly).  The same
+    kernels then compute widest path (``"bottleneck"``), most-reliable
+    path (``"reliability"``), and transitive closure (``"boolean"``).
 
 On TPU the Pallas kernels are the hot path.  On this CPU container the
 kernels are validated in ``interpret=True`` mode (Python-level execution) by
@@ -44,6 +50,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.semiring import Semiring, SemiringLike, get_semiring
 
 from . import ref
 from .fw_block import fw_block_pallas, fw_block_pred_pallas
@@ -74,57 +82,76 @@ def _dims(x, y):
     return batched, g, x.shape[-2], x.shape[-1], y.shape[-1]
 
 
-def _tuned(b: str, x, y, block_kw: dict) -> dict:
+def _tuned(b: str, x, y, block_kw: dict, sr: Semiring) -> dict:
     """Block params for this dispatch: explicit kwargs win, else the
-    autotune cache; either way filtered to the active backend's knobs."""
+    autotune cache (keyed per-semiring; tropical keeps the legacy keys);
+    either way filtered to the active backend's knobs."""
     if not block_kw:
         from . import autotune  # lazy: cheap, and keeps import order trivial
 
         batched, g, m, k, n = _dims(x, y)
-        block_kw = autotune.lookup(b, x.dtype, m, k, n, g=g)
+        block_kw = autotune.lookup(b, x.dtype, m, k, n, g=g, semiring=sr.name)
     keys = ("row_chunk", "k_chunk") if b == "xla" else ("bm", "bn", "bk", "kc")
     return {k_: v for k_, v in block_kw.items() if k_ in keys}
 
 
 def minplus(
-    x: jax.Array, y: jax.Array, a: Optional[jax.Array] = None, **block_kw
+    x: jax.Array,
+    y: jax.Array,
+    a: Optional[jax.Array] = None,
+    *,
+    semiring: SemiringLike = "tropical",
+    **block_kw,
 ) -> jax.Array:
-    """Z = min_k x[:,k]+y[k,:]; fused Z = min(a, .) when ``a`` is given.
+    """Z = ⊕_k x[:,k] ⊗ y[k,:]; fused Z = a ⊕ (.) when ``a`` is given.
 
-    2D or batched (G, ., .) operands; block sizes from ``block_kw`` or the
-    autotune cache (see module docstring).
+    2D or batched (G, ., .) operands; ``semiring`` is a registry name or
+    instance (default tropical min-plus, bit-exact with the pre-registry
+    dispatch); block sizes from ``block_kw`` or the autotune cache (see
+    module docstring).
     """
+    sr = get_semiring(semiring)
     b = backend()
-    kw = _tuned(b, x, y, block_kw)
+    kw = _tuned(b, x, y, block_kw, sr)
     if b == "xla":
         rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
         if x.ndim == 3:
             return jax.vmap(
-                lambda xx, yy, aa: minplus_xla(xx, yy, aa, row_chunk=rc, k_chunk=kc)
+                lambda xx, yy, aa: minplus_xla(
+                    xx, yy, aa, row_chunk=rc, k_chunk=kc, semiring=sr
+                )
             )(x, y, a)
-        return minplus_xla(x, y, a, row_chunk=rc, k_chunk=kc)
+        return minplus_xla(x, y, a, row_chunk=rc, k_chunk=kc, semiring=sr)
     return minplus_pallas(
-        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **kw
+        x, y, a, accumulate=a is not None, interpret=(b == "interpret"),
+        semiring=sr, **kw,
     )
 
 
 def minplus_argmin(
-    x: jax.Array, y: jax.Array, a: Optional[jax.Array] = None, **block_kw
+    x: jax.Array,
+    y: jax.Array,
+    a: Optional[jax.Array] = None,
+    *,
+    semiring: SemiringLike = "tropical",
+    **block_kw,
 ) -> Tuple[jax.Array, jax.Array]:
-    """(Z, K*) with fused global-k argmin (see ref for tie/-1 semantics)."""
+    """(Z, K*) with fused global-k witness (see ref for tie/-1 semantics)."""
+    sr = get_semiring(semiring)
     b = backend()
-    kw = _tuned(b, x, y, block_kw)
+    kw = _tuned(b, x, y, block_kw, sr)
     if b == "xla":
         rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
         if x.ndim == 3:
             return jax.vmap(
                 lambda xx, yy, aa: minplus_argmin_xla(
-                    xx, yy, aa, row_chunk=rc, k_chunk=kc
+                    xx, yy, aa, row_chunk=rc, k_chunk=kc, semiring=sr
                 )
             )(x, y, a)
-        return minplus_argmin_xla(x, y, a, row_chunk=rc, k_chunk=kc)
+        return minplus_argmin_xla(x, y, a, row_chunk=rc, k_chunk=kc, semiring=sr)
     return minplus_argmin_pallas(
-        x, y, a, accumulate=a is not None, interpret=(b == "interpret"), **kw
+        x, y, a, accumulate=a is not None, interpret=(b == "interpret"),
+        semiring=sr, **kw,
     )
 
 
@@ -178,37 +205,42 @@ def minplus_pred(
     pa: Optional[jax.Array] = None,
     k_offset=0,
     j_offset=0,
+    semiring: SemiringLike = "tropical",
     **block_kw,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Fused min-plus with predecessor propagation, on the argmin kernel.
+    """Fused ⊕⊗ with predecessor propagation, on the argmin kernel.
 
-    Without ``a``: plain product; predecessors are -1 where Z is inf.  With
-    ``a``/``pa``: the strict-improvement accumulate update
-    ``Z = min(a, x (x) y)`` where entries that kept ``a`` keep ``pa`` —
+    Without ``a``: plain product; predecessors are -1 where Z is the
+    semiring zero.  With ``a``/``pa``: the strict-improvement accumulate
+    update ``Z = a ⊕ (x ⊗ y)`` where entries that kept ``a`` keep ``pa`` —
     i.e. exactly the old ``z, pz = minplus_pred(...); better = z < a``
     pattern, in one fused dispatch.
     """
-    z, kstar = minplus_argmin(x, y, a, **block_kw)
+    z, kstar = minplus_argmin(x, y, a, semiring=semiring, **block_kw)
     pz = pred_from_kstar(
         kstar, px, py, k_offset=k_offset, j_offset=j_offset, fallback=pa
     )
     return z, pz
 
 
-def fw_block(d: jax.Array) -> jax.Array:
+def fw_block(d: jax.Array, *, semiring: SemiringLike = "tropical") -> jax.Array:
     """In-VMEM FW closure of a (B,B) tile or (T,B,B) batch of tiles."""
+    sr = get_semiring(semiring)
     b = backend()
     if b == "xla":
         if d.ndim == 3:
-            return jax.vmap(ref.fw_block_ref)(d)
-        return ref.fw_block_ref(d)
-    return fw_block_pallas(d, interpret=(b == "interpret"))
+            return jax.vmap(lambda dd: ref.fw_block_ref(dd, sr))(d)
+        return ref.fw_block_ref(d, sr)
+    return fw_block_pallas(d, interpret=(b == "interpret"), semiring=sr)
 
 
-def fw_block_pred(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def fw_block_pred(
+    d: jax.Array, p: jax.Array, *, semiring: SemiringLike = "tropical"
+) -> Tuple[jax.Array, jax.Array]:
+    sr = get_semiring(semiring)
     b = backend()
     if b == "xla":
         if d.ndim == 3:
-            return jax.vmap(ref.fw_block_pred_ref)(d, p)
-        return ref.fw_block_pred_ref(d, p)
-    return fw_block_pred_pallas(d, p, interpret=(b == "interpret"))
+            return jax.vmap(lambda dd, pp: ref.fw_block_pred_ref(dd, pp, sr))(d, p)
+        return ref.fw_block_pred_ref(d, p, sr)
+    return fw_block_pred_pallas(d, p, interpret=(b == "interpret"), semiring=sr)

@@ -1,7 +1,11 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These are the semantics contracts: each kernel's test sweeps shapes/dtypes
-and asserts allclose against the function of the same name here.
+and asserts allclose against the function of the same name here.  All oracles
+take a ``semiring`` (name or instance, default tropical) and define the
+generalized ⊕⊗ semantics the backends must match bit-exactly: ⊕-reduce over
+the same candidate set (selective ⊕ is order-insensitive), witness ties to
+the smallest k, ``zero`` = "no path" (K* = -1).
 """
 
 from __future__ import annotations
@@ -10,6 +14,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.semiring import SemiringLike, get_semiring
 
 INF = jnp.inf
 
@@ -23,62 +29,78 @@ __all__ = [
 ]
 
 
-def minplus_ref(x: jax.Array, y: jax.Array) -> jax.Array:
-    """Z[i, j] = min_k x[i, k] + y[k, j] (tropical matmul)."""
-    return jnp.min(x[:, :, None] + y[None, :, :], axis=1)
+def minplus_ref(
+    x: jax.Array, y: jax.Array, semiring: SemiringLike = "tropical"
+) -> jax.Array:
+    """Z[i, j] = ⊕_k x[i, k] ⊗ y[k, j] (tropical: min_k x[i,k] + y[k,j])."""
+    sr = get_semiring(semiring)
+    return sr.reduce(sr.mul(x[:, :, None], y[None, :, :]), axis=1)
 
 
-def minplus_argmin_ref(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """(Z, K*) with K*[i, j] = argmin_k x[i, k] + y[k, j]; K* = -1 if Z = inf.
+def minplus_argmin_ref(
+    x: jax.Array, y: jax.Array, semiring: SemiringLike = "tropical"
+) -> Tuple[jax.Array, jax.Array]:
+    """(Z, K*) with K*[i, j] = the winning k; K* = -1 where Z = zero.
 
-    Ties resolve to the smallest k (jnp.argmin convention).
+    Ties resolve to the smallest k (jnp.argmin/argmax convention).
     """
-    l = x[:, :, None] + y[None, :, :]
-    z = jnp.min(l, axis=1)
-    kstar = jnp.argmin(l, axis=1).astype(jnp.int32)
-    return z, jnp.where(jnp.isinf(z), jnp.int32(-1), kstar)
+    sr = get_semiring(semiring)
+    l = sr.mul(x[:, :, None], y[None, :, :])
+    z = sr.reduce(l, axis=1)
+    kstar = sr.argreduce(l, axis=1).astype(jnp.int32)
+    return z, jnp.where(sr.is_zero(z), jnp.int32(-1), kstar)
 
 
-def minplus_acc_ref(a: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
-    """Fused accumulate: Z = min(A, X (x) Y) elementwise."""
-    return jnp.minimum(a, minplus_ref(x, y))
+def minplus_acc_ref(
+    a: jax.Array, x: jax.Array, y: jax.Array, semiring: SemiringLike = "tropical"
+) -> jax.Array:
+    """Fused accumulate: Z = A ⊕ (X ⊗ Y) elementwise."""
+    sr = get_semiring(semiring)
+    return sr.add(a, minplus_ref(x, y, sr))
 
 
 def minplus_acc_argmin_ref(
-    a: jax.Array, x: jax.Array, y: jax.Array
+    a: jax.Array, x: jax.Array, y: jax.Array, semiring: SemiringLike = "tropical"
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused accumulate with provenance: K* = -1 where A kept (no improvement),
-    else the argmin k.  Strict improvement only (ties keep A)."""
-    z, kstar = minplus_argmin_ref(x, y)
-    better = z < a
+    else the winning k.  Strict improvement only (ties keep A)."""
+    sr = get_semiring(semiring)
+    z, kstar = minplus_argmin_ref(x, y, sr)
+    better = sr.better(z, a)
     return jnp.where(better, z, a), jnp.where(better, kstar, jnp.int32(-1))
 
 
-def fw_block_ref(d: jax.Array) -> jax.Array:
+def fw_block_ref(d: jax.Array, semiring: SemiringLike = "tropical") -> jax.Array:
     """In-block Floyd-Warshall closure: B pivot steps on a (B, B) tile."""
+    sr = get_semiring(semiring)
 
     def body(k, dd):
-        via = jax.lax.dynamic_slice(dd, (0, k), (dd.shape[0], 1)) + jax.lax.dynamic_slice(
-            dd, (k, 0), (1, dd.shape[1])
+        via = sr.mul(
+            jax.lax.dynamic_slice(dd, (0, k), (dd.shape[0], 1)),
+            jax.lax.dynamic_slice(dd, (k, 0), (1, dd.shape[1])),
         )
-        return jnp.minimum(dd, via)
+        return sr.add(dd, via)
 
     return jax.lax.fori_loop(0, d.shape[0], body, d)
 
 
-def fw_block_pred_ref(d: jax.Array, p: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def fw_block_pred_ref(
+    d: jax.Array, p: jax.Array, semiring: SemiringLike = "tropical"
+) -> Tuple[jax.Array, jax.Array]:
     """In-block FW closure with predecessor propagation.
 
     On strict improvement through pivot k: pred[i, j] <- pred[k, j].
     ``p`` holds *global* node ids (the caller offsets them)."""
+    sr = get_semiring(semiring)
 
     def body(k, dp):
         dd, pp = dp
-        via = jax.lax.dynamic_slice(dd, (0, k), (dd.shape[0], 1)) + jax.lax.dynamic_slice(
-            dd, (k, 0), (1, dd.shape[1])
+        via = sr.mul(
+            jax.lax.dynamic_slice(dd, (0, k), (dd.shape[0], 1)),
+            jax.lax.dynamic_slice(dd, (k, 0), (1, dd.shape[1])),
         )
         pk = jax.lax.dynamic_slice(pp, (k, 0), (1, pp.shape[1]))
-        better = via < dd
+        better = sr.better(via, dd)
         return (
             jnp.where(better, via, dd),
             jnp.where(better, jnp.broadcast_to(pk, pp.shape), pp),

@@ -29,6 +29,8 @@ def main(argv=None) -> int:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--rho", type=float, default=50.0)
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--semiring", default="tropical",
+                    help="path semiring (see repro.core.SEMIRINGS)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -51,22 +53,33 @@ def main(argv=None) -> int:
     mesh = jax.make_mesh(dims, axes)
     print(f"[mesh] {dict(zip(axes, dims))} = {mesh.size} devices")
 
+    from repro.core import get_semiring
+    from repro.launch.serve import _recast_graph
+
+    sr = get_semiring(args.semiring)
     g = generate_np(np.random.default_rng(args.seed), args.n, rho=args.rho)
-    print(f"[graph] N={g.n_nodes} edges={g.n_edges} density={g.density:.3f}")
+    h = _recast_graph(g.h, sr.name)
+    print(f"[graph] N={g.n_nodes} edges={g.n_edges} density={g.density:.3f} "
+          f"semiring={sr.name}")
 
     t0 = time.time()
     out = apsp_distributed(
-        jax.numpy.asarray(g.h), mesh=mesh, method=args.method,
-        multi_pod=multi_pod, block_size=args.block_size,
+        jax.numpy.asarray(h), mesh=mesh, method=args.method,
+        multi_pod=multi_pod, block_size=args.block_size, semiring=sr,
     )
     out = np.asarray(out)
+    reach = float((~np.asarray(sr.is_zero(out))).mean())
     print(f"[solve] method={args.method} wall={time.time()-t0:.2f}s "
-          f"finite-pairs={np.isfinite(out).mean():.3f}")
+          f"reachable-pairs={reach:.3f}")
 
     if args.verify:
-        d = g.h.copy()
+        add = {"tropical": np.minimum}.get(sr.name, np.maximum)
+        mul = {"tropical": np.add, "reliability": np.multiply}.get(
+            sr.name, np.minimum
+        )
+        d = h.copy()
         for k in range(args.n):
-            d = np.minimum(d, d[:, k][:, None] + d[k, :][None, :])
+            d = add(d, mul(d[:, k][:, None], d[k, :][None, :]))
         ok = np.allclose(out, d, equal_nan=True)
         print(f"[verify] vs numpy FW oracle: {'OK' if ok else 'MISMATCH'}")
         return 0 if ok else 1

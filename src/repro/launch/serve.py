@@ -87,6 +87,28 @@ def serve_mind(n_requests: int, seed: int = 0) -> int:
     return 0
 
 
+def _recast_graph(h: np.ndarray, semiring: str) -> np.ndarray:
+    """Recast a tropical cost matrix into another semiring's domain, keeping
+    the same edge structure: no-edge -> semiring zero, diagonal -> one,
+    costs -> capacities (bottleneck), probabilities 1/(1+cost)
+    (reliability), or 1.0 (boolean)."""
+    if semiring == "tropical":
+        return h
+    edge = np.isfinite(h) & ~np.eye(h.shape[0], dtype=bool)
+    if semiring == "bottleneck":
+        out = np.where(edge, h, -np.inf).astype(np.float32)
+        np.fill_diagonal(out, np.inf)
+    elif semiring == "reliability":
+        out = np.where(edge, 1.0 / (1.0 + h), 0.0).astype(np.float32)
+        np.fill_diagonal(out, 1.0)
+    elif semiring == "boolean":
+        out = np.where(edge, 1.0, 0.0).astype(np.float32)
+        np.fill_diagonal(out, 1.0)
+    else:
+        raise ValueError(f"no request recast rule for semiring {semiring!r}")
+    return out
+
+
 def serve_apsp(
     n_requests: int,
     *,
@@ -94,6 +116,7 @@ def serve_apsp(
     n_max: int = 128,
     method: str = "squaring",
     with_pred: bool = False,
+    semiring: str = "tropical",
     seed: int = 0,
 ) -> int:
     """Continuous-batched APSP serving over a synthetic graph-request stream.
@@ -102,7 +125,9 @@ def serve_apsp(
     slots, pads into the fixed (batch, n_max, n_max) buffer, and runs the
     one compiled batched solver.  The first cycle pays compilation; every
     later cycle reuses it — that amortization is the whole point of the
-    batched engine.
+    batched engine.  ``semiring`` serves any registry instance (widest
+    path, reliability, reachability) from the same loop — the request
+    stream is recast into that semiring's domain.
     """
     from repro.core import solve_batch
     from repro.core.graphgen import generate_np
@@ -120,10 +145,12 @@ def serve_apsp(
         t_tune = time.time()
         src = "nothing to tune"
         if method == "blocked_fw":
-            tuned = autotune.tune_blocked_fw(n_max, 256, g=batch, reps=1)
+            tuned = autotune.tune_blocked_fw(
+                n_max, 256, g=batch, reps=1, semiring=semiring
+            )
             src = {k: e.get("source") for k, e in tuned.items()}
         elif method in ("squaring", "squaring_3d"):
-            e = autotune.tune(n_max, n_max, n_max, reps=1)
+            e = autotune.tune(n_max, n_max, n_max, reps=1, semiring=semiring)
             src = e.get("source")
         elif method == "rkleene":
             s = 64                            # rkleene pads to pow2 x base=64
@@ -132,7 +159,10 @@ def serve_apsp(
             s //= 2                           # largest quadrant product edge
             srcs = []
             while s >= 64:
-                srcs.append(autotune.tune(s, s, s, reps=1).get("source"))
+                srcs.append(
+                    autotune.tune(s, s, s, reps=1, semiring=semiring)
+                    .get("source")
+                )
                 s //= 2
             src = srcs or "leaf-only (closure kernel)"
         print(f"[autotune] dispatch warm for n_max={n_max} "
@@ -142,23 +172,26 @@ def serve_apsp(
     done = 0
     t0 = time.time()
     t_compile = None
+    from repro.core import get_semiring
+
+    sr = get_semiring(semiring)
     while done < n_requests:
         sizes = rng.integers(4, n_max + 1, size=batch)
         graphs = [generate_np(rng, int(n)) for n in sizes]
         res = solve_batch(
-            [g.h for g in graphs], method=method, with_pred=with_pred,
-            n_max=n_max,
+            [_recast_graph(g.h, sr.name) for g in graphs], method=method,
+            with_pred=with_pred, n_max=n_max, semiring=sr,
         )
         jax.block_until_ready(res.dist)
         if t_compile is None:
             t_compile = time.time() - t0
         reach = [
-            int(np.isfinite(np.asarray(res.unpadded(i).dist)).sum())
+            int((~np.asarray(sr.is_zero(res.unpadded(i).dist))).sum())
             for i in range(min(2, batch))
         ]
         done += batch
         print(f"[serve] batch of {batch} graphs (sizes {sizes.min()}-{sizes.max()}) "
-              f"-> dist {tuple(res.dist.shape)} (finite entries sample: {reach})")
+              f"-> dist {tuple(res.dist.shape)} (reachable entries sample: {reach})")
     dt = time.time() - t0
     msg = f"[done] {done} graphs, {done / dt:.1f} graphs/s end-to-end"
     if t_compile is not None:
@@ -184,13 +217,16 @@ def main(argv=None) -> int:
                     help="apsp: solver (see repro.core.METHODS)")
     ap.add_argument("--with-pred", action="store_true",
                     help="apsp: also compute predecessor matrices")
+    ap.add_argument("--semiring", default="tropical",
+                    help="apsp: path semiring (see repro.core.SEMIRINGS)")
     args = ap.parse_args(argv)
     if args.arch == "mind":
         return serve_mind(args.requests, args.seed)
     if args.arch == "apsp":
         return serve_apsp(
             args.requests, batch=args.batch, n_max=args.n_max,
-            method=args.method, with_pred=args.with_pred, seed=args.seed,
+            method=args.method, with_pred=args.with_pred,
+            semiring=args.semiring, seed=args.seed,
         )
     return serve_lm(args.arch, args.requests, args.gen, args.seed)
 

@@ -1,0 +1,102 @@
+"""Differential oracle for the closed-semiring solver stack.
+
+Pure-numpy O(n^3) matrix closure per registered semiring — deliberately the
+dumbest possible implementation (textbook FW pivot loop, one ufunc pair per
+semiring, no jax, no chunking, no padding) so that any disagreement with the
+solvers points at the solvers.  Plus an independent NetworkX cross-check for
+the tropical instance (Dijkstra per source — a genuinely different
+algorithm), used when networkx is importable.
+
+Also hosts the in-domain random matrix generators the semiring test files
+share: off-diagonal "no edge" entries are the semiring zero, the diagonal is
+the semiring one, edge values are drawn from each instance's documented
+domain.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+# (⊕, ⊗) as numpy ufuncs per registered semiring — kept independent of the
+# jnp pairs in repro.core.semiring on purpose (differential testing).
+NP_OPS: Dict[str, Tuple[Callable, Callable]] = {
+    "tropical": (np.minimum, np.add),
+    "bottleneck": (np.maximum, np.minimum),
+    "reliability": (np.maximum, np.multiply),
+    "boolean": (np.maximum, np.minimum),
+}
+
+# (zero, one) constants per semiring.
+NP_CONSTS: Dict[str, Tuple[float, float]] = {
+    "tropical": (np.inf, 0.0),
+    "bottleneck": (-np.inf, np.inf),
+    "reliability": (0.0, 1.0),
+    "boolean": (0.0, 1.0),
+}
+
+
+def np_matmul(x: np.ndarray, y: np.ndarray, semiring: str) -> np.ndarray:
+    """Z[i, j] = ⊕_k x[i, k] ⊗ y[k, j] — O(n^3) broadcast, small n only."""
+    add, mul = NP_OPS[semiring]
+    return add.reduce(mul(x[:, :, None], y[None, :, :]), axis=1)
+
+
+def np_closure(h: np.ndarray, semiring: str = "tropical") -> np.ndarray:
+    """Textbook FW closure over the semiring: n rank-1 pivot updates."""
+    add, mul = NP_OPS[semiring]
+    d = np.array(h, copy=True)
+    for k in range(d.shape[0]):
+        d = add(d, mul(d[:, k][:, None], d[k, :][None, :]))
+    return d
+
+
+def np_eye(n: int, semiring: str, dtype=np.float32) -> np.ndarray:
+    zero, one = NP_CONSTS[semiring]
+    out = np.full((n, n), zero, dtype)
+    np.fill_diagonal(out, one)
+    return out
+
+
+def generate(rng: np.random.Generator, n: int, semiring: str,
+             density: float = 0.4) -> np.ndarray:
+    """Random in-domain (n, n) cost matrix: ~``density`` edges, zero
+    elsewhere off-diagonal, one on the diagonal."""
+    zero, one = NP_CONSTS[semiring]
+    edge = rng.uniform(size=(n, n)) < density
+    if semiring == "tropical":
+        vals = rng.uniform(1, 100, size=(n, n))
+    elif semiring == "bottleneck":
+        vals = rng.uniform(1, 100, size=(n, n))
+    elif semiring == "reliability":
+        # strictly below 1 so ⊗ stays strictly monotone (pred trees, see
+        # Semiring.monotone_mul)
+        vals = rng.uniform(0.05, 0.999, size=(n, n))
+    else:  # boolean
+        vals = np.ones((n, n))
+    out = np.where(edge, vals, zero).astype(np.float32)
+    np.fill_diagonal(out, one)
+    return out
+
+
+def nx_tropical_closure(h: np.ndarray) -> Optional[np.ndarray]:
+    """Independent shortest-path oracle via NetworkX Dijkstra, or None when
+    networkx is not importable.  Tropical domain only (nonnegative costs)."""
+    try:
+        import networkx as nx
+    except ImportError:
+        return None
+    n = h.shape[0]
+    g = nx.DiGraph()
+    g.add_nodes_from(range(n))
+    ii, jj = np.nonzero(np.isfinite(h) & ~np.eye(n, dtype=bool))
+    g.add_weighted_edges_from(
+        (int(i), int(j), float(h[i, j])) for i, j in zip(ii, jj)
+    )
+    d = np.full((n, n), np.inf, np.float64)
+    np.fill_diagonal(d, 0.0)
+    for src, lengths in nx.all_pairs_dijkstra_path_length(g):
+        for dst, val in lengths.items():
+            d[src, dst] = val
+    return d

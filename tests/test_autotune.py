@@ -88,15 +88,48 @@ def test_ops_dispatch_consults_cache(at_cache, monkeypatch):
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.uniform(1, 9, (48, 24)), jnp.float32)
     y = jnp.asarray(rng.uniform(1, 9, (24, 48)), jnp.float32)
+
+    def blocks():
+        return {k: v for k, v in seen.items() if k in ("row_chunk", "k_chunk")}
+
     z = ops.minplus(x, y)
-    assert seen == {"row_chunk": 6, "k_chunk": 8}
+    assert blocks() == {"row_chunk": 6, "k_chunk": 8}
+    assert seen["semiring"].name == "tropical"      # default instance rides along
     np.testing.assert_allclose(
         np.asarray(z), np.asarray(real(x, y, row_chunk=48, k_chunk=0))
     )
     # explicit block_kw overrides the cache
     seen.clear()
     ops.minplus(x, y, row_chunk=4, k_chunk=0)
-    assert seen == {"row_chunk": 4, "k_chunk": 0}
+    assert blocks() == {"row_chunk": 4, "k_chunk": 0}
+
+
+def test_semiring_cache_keys(at_cache):
+    """Per-semiring keying: tropical keeps the legacy key format (old caches
+    stay valid), non-tropical entries get an |s:<name> segment and fall back
+    to the same-shape tropical winner until tuned themselves."""
+    assert autotune.key_for("xla", jnp.float32, 64, 32, 64) == \
+        "xla|float32|g0|m64|k32|n64"
+    assert autotune.key_for("xla", jnp.float32, 64, 32, 64,
+                            semiring="bottleneck") == \
+        "xla|float32|g0|m64|k32|n64|s:bottleneck"
+
+    e = autotune.tune(64, 32, 64, backend="xla", reps=1)   # tropical entry
+    got = autotune.lookup("xla", jnp.float32, 64, 32, 64, semiring="bottleneck")
+    assert got == {k: v for k, v in e["params"].items()
+                   if k in autotune._XLA_KEYS}              # tropical fallback
+
+    eb = autotune.tune(64, 32, 64, backend="xla", reps=1, semiring="bottleneck")
+    assert eb["source"] == "measured"
+    import json
+
+    keys = set(json.loads(at_cache.read_text())["entries"])
+    assert keys == {"xla|float32|g0|m64|k32|n64",
+                    "xla|float32|g0|m64|k32|n64|s:bottleneck"}
+    # once tuned, the per-semiring entry wins
+    got2 = autotune.lookup("xla", jnp.float32, 64, 32, 64, semiring="bottleneck")
+    assert got2 == {k: v for k, v in eb["params"].items()
+                    if k in autotune._XLA_KEYS}
 
 
 def test_candidates_respect_shape(at_cache):

@@ -119,6 +119,75 @@ def test_blocked_fw_pred_routes_through_ops_helper(rng, monkeypatch):
     assert validate_tree(g.h, np.asarray(r.dist), np.asarray(r.pred))
 
 
+@pytest.mark.parametrize("semiring", ["tropical", "bottleneck", "reliability", "boolean"])
+def test_argmin_tie_breaking_parity(semiring, monkeypatch):
+    """Tied candidates must pick the same witness k on XLA and
+    Pallas-interpret — pinned to the *smallest* k, including ties that
+    straddle the k-chunk boundaries of both backends (k=130 spans the XLA
+    k_chunk=32 folds and the Pallas kc=8 / bk grid steps)."""
+    from repro.core.semiring import get_semiring
+
+    sr = get_semiring(semiring)
+    m, k, n = 9, 130, 17
+    one = jnp.float32(sr.one)
+
+    # every k ties: x ≡ one, y ≡ one -> all candidates equal one ⊗ one
+    x_all = jnp.full((m, k), one)
+    y_all = jnp.full((k, n), one)
+
+    # two-way tie at k=5 and k=77 only (different sides of every chunk
+    # boundary); the rest contribute the inert zero
+    x_two = jnp.full((m, k), jnp.float32(sr.zero)).at[:, [5, 77]].set(one)
+    y_two = jnp.full((k, n), jnp.float32(sr.zero)).at[[5, 77], :].set(one)
+
+    out = {}
+    for b in ("interpret", "xla"):
+        _with_backend(monkeypatch, b)
+        _, k_all = ops.minplus_argmin(x_all, y_all, semiring=semiring)
+        _, k_two = ops.minplus_argmin(x_two, y_two, semiring=semiring)
+        # accumulate: candidate ties the accumulator -> keep a, K* = -1
+        a = jnp.full((m, n), one)
+        z_acc, k_acc = ops.minplus_argmin(x_all, y_all, a, semiring=semiring)
+        out[b] = tuple(np.asarray(v) for v in (k_all, k_two, z_acc, k_acc))
+    for got_i, got_x in zip(out["interpret"], out["xla"]):
+        assert np.array_equal(got_i, got_x), semiring
+    k_all, k_two, z_acc, k_acc = out["xla"]
+    assert np.all(k_all == 0), semiring              # all-tie -> smallest k
+    assert np.all(k_two == 5), semiring              # two-way tie -> smaller k
+    assert np.all(k_acc == -1), semiring             # tie with a -> a kept
+    assert np.all(z_acc == np.float32(sr.one)), semiring
+
+
+@pytest.mark.parametrize("semiring", ["tropical", "bottleneck", "reliability", "boolean"])
+def test_minplus_pred_tie_witness_parity(semiring, monkeypatch):
+    """ops.minplus_pred must derive identical predecessors from tied
+    candidates on both backends (same witness k -> same pred entry)."""
+    from repro.core.semiring import get_semiring
+
+    sr = get_semiring(semiring)
+    rng = np.random.default_rng(5)
+    m, k, n = 11, 66, 13
+    one = jnp.float32(sr.one)
+    # three-way tie through k ∈ {2, 33, 65}: spans chunk boundaries
+    x = jnp.full((m, k), jnp.float32(sr.zero)).at[:, [2, 33, 65]].set(one)
+    y = jnp.full((k, n), jnp.float32(sr.zero)).at[[2, 33, 65], :].set(one)
+    px = jnp.asarray(rng.integers(0, 500, size=(m, k)), jnp.int32)
+    py = jnp.asarray(rng.integers(0, 500, size=(k, n)), jnp.int32)
+    out = {}
+    for b in ("interpret", "xla"):
+        _with_backend(monkeypatch, b)
+        z, pz = ops.minplus_pred(x, y, px, py, semiring=semiring)
+        out[b] = (np.asarray(z), np.asarray(pz))
+    assert np.array_equal(out["interpret"][0], out["xla"][0]), semiring
+    assert np.array_equal(out["interpret"][1], out["xla"][1]), semiring
+    # the winning witness is the smallest tied k=2 -> pred is py[2, :],
+    # except column j=2 where y contributed its diagonal (k* == j) and the
+    # rule falls back to x's own last hop px[:, 2]
+    expect = np.broadcast_to(np.asarray(py)[2], (m, n)).copy()
+    expect[:, 2] = np.asarray(px)[:, 2]
+    assert np.array_equal(out["xla"][1], expect), semiring
+
+
 def test_solve_parity_across_backends(rng, monkeypatch):
     """End-to-end: blocked_fw distances identical on interpret and xla
     backends (fresh trace per backend via distinct shapes is not needed —

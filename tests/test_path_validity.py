@@ -1,0 +1,70 @@
+"""Path-validity: predecessor matrices must *witness* the distances.
+
+For every solver that emits predecessors, and every registered semiring,
+check the pred matrix against the guarantee its semiring actually makes
+(``Semiring.monotone_mul``):
+
+* monotone ⊗ (tropical, reliability): per-source pred rows are acyclic
+  trees — reconstruct the explicit (i, j) path via ``core.paths`` for
+  *every* reachable pair and assert its ⊗-accumulated cost equals
+  ``dist[i, j]`` (fp-association tolerance only, the witnesses must be
+  real paths).  This catches pred/dist drift (a solver updating dist but
+  propagating the wrong witness) that distance-only parity tests cannot
+  see — it caught a plateau-cycle in the boolean instance while this
+  suite was being written.
+* plateau ⊗ (bottleneck, boolean): tied optimal entries may witness each
+  other, so chains can cycle; the contract is the *one-hop* witness
+  invariant dist[i,j] == dist[i,pred] ⊗ h[pred,j] (validate_tree) plus
+  the -1 convention on unreachable pairs, asserted over the full matrix.
+"""
+
+import numpy as np
+import pytest
+
+from oracle import generate
+from repro.core import SEMIRINGS, get_semiring, solve, validate_tree
+from repro.core.paths import path_cost, reconstruct_path
+
+METHOD_KW = {
+    "squaring": {},
+    "squaring_3d": {},
+    "classic": {},
+    "blocked_fw": {"block_size": 16},
+    "rkleene": {"base": 8},
+}
+
+
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+@pytest.mark.parametrize("method", sorted(METHOD_KW))
+def test_predecessors_witness_distances(method, name):
+    sr = get_semiring(name)
+    rng = np.random.default_rng(29)
+    n = 31
+    h = generate(rng, n, name)
+    r = solve(h, method=method, semiring=name, with_pred=True, **METHOD_KW[method])
+    d, p = np.asarray(r.dist), np.asarray(r.pred)
+
+    # one-hop witness invariant over the whole matrix — every semiring
+    assert validate_tree(h, d, p, semiring=name), (method, name)
+
+    # unreachable pairs must have no witness — every semiring
+    unreach = np.argwhere(np.asarray(sr.is_zero(d)) & ~np.eye(n, dtype=bool))
+    for i, j in map(tuple, unreach[:20]):
+        assert p[i, j] == -1, (method, name, i, j)
+        assert reconstruct_path(p, int(i), int(j)) is None
+
+    if not sr.monotone_mul:
+        return  # plateau ⊗: chains may legitimately cycle, tree not promised
+
+    # full reconstruction for every reachable off-diagonal pair
+    reach = np.argwhere(~np.asarray(sr.is_zero(d)) & ~np.eye(n, dtype=bool))
+    assert len(reach), "degenerate test graph"
+    for i, j in map(tuple, reach):
+        path = reconstruct_path(p, int(i), int(j))
+        assert path is not None, (method, name, i, j)
+        assert path[0] == i and path[-1] == j
+        assert len(set(path)) == len(path), "cycle in reconstructed path"
+        cost = path_cost(h, path, semiring=name)
+        assert np.isclose(cost, d[i, j], rtol=1e-5, atol=1e-4), (
+            method, name, i, j, cost, d[i, j],
+        )

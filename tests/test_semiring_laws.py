@@ -1,0 +1,129 @@
+"""Hypothesis property suite: the algebraic laws each registry instance must
+satisfy for the solver stack to be correct.
+
+* ⊕ laws      — associativity, commutativity, idempotence (exact: ⊕ is
+                selective, it returns one of its operands bit-for-bit).
+* identities  — x ⊕ zero = x, x ⊗ one = x, x ⊗ zero = zero (exact).
+* ⊗ law       — associativity.  Exact where ⊗ is selective (bottleneck,
+                boolean); up to fp rounding for (+) and (×).
+* distributivity — a ⊗ (b ⊕ c) = (a ⊗ b) ⊕ (a ⊗ c); the law the blocked /
+                recursive decompositions rely on to reorder reductions.
+* closure fixpoint — D* = (D* ⊗ D*) ⊕ I: a closed distance matrix is a
+                fixpoint of one more squaring step (solver-level law).
+
+Runs under real hypothesis when installed, else the deterministic stub from
+conftest (seeded draws + bound corners).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracle import NP_CONSTS, NP_OPS, generate, np_eye, np_matmul
+from repro.core import SEMIRINGS, get_semiring, solve
+
+settings.register_profile("laws", max_examples=10, deadline=None)
+settings.load_profile("laws")
+
+NAMES = sorted(SEMIRINGS)
+
+# ⊗ that is min/∧ is selective -> exact associativity/distributivity; + and ×
+# round, so those instances get a tolerance.
+EXACT_MUL = {"bottleneck", "boolean"}
+
+
+def _vals(rng, name, shape):
+    """In-domain values including the zero/one constants as corner cases."""
+    zero, one = NP_CONSTS[name]
+    if name == "reliability":
+        v = rng.uniform(0.05, 1.0, size=shape)
+    elif name == "boolean":
+        v = np.where(rng.uniform(size=shape) < 0.5, 1.0, 0.0)
+    else:
+        v = rng.uniform(1, 100, size=shape)
+    mask = rng.uniform(size=shape)
+    v = np.where(mask < 0.15, zero, v)
+    v = np.where(mask > 0.9, one, v)
+    return v.astype(np.float32)
+
+
+def _close(name, x, y):
+    if name in EXACT_MUL:
+        return np.array_equal(x, y, equal_nan=True)
+    return np.allclose(x, y, rtol=1e-5, atol=1e-6, equal_nan=True)
+
+
+@given(st.sampled_from(NAMES), st.integers(0, 10_000))
+def test_add_laws_exact(name, seed):
+    sr = get_semiring(name)
+    rng = np.random.default_rng(seed)
+    a, b, c = (_vals(rng, name, (13, 9)) for _ in range(3))
+    add = lambda x, y: np.asarray(sr.add(x, y))
+    assert np.array_equal(add(a, b), add(b, a), equal_nan=True)
+    assert np.array_equal(add(add(a, b), c), add(a, add(b, c)), equal_nan=True)
+    assert np.array_equal(add(a, a), a, equal_nan=True)            # idempotent
+    assert np.array_equal(add(a, np.float32(sr.zero)), a, equal_nan=True)
+
+
+@given(st.sampled_from(NAMES), st.integers(0, 10_000))
+def test_mul_identity_and_annihilator_exact(name, seed):
+    sr = get_semiring(name)
+    rng = np.random.default_rng(seed)
+    a = _vals(rng, name, (11, 7))
+    mul = lambda x, y: np.asarray(sr.mul(x, y))
+    assert np.array_equal(mul(a, np.float32(sr.one)), a, equal_nan=True)
+    assert np.array_equal(
+        mul(a, np.float32(sr.zero)), np.full_like(a, sr.zero), equal_nan=True
+    )
+
+
+@given(st.sampled_from(NAMES), st.integers(0, 10_000))
+def test_mul_associativity(name, seed):
+    sr = get_semiring(name)
+    rng = np.random.default_rng(seed)
+    a, b, c = (_vals(rng, name, (8, 6)) for _ in range(3))
+    mul = lambda x, y: np.asarray(sr.mul(x, y))
+    assert _close(name, mul(mul(a, b), c), mul(a, mul(b, c)))
+
+
+@given(st.sampled_from(NAMES), st.integers(0, 10_000))
+def test_distributivity(name, seed):
+    """a ⊗ (b ⊕ c) == (a ⊗ b) ⊕ (a ⊗ c).
+
+    Exact for every instance: ⊕ is selective and ⊗ is monotone in each
+    argument on the instance domains, so the selection commutes with ⊗
+    bit-for-bit (tropical: x + min(b, c) picks whichever of x+b / x+c the
+    rhs picks; NaN-free because domains exclude the opposing infinity)."""
+    sr = get_semiring(name)
+    rng = np.random.default_rng(seed)
+    a, b, c = (_vals(rng, name, (9, 5)) for _ in range(3))
+    add = lambda x, y: np.asarray(sr.add(x, y))
+    mul = lambda x, y: np.asarray(sr.mul(x, y))
+    lhs = mul(a, add(b, c))
+    rhs = add(mul(a, b), mul(a, c))
+    assert np.array_equal(lhs, rhs, equal_nan=True)
+
+
+@given(st.sampled_from(NAMES), st.integers(2, 28), st.integers(0, 10_000))
+def test_closure_fixpoint(name, n, seed):
+    """D* = (D* ⊗ D*) ⊕ I — one more squaring step cannot improve a closed
+    matrix, and the identity restores the diagonal."""
+    rng = np.random.default_rng(seed)
+    h = generate(rng, n, name)
+    dstar = np.asarray(solve(h, method="classic", semiring=name).dist)
+    step = np.asarray(np_matmul(dstar, dstar, name))
+    add, _ = NP_OPS[name]
+    again = add(step, np_eye(n, name))
+    assert np.allclose(again, dstar, rtol=1e-5, atol=1e-5, equal_nan=True), name
+
+
+@given(st.sampled_from(NAMES), st.integers(2, 24), st.integers(0, 10_000))
+def test_closure_dominates_input(name, n, seed):
+    """D* ⊕ H = D*: closing can only improve (⊕-absorb) the input."""
+    rng = np.random.default_rng(seed)
+    sr = get_semiring(name)
+    h = generate(rng, n, name)
+    dstar = np.asarray(solve(h, method="classic", semiring=name).dist)
+    assert np.array_equal(
+        np.asarray(sr.add(dstar, h)), dstar, equal_nan=True
+    ), name
