@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast check bench bench-smoke serve-apsp
+.PHONY: test test-fast test-dynamic lint-dispatch check bench bench-smoke serve-apsp serve-dynamic
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -10,7 +10,13 @@ test:           ## tier-1: the whole suite, fail fast
 test-fast:      ## smoke path: skip slow subprocess tests and O(n^3) oracle sweeps
 	$(PY) -m pytest -x -q -m "not slow and not oracle"
 
-check:          ## tier-1 + fused backend parity + differential-oracle suite
+test-dynamic:   ## incremental-engine differential suite (update vs full recompute)
+	$(PY) -m pytest -x -q -m dynamic
+
+lint-dispatch:  ## fail on unfused semiring products / separate accumulate sweeps in solvers
+	$(PY) tools/lint_dispatch.py
+
+check: lint-dispatch  ## dispatch lint + tier-1 (incl. dynamic suite) + differential-oracle suite
 	$(PY) -m pytest -x -q -m "not oracle"
 	$(PY) -m pytest -q -m oracle tests/test_semiring_oracle.py
 
@@ -22,3 +28,7 @@ bench-smoke:    ## autotuner + benchmark dispatch-regression canary at N<=128 (s
 
 serve-apsp:     ## smoke the batched APSP serving loop
 	$(PY) -m repro.launch.serve --arch apsp --requests 32 --batch 16 --n-max 64
+
+serve-dynamic:  ## smoke the incremental (edge-update) serving loop
+	$(PY) -m repro.launch.serve --arch apsp --requests 32 --n-max 64 \
+		--mutate-rate 0.5 --graphs 2 --verify-every 8

@@ -45,6 +45,10 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         (r for r in fused_rows if r.get("bench") == "fused_vs_unfused_blocked_fw"),
         None,
     )
+    dynamic = next(
+        (r for r in all_rows if r.get("bench") == "dynamic_update_vs_resolve"),
+        None,
+    )
     payload = {
         "schema": 1,
         "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -60,6 +64,7 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         },
         "apsp": _apsp_summary(all_rows),
         "fused_vs_unfused": fused,
+        "dynamic_update_vs_resolve": dynamic,
         "rows": all_rows,
     }
     with open(path, "w") as f:
@@ -84,6 +89,7 @@ def main(argv=None) -> int:
     from benchmarks import (
         bench_apsp,
         bench_blocksize,
+        bench_dynamic,
         bench_fused,
         bench_graphgen,
         bench_minplus,
@@ -96,6 +102,8 @@ def main(argv=None) -> int:
                 sizes=(32, 64, 128), py_cpu_max=64)),
             ("fused_dispatch", lambda: bench_fused.run(
                 n=128, block=32, reps=1)),
+            ("dynamic_update", lambda: bench_dynamic.run(
+                n=128, k=8, reps=2, block_size=64)),
         ]
     else:
         mode = "quick" if args.quick else "full"
@@ -114,6 +122,10 @@ def main(argv=None) -> int:
                 n=256 if args.quick else 1024,
                 block=64 if args.quick else 128,
                 reps=2 if args.quick else 3)),
+            ("dynamic_update", lambda: bench_dynamic.run(
+                n=256 if args.quick else 512, k=16,
+                reps=3 if args.quick else 5,
+                block_size=64 if args.quick else 128)),
         ]
 
     all_rows, fused_rows = [], []

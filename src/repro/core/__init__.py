@@ -12,6 +12,7 @@ from .apsp import (
     solve_batch,
 )
 from .blocked_fw import blocked_fw, blocked_fw_batch
+from .dynamic import DynamicAPSP
 from .floyd_warshall import (
     fw_classic,
     fw_classic_batch,
@@ -20,7 +21,14 @@ from .floyd_warshall import (
     fw_squaring_early_exit,
     init_pred,
 )
-from .graphgen import generate, generate_batch, generate_np, graph_stats, paper_corpus
+from .graphgen import (
+    generate,
+    generate_batch,
+    generate_edge_updates,
+    generate_np,
+    graph_stats,
+    paper_corpus,
+)
 from .paths import reconstruct_path, reconstruct_path_jit, spd_features, validate_tree
 from .rkleene import rkleene
 from .semiring import (
@@ -39,11 +47,11 @@ from .semiring import (
 
 __all__ = [
     "APSPResult", "BatchAPSPResult", "METHODS", "BATCH_METHODS",
-    "register_method", "solve", "solve_batch", "pad_batch",
+    "register_method", "solve", "solve_batch", "pad_batch", "DynamicAPSP",
     "blocked_fw", "blocked_fw_batch", "fw_classic", "fw_classic_batch",
     "fw_squaring", "fw_squaring_batch", "fw_squaring_early_exit",
-    "init_pred", "generate", "generate_batch", "generate_np", "graph_stats",
-    "paper_corpus",
+    "init_pred", "generate", "generate_batch", "generate_edge_updates",
+    "generate_np", "graph_stats", "paper_corpus",
     "reconstruct_path", "reconstruct_path_jit", "spd_features", "validate_tree",
     "rkleene", "minplus", "minplus_3d", "minplus_3d_argmin", "minplus_pred",
     "softmin_matmul", "tropical_eye",

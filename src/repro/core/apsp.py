@@ -214,14 +214,26 @@ def pad_batch(
     serving loop can keep one compiled shape across batches.  Padding is a
     phantom node: semiring zero off-diagonal, semiring one self-loop —
     inert under every registered semiring (tropical: inf / 0).
+
+    A pre-stacked input with ``sizes[i] < N`` is *not* trusted: only the
+    true (sizes[i], sizes[i]) block is kept and the padding region is
+    re-inertized.  (An earlier revision returned the stack as-is — garbage
+    in the caller's padding, e.g. 0.0 off-diagonal under tropical, became
+    free phantom-node shortcuts that corrupted real distances.)
     """
     sr = get_semiring(semiring)
     if hasattr(hs, "ndim") and hs.ndim == 3:
         g, n, _ = hs.shape
         sizes = np.full(g, n) if sizes is None else np.asarray(sizes, np.int64)
-        if n_max is None or n_max == n:
+        if int(sizes.max(initial=0)) > n:
+            raise ValueError(f"sizes {sizes.max()} larger than stack edge {n}")
+        full = bool((sizes == n).all())
+        if full and (n_max is None or n_max == n):
             return jnp.asarray(hs, jnp.float32), sizes
-        mats = [np.asarray(hs[i]) for i in range(g)]
+        # keep only each graph's true block; repack with inert padding below
+        mats = [np.asarray(hs[i])[: int(k), : int(k)] for i, k in enumerate(sizes)]
+        if n_max is None:
+            n_max = n                        # preserve the stack's edge
     else:
         mats = [np.asarray(h) for h in hs]
         if sizes is None:
@@ -252,12 +264,18 @@ def _solve_stack(stack, with_pred, method, semiring=TROPICAL, **kwargs):
     )(stack)
 
 
-def _bucket_edge(n: int) -> int:
-    """Padded edge for a size-n graph: next power of two, floor 8."""
-    e = 8
-    while e < n:
+def next_pow2(x: int, floor: int = 1) -> int:
+    """Smallest power-of-two >= x, with a floor — the shared bucketing rule
+    (batch edges/slots here, update-batch widths in ``core.dynamic``)."""
+    e = floor
+    while e < x:
         e *= 2
     return e
+
+
+def _bucket_edge(n: int) -> int:
+    """Padded edge for a size-n graph: next power of two, floor 8."""
+    return next_pow2(n, 8)
 
 
 def _bucket_count(c: int) -> int:
@@ -265,10 +283,7 @@ def _bucket_count(c: int) -> int:
     then next multiple of 8 — keeps the set of compiled (count, edge)
     shapes small and reused across serving cycles."""
     if c <= 8:
-        e = 1
-        while e < c:
-            e *= 2
-        return e
+        return next_pow2(c)
     return -(-c // 8) * 8
 
 

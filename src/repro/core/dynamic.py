@@ -1,0 +1,392 @@
+"""Incremental APSP — streaming batched edge updates on a solved state.
+
+The serving loop re-solving the full O(n^3) closure when a handful of edges
+changed is the dominant waste in a mutating-graph workload (Lund & Smith's
+multi-stage FW and the PIM-FW line both restrict recomputation to the
+affected region).  :class:`DynamicAPSP` holds a solved ``(dist, pred)``
+state plus the current cost matrix and applies batched edge updates without
+a full re-solve wherever the algebra allows it:
+
+* **Decrease-only batches** (insert edge / lower weight) are *exact* rank-k
+  fused updates: for an update set ``{(u_i, v_i, w_i)}``,
+
+      ``dist' = dist ⊕ (dist[:, U] ⊗ W ⊗ dist[V, :])``
+
+  runs as one ``kernels.ops.rank_k_update`` dispatch — an (n, k) x (k, n)
+  fused accumulate whose contraction axis indexes update edges — iterated
+  to fixpoint with early exit.  A path that chains s updated edges is
+  covered after ceil(log2(s+1)) passes (both operands of the pass carry the
+  previous pass's state, so coverage doubles), so the bound
+  ``ceil_log2(k+1) + 1`` passes is exact and the loop usually exits after
+  1-2.  Predecessors ride the fused-argmin kernel (same dispatch).
+
+* **Increases / deletions** invalidate entries instead of improving them,
+  so the engine detects the affected pair set — from ``pred`` when tracked
+  (pairs whose recorded shortest-path tree walks the changed edge:
+  ``pred[i, v] == u`` and v witnesses (i, j)), otherwise the conservative
+  witness test ``dist[i,u] ⊗ w_old ⊗ dist[v,j]`` achieving ``dist[i,j]`` —
+  resets those entries to the direct edge, folds the updated cost matrix
+  back in, and re-closes with early-exit fused squaring (a *bounded*
+  re-solve: the warm state is already a closure except on the affected
+  region, so the loop typically confirms fixpoint in 1-2 squarings).  When
+  the affected fraction exceeds ``resolve_threshold`` the engine falls back
+  to the full solver — the last resort.
+
+Exactness contract per semiring (see COMPAT.md §Dynamic updates): the
+rank-k and warm paths are exact for ``monotone_mul`` semirings (tropical,
+reliability) and match full recompute bit-for-bit under tropical integer
+weights.  Plateau semirings (bottleneck, boolean) can legitimately cycle
+through tied witnesses (the PR 3 pred-cycle finding), so every update on a
+non-monotone instance takes the documented fallback: a full re-solve.
+
+Batch-update semantics: a batch is a set of "set edge (u, v) to w"
+requests; duplicate (u, v) entries resolve last-wins.  Self-loops are
+rejected (the diagonal is the semiring one by convention).  Setting
+``w = semiring.zero`` deletes the edge.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .apsp import next_pow2, solve
+from .floyd_warshall import init_pred
+from .paths import reconstruct_path, reconstruct_path_jit
+from .semiring import Semiring, SemiringLike, ceil_log2, get_semiring
+
+__all__ = ["DynamicAPSP"]
+
+
+def _bucket_k(k: int) -> int:
+    """Padded update-batch width: next power of two, floor 4 — keeps the
+    family of compiled (n, k) rank-k programs small across a serving run."""
+    return next_pow2(k, 4)
+
+
+@partial(jax.jit, static_argnames=("semiring", "with_pred", "max_passes"))
+def _rank_k_fixpoint(dist, pred, u, v, w, *, semiring, with_pred, max_passes):
+    """Iterate the fused rank-k relaxation to fixpoint (early exit)."""
+    from repro.kernels import ops as kops
+
+    sr = semiring
+
+    def cond(st):
+        return jnp.logical_and(st[2], st[3] < max_passes)
+
+    def body(st):
+        d, p, _, it = st
+        z, pz = kops.rank_k_update(
+            d, u, v, w, pred=p if with_pred else None, semiring=sr
+        )
+        return z, (pz if with_pred else p), jnp.any(sr.better(z, d)), it + 1
+
+    d, p, _, passes = jax.lax.while_loop(
+        cond, body, (dist, pred, jnp.bool_(True), jnp.int32(0))
+    )
+    return d, p, passes
+
+
+@partial(jax.jit, static_argnames=("semiring", "use_pred"))
+def _affected_mask(dist, pred, u, v, w_old, *, semiring, use_pred):
+    """Pairs whose stored distance may be stale after worsening the edges
+    ``(u_i, v_i)`` (weights ``w_old`` *before* the update).
+
+    With ``use_pred``: pairs whose recorded shortest-path tree uses an
+    updated edge — ``pred[i, v] == u`` (the tree's last hop into v is u)
+    and v witnesses (i, j).  Unmarked pairs' recorded paths avoid every
+    updated edge, so their values stay realizable.  Without pred: the
+    conservative witness test (the edge at its old weight achieves
+    ``dist[i, j]``).  Both are supersets of the truly-stale set, which is
+    what warm re-closure needs.
+    """
+    sr = semiring
+
+    def body(i, mask):
+        ui, vi = u[i], v[i]
+        if use_pred:
+            cand = sr.mul(dist[:, vi][:, None], dist[vi, :][None, :])
+            m = (pred[:, vi] == ui)[:, None] & ~sr.better(dist, cand)
+        else:
+            cand = sr.mul(
+                sr.mul(dist[:, ui], w_old[i])[:, None], dist[vi, :][None, :]
+            )
+            m = ~sr.better(dist, cand)
+        return mask | m
+
+    mask0 = jnp.zeros(dist.shape, bool)
+    return jax.lax.fori_loop(0, u.shape[0], body, mask0)
+
+
+@partial(jax.jit, static_argnames=("semiring", "with_pred", "max_iters"))
+def _warm_resolve(dist, pred, h, affected, *, semiring, with_pred, max_iters):
+    """Bounded re-solve: reset affected entries to the direct edge, fold the
+    updated cost matrix in (covers concurrent decreases), then re-close with
+    early-exit fused squaring.
+
+    Correctness: the warm matrix M is entrywise between ``h`` and its
+    closure (unaffected entries are realizable path costs, affected entries
+    are direct edges), so the squaring fixpoint of M *is* the closure of
+    the updated graph.
+    """
+    from repro.kernels import ops as kops
+
+    sr = semiring
+    ph = init_pred(h, sr) if with_pred else None
+    d = jnp.where(affected, h, dist)
+    better = sr.better(h, d)
+    d = jnp.where(better, h, d)
+    p = None
+    if with_pred:
+        p = jnp.where(affected | better, ph, pred)
+
+    def cond(st):
+        return jnp.logical_and(st[2], st[3] < max_iters)
+
+    def body(st):
+        d, p, _, it = st
+        if with_pred:
+            z, pz = kops.minplus_pred(d, d, p, p, a=d, pa=p, semiring=sr)
+        else:
+            z, pz = kops.minplus(d, d, d, semiring=sr), p
+        return z, pz, jnp.any(sr.better(z, d)), it + 1
+
+    d, p, _, iters = jax.lax.while_loop(
+        cond, body, (d, p, jnp.bool_(True), jnp.int32(0))
+    )
+    return d, p, iters
+
+
+class DynamicAPSP:
+    """Incremental all-pairs engine over one persistent graph.
+
+    Solves once at construction (via :func:`repro.core.solve`), then
+    :meth:`update` applies batched edge updates choosing the cheapest exact
+    path (see module docstring).  ``dist`` / ``pred`` always reflect the
+    current cost matrix ``h``.
+
+    Parameters mirror ``solve``: ``method`` / ``with_pred`` / ``semiring``
+    plus solver kwargs; ``resolve_threshold`` is the affected-pair fraction
+    above which a worsening batch goes straight to the full solver.
+    """
+
+    def __init__(
+        self,
+        h: Union[np.ndarray, jax.Array],
+        *,
+        method: str = "blocked_fw",
+        with_pred: bool = False,
+        semiring: SemiringLike = "tropical",
+        resolve_threshold: float = 0.25,
+        **solve_kw,
+    ):
+        self._sr = get_semiring(semiring)
+        self._method = method
+        self._with_pred = bool(with_pred)
+        self._solve_kw = dict(solve_kw)
+        self._threshold = float(resolve_threshold)
+        self._h = np.array(h, dtype=np.float32)
+        if self._h.ndim != 2 or self._h.shape[0] != self._h.shape[1]:
+            raise ValueError(f"h must be square, got {self._h.shape}")
+        self.stats: Dict[str, int] = {
+            "rank_k": 0, "warm_resolve": 0, "full_resolve": 0, "noop": 0,
+            "rank_k_passes": 0, "warm_iters": 0,
+        }
+        self._dist: Optional[jax.Array] = None
+        self._pred: Optional[jax.Array] = None
+        self.solve_full()
+
+    # -- state accessors ---------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self._h.shape[0]
+
+    @property
+    def h(self) -> np.ndarray:
+        """Current cost matrix (copy — the engine owns its state)."""
+        return self._h.copy()
+
+    @property
+    def dist(self) -> jax.Array:
+        return self._dist
+
+    @property
+    def pred(self) -> Optional[jax.Array]:
+        return self._pred
+
+    @property
+    def semiring(self) -> Semiring:
+        return self._sr
+
+    def solve_full(self) -> None:
+        """Full re-solve from the current cost matrix (the last resort)."""
+        r = solve(
+            self._h, method=self._method, with_pred=self._with_pred,
+            semiring=self._sr, **self._solve_kw,
+        )
+        self._dist, self._pred = r.dist, r.pred
+
+    # -- updates -----------------------------------------------------------
+
+    def _normalize(self, u, v, w):
+        """Validate + dedup (last wins) one update batch -> int/float arrays."""
+        if v is None:
+            edges = np.asarray(list(u), dtype=np.float64)
+            if edges.size == 0:
+                edges = edges.reshape(0, 3)          # empty batch is a noop
+            if edges.ndim != 2 or edges.shape[1] != 3:
+                raise ValueError("edges must be a sequence of (u, v, w) triples")
+            u, v, w = edges[:, 0], edges[:, 1], edges[:, 2]
+        u = np.asarray(u, np.int32).ravel()
+        v = np.asarray(v, np.int32).ravel()
+        w = np.asarray(w, np.float32).ravel()
+        if not (u.shape == v.shape == w.shape):
+            raise ValueError("u, v, w must have matching lengths")
+        n = self.n
+        if u.size and (u.min() < 0 or u.max() >= n or v.min() < 0 or v.max() >= n):
+            raise ValueError(f"edge endpoints out of range for n={n}")
+        if np.any(u == v):
+            raise ValueError(
+                "self-loop updates are not allowed: the diagonal is the "
+                "semiring one by convention"
+            )
+        if u.size > 1:
+            flat = u.astype(np.int64) * n + v
+            # last occurrence of each (u, v) wins — streaming set semantics
+            _, first_rev = np.unique(flat[::-1], return_index=True)
+            keep = np.sort(flat.size - 1 - first_rev)
+            u, v, w = u[keep], v[keep], w[keep]
+        return u, v, w
+
+    def update(self, u, v=None, w=None) -> Dict:
+        """Apply one batch of edge updates; returns an info dict.
+
+        Call as ``update([(u, v, w), ...])`` or ``update(u_arr, v_arr,
+        w_arr)``.  Each entry sets edge (u, v) to weight w (``semiring.zero``
+        deletes).  Returns ``{"path": "rank_k" | "warm_resolve" |
+        "full_resolve" | "noop", "n_updates": ..., ...}``.
+        """
+        sr = self._sr
+        u, v, w = self._normalize(u, v, w)
+        if u.size == 0:
+            self.stats["noop"] += 1
+            return {"path": "noop", "n_updates": 0}
+        old = self._h[u, v]
+        worse = np.asarray(sr.better(old, w))      # strictly worsened edges
+        changed = np.asarray(sr.better(w, old))    # strictly improved edges
+        self._h[u, v] = w
+        info: Dict = {"path": "noop", "n_updates": int(u.size)}
+
+        if not sr.monotone_mul:
+            # plateau semirings: tied witnesses can cycle, so the fused
+            # incremental paths are not trusted — documented fallback only.
+            if worse.any() or changed.any():
+                self.solve_full()
+                self.stats["full_resolve"] += 1
+                info["path"] = "full_resolve"
+                info["reason"] = "plateau semiring (monotone_mul=False)"
+            else:
+                self.stats["noop"] += 1
+            return info
+
+        if worse.any():
+            return self._apply_worsening(u, v, old, worse, info)
+        if not changed.any():
+            self.stats["noop"] += 1
+            return info
+        return self._apply_decreases(u[changed], v[changed], w[changed], info)
+
+    def _apply_decreases(self, u, v, w, info) -> Dict:
+        """Exact rank-k fused update for a decrease-only batch."""
+        sr = self._sr
+        k = _bucket_k(u.size)
+        pad = k - u.size
+        # inert pad edges: weight = semiring zero annihilates the candidate
+        u = jnp.asarray(np.concatenate([u, np.zeros(pad, np.int32)]))
+        v = jnp.asarray(np.concatenate([v, np.zeros(pad, np.int32)]))
+        w = jnp.asarray(np.concatenate([w, np.full(pad, sr.zero, np.float32)]))
+        max_passes = ceil_log2(min(k, self.n - 1) + 1) + 1
+        self._dist, self._pred, passes = _rank_k_fixpoint(
+            self._dist, self._pred, u, v, w,
+            semiring=sr, with_pred=self._with_pred, max_passes=max_passes,
+        )
+        self.stats["rank_k"] += 1
+        self.stats["rank_k_passes"] += int(passes)
+        info.update(path="rank_k", k_padded=k, passes=int(passes))
+        return info
+
+    def _apply_worsening(self, u, v, old, worse, info) -> Dict:
+        """Increase/deletion batch: affected-pair detection + bounded
+        re-solve, full solver past the threshold."""
+        sr = self._sr
+        uw, vw, oldw = u[worse], v[worse], old[worse]
+        k = _bucket_k(uw.size)
+        pad = k - uw.size
+        if self._with_pred:
+            # pad with an endpoint no pred entry can name (-2): marks nothing
+            uw = np.concatenate([uw, np.full(pad, -2, np.int32)])
+        else:
+            # pad weight = zero annihilates; marks only already-zero pairs,
+            # whose reset is a no-op
+            uw = np.concatenate([uw, np.zeros(pad, np.int32)])
+        vw = np.concatenate([vw, np.zeros(pad, np.int32)])
+        oldw = np.concatenate([oldw, np.full(pad, sr.zero, np.float32)])
+        affected = _affected_mask(
+            self._dist, self._pred, jnp.asarray(uw), jnp.asarray(vw),
+            jnp.asarray(oldw), semiring=sr, use_pred=self._with_pred,
+        )
+        frac = float(jnp.mean(affected))
+        info["affected_frac"] = frac
+        if frac > self._threshold:
+            self.solve_full()
+            self.stats["full_resolve"] += 1
+            info["path"] = "full_resolve"
+            info["reason"] = f"affected fraction {frac:.2f} > threshold"
+            return info
+        h = jnp.asarray(self._h)
+        self._dist, self._pred, iters = _warm_resolve(
+            self._dist, self._pred, h, affected,
+            semiring=sr, with_pred=self._with_pred,
+            max_iters=ceil_log2(self.n) + 1,
+        )
+        self.stats["warm_resolve"] += 1
+        self.stats["warm_iters"] += int(iters)
+        info.update(path="warm_resolve", iters=int(iters))
+        return info
+
+    # -- queries -----------------------------------------------------------
+
+    def path(self, i: int, j: int, *, max_len: Optional[int] = None) -> Optional[List[int]]:
+        """Node list of the recorded optimal i->j path, or None if
+        unreachable.  Walks ``pred`` on-device via ``reconstruct_path_jit``;
+        a truncated walk (length == 0 with a reachable pair — the pinned
+        truncation convention) falls back to the host-side pred walk.
+
+        Monotone semirings only: plateau instances can hold legitimate
+        witness *cycles* in ``pred`` (tied optimal entries referencing each
+        other), so a walk may never reach i and a reachable pair would be
+        misreported as unreachable — use the one-hop witnesses directly
+        instead (``core.paths.validate_tree`` semantics)."""
+        if self._pred is None:
+            raise ValueError("engine was built with with_pred=False")
+        if not self._sr.monotone_mul:
+            raise ValueError(
+                f"full path reconstruction is not guaranteed for plateau "
+                f"semiring {self._sr.name!r} (monotone_mul=False): pred "
+                "chains may cycle through tied witnesses"
+            )
+        if i == j:
+            return [i]
+        if bool(self._sr.is_zero(self._dist[i, j])):
+            return None
+        ml = self.n if max_len is None else int(max_len)
+        p, length = reconstruct_path_jit(self._pred, i, j, max_len=ml)
+        if int(length) == 0:
+            # reachable but truncated -> host pred-walk fallback
+            return reconstruct_path(np.asarray(self._pred), i, j)
+        return np.asarray(p)[: int(length)].tolist()

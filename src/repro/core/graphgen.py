@@ -29,6 +29,7 @@ __all__ = [
     "GraphSample",
     "generate",
     "generate_batch",
+    "generate_edge_updates",
     "generate_np",
     "paper_corpus",
     "graph_stats",
@@ -134,6 +135,45 @@ def generate_np(
         rho=rho,
         alpha=alpha,
     )
+
+
+def generate_edge_updates(
+    rng: np.random.Generator,
+    h: np.ndarray,
+    k: int,
+    *,
+    worsen_frac: float = 0.0,
+    alpha: int = 100,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """k random tropical edge updates ``(u, v, w)`` against cost matrix h.
+
+    By default every update is guaranteed not-worsening — lower an existing
+    edge (integer-valued, floor 1) or insert a new one with cost in
+    [1, alpha) — i.e. the streaming load shape the dynamic engine's exact
+    rank-k path covers.  ``worsen_frac`` > 0 additionally worsens that
+    fraction of the batch (cost + [100, 300)), exercising the bounded
+    re-solve path.  Shared by the dynamic differential tests, the
+    incremental benchmark, and the serve mutate stream so all three stay on
+    one load definition.  Never emits self-loops.
+    """
+    n = h.shape[0]
+    u = rng.integers(0, n, k).astype(np.int32)
+    v = ((u + rng.integers(1, n, k)) % n).astype(np.int32)
+    old = h[u, v]
+    w = np.where(
+        np.isfinite(old),
+        np.maximum(1.0, np.floor(old) - rng.integers(1, 20, k)),
+        rng.integers(1, alpha, k),
+    ).astype(np.float32)
+    if worsen_frac > 0.0:
+        worsen = rng.uniform(size=k) < worsen_frac
+        w = np.where(
+            worsen,
+            np.where(np.isfinite(old), old, 1.0)
+            + rng.integers(100, 300, k).astype(np.float32),
+            w,
+        ).astype(np.float32)
+    return u, v, w
 
 
 def paper_corpus(

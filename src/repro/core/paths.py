@@ -125,17 +125,28 @@ def validate_tree(
 def spd_features(h: jax.Array, landmarks: jax.Array, *, cap: float = 1e4) -> jax.Array:
     """Landmark SPD node features via the tropical solver.
 
-    Runs single-source min-plus relaxations from the landmark rows only
-    (cost O(L * n^2 * log n) instead of full APSP) and returns a (n, L)
-    feature matrix with unreachable distances capped.
+    Iterates the fused one-hop min-plus relaxation ``d <- d ⊕ d ⊗ h`` over
+    the landmark rows only, to fixpoint with early exit (cost
+    O(L * n^2 * D) where D is the shortest-path hop diameter, <= n-1;
+    full APSP would be O(n^3)).  An earlier revision ran a fixed
+    ceil(log2 n) relaxations — each pass extends coverage by *one* hop, not
+    doubling, so any graph with diameter > log2(n)+1 hops (e.g. a path
+    graph) got wrong landmark distances.  Returns a (n, L) feature matrix
+    with unreachable distances capped.
     """
-    from .semiring import ceil_log2
     from repro.kernels import ops as _kops
 
-    d = h[landmarks, :]                      # (L, n) seed distances
+    n = h.shape[0]
+    d0 = h[landmarks, :]                     # (L, n) 1-hop seed distances
 
-    def body(_, dl):
-        return _kops.minplus(dl, h, dl)      # fused relax step
+    def cond(state):
+        _, changed, it = state
+        return jnp.logical_and(changed, it < n - 1)
 
-    d = jax.lax.fori_loop(0, ceil_log2(h.shape[0]), body, d)
-    return jnp.minimum(d, cap).T             # (n, L)
+    def body(state):
+        d, _, it = state
+        z = _kops.minplus(d, h, d)           # fused relax step (one more hop)
+        return z, jnp.any(z < d), it + 1
+
+    d, _, _ = jax.lax.while_loop(cond, body, (d0, jnp.bool_(True), jnp.int32(0)))
+    return jnp.minimum(d, cap).T             # (n, L) cap  # lint: allow-unfused

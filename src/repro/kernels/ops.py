@@ -63,6 +63,7 @@ __all__ = [
     "minplus_argmin",
     "minplus_pred",
     "pred_from_kstar",
+    "rank_k_update",
     "fw_block",
     "fw_block_pred",
     "backend",
@@ -220,6 +221,55 @@ def minplus_pred(
     pz = pred_from_kstar(
         kstar, px, py, k_offset=k_offset, j_offset=j_offset, fallback=pa
     )
+    return z, pz
+
+
+def rank_k_update(
+    dist: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    *,
+    pred: Optional[jax.Array] = None,
+    semiring: SemiringLike = "tropical",
+    **block_kw,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One fused rank-k edge-relaxation pass over a solved distance state.
+
+    For an update set ``{(u_i, v_i, w_i)}`` (k edges, as index vectors
+    ``u``/``v`` and a weight vector ``w``),
+
+        ``dist' = dist ⊕ (dist[:, U] ⊗ W ⊗ dist[V, :])``
+
+    is dispatched as a single fused (n, k) x (k, n) accumulate — the
+    contraction axis indexes *update edges*, not nodes, so one pass relaxes
+    every pair through every updated edge at once.  This is the primitive
+    the incremental engine (``repro.core.dynamic``) iterates to fixpoint.
+
+    With ``pred`` the pass runs on the fused-argmin kernel and derives the
+    updated predecessors from the winning edge index k*: the improved path
+    is ``a --(dist-path)--> u_{k*} --(edge)--> v_{k*} --(dist-path)--> b``,
+    so b's predecessor is ``pred[v_{k*}, b]`` — unless b *is* ``v_{k*}``
+    (empty tail), in which case it is ``u_{k*}`` itself.  Entries that kept
+    their old value (k* = -1, strict-improvement accumulate semantics) keep
+    their old predecessor.  Note ``pred_from_kstar`` does not apply here:
+    its empty-tail rule equates contraction index with column id, which
+    only holds for node-indexed contractions.
+
+    2D (n, n) state only; semiring and block-size resolution as in
+    :func:`minplus`.
+    """
+    sr = get_semiring(semiring)
+    x = sr.mul(dist[:, u], w[None, :])           # (n, k): col i = d[:,u_i]⊗w_i
+    y = dist[v, :]                               # (k, n)
+    if pred is None:
+        return minplus(x, y, dist, semiring=sr, **block_kw), None
+    z, kstar = minplus_argmin(x, y, dist, semiring=sr, **block_kw)
+    ks = jnp.maximum(kstar, 0)                   # safe gather index
+    cols = jnp.arange(dist.shape[-1])[None, :]
+    p_via = pred[v, :][ks, cols]                 # pred[v_{k*}, b]
+    pz = jnp.where(v[ks] == cols, u[ks], p_via)  # empty tail: pred is u_{k*}
+    pz = jnp.where(kstar < 0, pred, pz)
     return z, pz
 
 

@@ -9,11 +9,19 @@ packs incoming ragged graphs into fixed (G, N_max, N_max) inf-padded slots
 (padding is inert under (min, +)) so every batch hits the same compiled
 ``solve_batch`` program; results are unpadded per graph before returning.
 
+With ``--mutate-rate > 0`` the APSP mode switches to the *incremental*
+serving shape: a pool of persistent graphs each held by a
+``repro.core.DynamicAPSP`` engine, serving an interleaved stream of
+edge-update batches (applied without full re-solve) and distance queries
+(answered from the maintained state).
+
 Usage:
     python -m repro.launch.serve --arch qwen2-1.5b --requests 4 --gen 16
     python -m repro.launch.serve --arch mind --requests 8
     python -m repro.launch.serve --arch apsp --requests 64 --batch 16 \\
         --n-max 128 --method squaring
+    python -m repro.launch.serve --arch apsp --requests 64 --n-max 128 \\
+        --mutate-rate 0.5 --graphs 4 --verify-every 16
 """
 
 from __future__ import annotations
@@ -87,26 +95,49 @@ def serve_mind(n_requests: int, seed: int = 0) -> int:
     return 0
 
 
+#: semirings the synthetic tropical request stream can be recast into.
+RECASTABLE = ("tropical", "bottleneck", "reliability", "boolean")
+
+
 def _recast_graph(h: np.ndarray, semiring: str) -> np.ndarray:
     """Recast a tropical cost matrix into another semiring's domain, keeping
     the same edge structure: no-edge -> semiring zero, diagonal -> one,
     costs -> capacities (bottleneck), probabilities 1/(1+cost)
-    (reliability), or 1.0 (boolean)."""
+    (reliability), or 1.0 (boolean).
+
+    All arithmetic runs on the edge mask only — evaluating over the full
+    matrix (inf no-edge entries included) raised spurious overflow/invalid
+    numpy warnings."""
     if semiring == "tropical":
         return h
+    _check_recastable(semiring)
     edge = np.isfinite(h) & ~np.eye(h.shape[0], dtype=bool)
     if semiring == "bottleneck":
-        out = np.where(edge, h, -np.inf).astype(np.float32)
+        out = np.full(h.shape, -np.inf, np.float32)
+        out[edge] = h[edge]
         np.fill_diagonal(out, np.inf)
     elif semiring == "reliability":
-        out = np.where(edge, 1.0 / (1.0 + h), 0.0).astype(np.float32)
+        out = np.zeros(h.shape, np.float32)
+        out[edge] = 1.0 / (1.0 + h[edge])
         np.fill_diagonal(out, 1.0)
-    elif semiring == "boolean":
-        out = np.where(edge, 1.0, 0.0).astype(np.float32)
+    else:  # boolean (guarded by _check_recastable)
+        out = np.zeros(h.shape, np.float32)
+        out[edge] = 1.0
         np.fill_diagonal(out, 1.0)
-    else:
-        raise ValueError(f"no request recast rule for semiring {semiring!r}")
     return out
+
+
+def _check_recastable(semiring: str) -> None:
+    """Fail fast (before any serving work) with an actionable message for
+    semirings the synthetic request stream has no domain mapping for."""
+    if semiring not in RECASTABLE:
+        raise ValueError(
+            f"--semiring {semiring!r} has no request-recast rule: the serve "
+            "loop generates tropical cost matrices and only maps them into "
+            f"the built-in instances {RECASTABLE}.  Serve a custom "
+            "registered semiring by feeding repro.core.solve_batch requests "
+            "already expressed in that instance's domain."
+        )
 
 
 def serve_apsp(
@@ -133,6 +164,7 @@ def serve_apsp(
     from repro.core.graphgen import generate_np
     from repro.kernels import autotune
 
+    _check_recastable(semiring)
     # Warm the autotune cache for the shapes this method's dispatch will
     # actually look up, *before* the solver first traces — dispatch reads
     # the cache at trace time, so tuning after the first batch would only
@@ -203,6 +235,116 @@ def serve_apsp(
     return 0
 
 
+def serve_apsp_dynamic(
+    n_requests: int,
+    *,
+    n_max: int = 128,
+    graphs: int = 4,
+    mutate_rate: float = 0.5,
+    mutate_k: int = 8,
+    method: str = "blocked_fw",
+    with_pred: bool = False,
+    semiring: str = "tropical",
+    verify_every: int = 0,
+    seed: int = 0,
+) -> int:
+    """Incremental APSP serving: persistent graph state + streaming updates.
+
+    Holds ``graphs`` persistent :class:`repro.core.DynamicAPSP` engines
+    (each a live graph already solved) and serves an interleaved request
+    stream: with probability ``mutate_rate`` a request is a batch of up to
+    ``mutate_k`` edge updates applied *incrementally* (rank-k fused update
+    for decreases, bounded re-solve for worsenings — never a cold full
+    solve unless the engine decides it must); otherwise it is a distance
+    query answered straight from the maintained state.  ``verify_every``
+    > 0 differentially checks an engine against a cold full solve every
+    that-many requests (the serving-time analogue of the dynamic test
+    suite).
+    """
+    from repro.core import DynamicAPSP, get_semiring, solve
+    from repro.core.graphgen import generate_edge_updates, generate_np
+
+    _check_recastable(semiring)
+    sr = get_semiring(semiring)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    engines = []
+    for _ in range(graphs):
+        g = generate_np(rng, n_max, rho=60.0)
+        engines.append(DynamicAPSP(
+            _recast_graph(g.h, sr.name), method=method,
+            with_pred=with_pred, semiring=sr,
+        ))
+    t_warm = time.time() - t0
+    print(f"[dynamic] {graphs} persistent graphs of n={n_max} solved "
+          f"({t_warm:.2f}s incl. compile)")
+
+    n_updates = n_queries = 0
+    t_update = t_query = 0.0
+    t0 = time.time()
+    for req in range(n_requests):
+        gi = int(rng.integers(0, graphs))
+        eng = engines[gi]
+        if rng.uniform() < mutate_rate:
+            # mostly decreases/inserts (the fast exact path), a sprinkle of
+            # worsenings (exercises the bounded re-solve)
+            u, v, w = generate_edge_updates(
+                rng, eng.h, int(rng.integers(1, mutate_k + 1)),
+                worsen_frac=0.05,
+            )
+            if semiring != "tropical":
+                w = _recast_edge_weights(w, semiring)
+            t = time.time()
+            info = eng.update(u, v, w)
+            jax.block_until_ready(eng.dist)
+            t_update += time.time() - t
+            n_updates += 1
+            if req < 3 or req % max(n_requests // 4, 1) == 0:
+                print(f"[mutate] graph {gi}: {info['n_updates']} edges via "
+                      f"{info['path']} (req {req})")
+        else:
+            qi = rng.integers(0, n_max, 8)
+            qj = rng.integers(0, n_max, 8)
+            t = time.time()
+            d = np.asarray(eng.dist[qi, qj])
+            t_query += time.time() - t
+            n_queries += 1
+            assert d.shape == (8,)
+        if verify_every and (req + 1) % verify_every == 0:
+            ref = solve(eng.h, method=method, semiring=sr)
+            ok = np.allclose(
+                np.asarray(eng.dist), np.asarray(ref.dist),
+                rtol=1e-5, atol=1e-5, equal_nan=True,
+            )
+            print(f"[verify] graph {gi} vs cold solve: "
+                  f"{'OK' if ok else 'MISMATCH'}")
+            if not ok:
+                return 1
+    dt = time.time() - t0
+    print(f"[done] {n_requests} requests in {dt:.2f}s — "
+          f"{n_updates} updates ({1e3 * t_update / max(n_updates, 1):.1f} ms/update), "
+          f"{n_queries} queries ({1e3 * t_query / max(n_queries, 1):.2f} ms/query)")
+    totals: dict = {}
+    for e in engines:
+        for k, v in e.stats.items():
+            totals[k] = totals.get(k, 0) + v
+    print(f"[paths] {', '.join(f'{k}={v}' for k, v in sorted(totals.items()) if v)}")
+    return 0
+
+
+def _recast_edge_weights(w: np.ndarray, semiring: str) -> np.ndarray:
+    """Per-edge analogue of _recast_graph for streamed update weights.
+
+    Non-tropical streams lose the generator's mostly-decrease guarantee
+    (the engine classifies each batch itself, so results stay exact —
+    only the update/re-solve mix shifts)."""
+    if semiring == "bottleneck":
+        return w
+    if semiring == "reliability":
+        return (1.0 / (1.0 + w)).astype(np.float32)
+    return np.ones_like(w)  # boolean
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -219,10 +361,29 @@ def main(argv=None) -> int:
                     help="apsp: also compute predecessor matrices")
     ap.add_argument("--semiring", default="tropical",
                     help="apsp: path semiring (see repro.core.SEMIRINGS)")
+    ap.add_argument("--mutate-rate", type=float, default=0.0,
+                    help="apsp: fraction of requests that are edge-update "
+                         "batches against persistent graph state (> 0 "
+                         "selects the incremental DynamicAPSP serving mode)")
+    ap.add_argument("--graphs", type=int, default=4,
+                    help="apsp dynamic mode: persistent graph count")
+    ap.add_argument("--mutate-k", type=int, default=8,
+                    help="apsp dynamic mode: max edges per update batch")
+    ap.add_argument("--verify-every", type=int, default=0,
+                    help="apsp dynamic mode: differentially check an engine "
+                         "against a cold solve every N requests (0 = off)")
     args = ap.parse_args(argv)
     if args.arch == "mind":
         return serve_mind(args.requests, args.seed)
     if args.arch == "apsp":
+        if args.mutate_rate > 0.0:
+            return serve_apsp_dynamic(
+                args.requests, n_max=args.n_max, graphs=args.graphs,
+                mutate_rate=args.mutate_rate, mutate_k=args.mutate_k,
+                method=args.method, with_pred=args.with_pred,
+                semiring=args.semiring, verify_every=args.verify_every,
+                seed=args.seed,
+            )
         return serve_apsp(
             args.requests, batch=args.batch, n_max=args.n_max,
             method=args.method, with_pred=args.with_pred,

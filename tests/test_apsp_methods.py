@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 from conftest import np_floyd_warshall
 from repro.core import generate_np, reconstruct_path, solve, validate_tree
 from repro.core.floyd_warshall import fw_squaring_early_exit
-from repro.core.paths import path_cost, reconstruct_path_jit
+from repro.core.paths import path_cost, reconstruct_path_jit, spd_features
 
 settings.register_profile("ci", max_examples=15, deadline=None)
 settings.load_profile("ci")
@@ -85,6 +85,49 @@ def test_early_exit_variant(rng):
     d, iters = fw_squaring_early_exit(jnp.asarray(g.h))
     assert np.allclose(np.asarray(d), np_floyd_warshall(g.h), equal_nan=True)
     assert 1 <= int(iters) <= int(np.ceil(np.log2(33))) + 1
+
+
+def _path_graph(n: int) -> np.ndarray:
+    """0 -> 1 -> ... -> n-1, unit weights: hop diameter n-1 (worst case)."""
+    h = np.full((n, n), np.inf, np.float32)
+    np.fill_diagonal(h, 0.0)
+    for i in range(n - 1):
+        h[i, i + 1] = 1.0
+    return h
+
+
+def test_spd_features_path_graph_regression():
+    """Shortest-path diameter > log2(n)+1 hops: a fixed ceil(log2 n) budget
+    of one-hop relaxations (the pre-fix code) leaves far landmarks at the
+    unreachable cap — the relaxation must iterate to fixpoint instead."""
+    n = 32
+    f = np.asarray(spd_features(jnp.asarray(_path_graph(n)), jnp.asarray([0])))
+    assert f.shape == (n, 1)
+    assert np.array_equal(f[:, 0], np.arange(n, dtype=np.float32))
+
+
+def test_spd_features_unreachable_capped(rng):
+    g = generate_np(rng, 20, rho=15.0)
+    f = np.asarray(spd_features(jnp.asarray(g.h), jnp.asarray([0, 3]), cap=99.0))
+    d = np_floyd_warshall(g.h)
+    want = np.minimum(d[[0, 3], :], 99.0).T
+    assert np.allclose(f, want)
+
+
+def test_reconstruct_path_jit_truncation_reports_unreachable():
+    """Pinned convention: a *reachable* pair whose path exceeds ``max_len``
+    reports length == 0 (the unreachable convention) with an all--1 path —
+    the dynamic engine's pred-walk fallback relies on exactly this."""
+    n = 8
+    r = solve(_path_graph(n), method="classic", with_pred=True)
+    pred = jnp.asarray(r.pred)
+    path, length = reconstruct_path_jit(pred, 0, n - 1, max_len=4)
+    assert int(length) == 0
+    assert (np.asarray(path) == -1).all()
+    # exactly max_len nodes still fits
+    path, length = reconstruct_path_jit(pred, 0, n - 1, max_len=n)
+    assert int(length) == n
+    assert np.asarray(path).tolist() == list(range(n))
 
 
 def test_jit_path_reconstruction(rng):

@@ -99,6 +99,32 @@ def test_pad_batch_shapes_and_padding():
         pad_batch(mats, n_max=8)
 
 
+def test_pad_batch_reinertizes_poisoned_padding():
+    """A pre-stacked input whose caller-managed padding region holds garbage
+    (0.0 off-diagonal = free phantom shortcuts under tropical) must be
+    re-inertized, not trusted — pre-fix this corrupted real distances."""
+    rng = np.random.default_rng(3)
+    n_true, edge = 6, 12
+    graphs = [generate_np(rng, n_true) for _ in range(2)]
+    stack = np.zeros((2, edge, edge), np.float32)      # deliberately poisoned
+    for i, g in enumerate(graphs):
+        stack[i, :n_true, :n_true] = g.h
+    sizes = [n_true, n_true]
+
+    packed, out_sizes = pad_batch(stack, sizes)
+    s = np.asarray(packed)
+    assert s.shape == (2, edge, edge) and list(out_sizes) == sizes
+    assert np.isinf(s[:, n_true:, :n_true]).all()      # rows re-inertized
+    assert np.isinf(s[:, :n_true, n_true:]).all()      # cols re-inertized
+    assert (np.diagonal(s, axis1=1, axis2=2)[:, n_true:] == 0).all()
+
+    res = solve_batch(stack, sizes, method="classic")
+    for i, g in enumerate(graphs):
+        ref = solve(g.h, method="classic")
+        assert np.array_equal(np.asarray(res.unpadded(i).dist),
+                              np.asarray(ref.dist)), i
+
+
 def test_solve_batch_accepts_stack_and_sizes():
     rng = np.random.default_rng(2)
     mats = [generate_np(rng, n).h for n in (6, 11)]

@@ -1,0 +1,229 @@
+"""Differential suite for the incremental APSP engine (`core.dynamic`).
+
+Every update sequence is checked against a cold full `solve()` of the same
+mutated cost matrix: decrease-only sequences bit-exactly (integer-valued
+tropical weights make both paths exact), mixed increase/decrease sequences
+within the oracle tolerance (they are bit-exact too in practice, but only
+the tolerance is contractual).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DynamicAPSP, solve, validate_tree
+from repro.core.graphgen import generate_edge_updates, generate_np
+from repro.core.paths import path_cost, reconstruct_path
+
+pytestmark = pytest.mark.dynamic
+
+SIZES = (24, 37, 64)            # includes non-power-of-two
+
+
+def _mixed(rng, h, k):
+    """Arbitrary updates: inserts, decreases, increases, deletions."""
+    n = h.shape[0]
+    u = rng.integers(0, n, k).astype(np.int32)
+    v = ((u + rng.integers(1, n, k)) % n).astype(np.int32)
+    w = rng.integers(1, 200, k).astype(np.float32)
+    w[rng.uniform(size=k) < 0.2] = np.inf            # deletions
+    return u, v, w
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("with_pred", [False, True])
+def test_decrease_only_bit_exact_vs_full_recompute(n, with_pred, rng):
+    g = generate_np(rng, n, rho=40.0)
+    eng = DynamicAPSP(g.h, with_pred=with_pred, block_size=16)
+    for step in range(4):
+        u, v, w = generate_edge_updates(rng, eng.h, int(rng.integers(1, 9)))
+        info = eng.update(u, v, w)
+        assert info["path"] in ("rank_k", "noop"), info
+        ref = solve(eng.h, with_pred=with_pred, block_size=16)
+        assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist)), (
+            n, with_pred, step)
+        if with_pred:
+            d, p = np.asarray(eng.dist), np.asarray(eng.pred)
+            h = eng.h
+            assert validate_tree(h, d, p), (n, step)
+            fin = np.argwhere(np.isfinite(d) & (d > 0))
+            for idx in fin[:: max(len(fin) // 8, 1)]:
+                a, b = map(int, idx)
+                path = reconstruct_path(p, a, b)
+                assert path is not None
+                assert abs(path_cost(h, path) - d[a, b]) < 1e-4
+
+
+@pytest.mark.parametrize("n", (24, 37, 64))
+@pytest.mark.parametrize("with_pred", [False, True])
+def test_mixed_sequences_match_recompute(n, with_pred, rng):
+    g = generate_np(rng, n, rho=40.0)
+    eng = DynamicAPSP(g.h, with_pred=with_pred, block_size=16)
+    seen_paths = set()
+    for step in range(6):
+        u, v, w = _mixed(rng, eng.h, int(rng.integers(1, 9)))
+        info = eng.update(u, v, w)
+        seen_paths.add(info["path"])
+        ref = solve(eng.h, with_pred=with_pred, block_size=16)
+        assert np.allclose(np.asarray(eng.dist), np.asarray(ref.dist),
+                           rtol=1e-5, atol=1e-5, equal_nan=True), (n, step)
+        if with_pred:
+            assert validate_tree(eng.h, np.asarray(eng.dist),
+                                 np.asarray(eng.pred)), (n, step)
+    assert seen_paths - {"noop"}, "sequence never exercised an update path"
+
+
+def test_deletion_disconnects(rng):
+    """Deleting a bridge edge (w = inf) must drop the pairs that used it."""
+    n = 12
+    h = np.full((n, n), np.inf, np.float32)
+    np.fill_diagonal(h, 0.0)
+    for i in range(n - 1):
+        h[i, i + 1] = 1.0                             # path graph: all bridges
+    eng = DynamicAPSP(h, block_size=8)
+    assert float(eng.dist[0, n - 1]) == n - 1
+    info = eng.update([(5, 6, np.inf)])
+    assert info["path"] in ("warm_resolve", "full_resolve")
+    ref = solve(eng.h, block_size=8)
+    assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist))
+    assert np.isinf(np.asarray(eng.dist)[0, n - 1])
+
+
+def test_increase_reroutes(rng):
+    g = generate_np(rng, 32, rho=60.0)
+    eng = DynamicAPSP(g.h, with_pred=True, block_size=16)
+    # worsen the 8 currently-cheapest real edges — likely on shortest paths
+    h = eng.h
+    fin = np.argwhere(np.isfinite(h) & (h > 0))
+    order = np.argsort(h[fin[:, 0], fin[:, 1]])[:8]
+    edges = [(int(i), int(j), float(h[i, j]) + 500.0) for i, j in fin[order]]
+    eng.update(edges)
+    ref = solve(eng.h, with_pred=True, block_size=16)
+    assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist))
+    assert validate_tree(eng.h, np.asarray(eng.dist), np.asarray(eng.pred))
+
+
+def test_plateau_semiring_documented_fallback(rng):
+    g = generate_np(rng, 20, rho=40.0)
+    cap = np.where(np.isfinite(g.h), g.h, -np.inf).astype(np.float32)
+    np.fill_diagonal(cap, np.inf)
+    eng = DynamicAPSP(cap, semiring="bottleneck", block_size=8)
+    info = eng.update([(0, 5, 120.0)])               # even a pure improvement
+    assert info["path"] == "full_resolve"
+    assert "plateau" in info["reason"]
+    ref = solve(eng.h, semiring="bottleneck", block_size=8)
+    assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist))
+
+
+def test_plateau_path_query_refused(rng):
+    """path() walks pred chains, which plateau semirings may legitimately
+    cycle — the engine must refuse rather than misreport unreachable."""
+    g = generate_np(rng, 12, rho=40.0)
+    cap = np.where(np.isfinite(g.h), g.h, -np.inf).astype(np.float32)
+    np.fill_diagonal(cap, np.inf)
+    eng = DynamicAPSP(cap, semiring="bottleneck", with_pred=True, block_size=8)
+    with pytest.raises(ValueError, match="plateau"):
+        eng.path(0, 1)
+
+
+def test_monotone_nontropical_rank_k(rng):
+    """reliability (max, x) is monotone: decreases (= probability raises)
+    take the exact rank-k path."""
+    n = 24
+    p = np.zeros((n, n), np.float32)
+    edge = rng.uniform(size=(n, n)) < 0.4
+    np.fill_diagonal(edge, False)
+    p[edge] = rng.uniform(0.05, 0.95, size=int(edge.sum()))
+    np.fill_diagonal(p, 1.0)
+    eng = DynamicAPSP(p, semiring="reliability", block_size=8)
+    u, v = 1, 7
+    old = float(eng.h[u, v])
+    new_p = min(0.99, old + 0.5) if old > 0 else 0.9   # strictly better
+    info = eng.update([(u, v, new_p)])
+    assert info["path"] == "rank_k"
+    ref = solve(eng.h, semiring="reliability", block_size=8)
+    assert np.allclose(np.asarray(eng.dist), np.asarray(ref.dist), rtol=1e-6)
+
+
+def test_rank_k_update_matches_naive_candidates(rng):
+    from repro.kernels import ops as kops
+
+    n, k = 16, 3
+    g = generate_np(rng, n)
+    r = solve(g.h, with_pred=True, method="classic")
+    dist = np.asarray(r.dist)
+    u, v, w = generate_edge_updates(rng, g.h, k)
+    z, pz = kops.rank_k_update(
+        jnp.asarray(dist), jnp.asarray(u), jnp.asarray(v), jnp.asarray(w),
+        pred=jnp.asarray(r.pred),
+    )
+    cand = dist.copy()
+    for ui, vi, wi in zip(u, v, w):
+        cand = np.minimum(cand, dist[:, ui][:, None] + wi + dist[vi, :][None, :])
+    assert np.array_equal(np.asarray(z), cand)
+    assert pz.shape == r.pred.shape
+
+
+def test_batch_dedup_last_wins_and_validation(rng):
+    g = generate_np(rng, 16, rho=40.0)
+    eng = DynamicAPSP(g.h, block_size=8)
+    eng.update([(2, 3, 50.0), (2, 3, 7.0)])          # last write wins
+    assert eng.h[2, 3] == 7.0
+    ref = solve(eng.h, block_size=8)
+    assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist))
+    with pytest.raises(ValueError, match="self-loop"):
+        eng.update([(4, 4, 1.0)])
+    with pytest.raises(ValueError, match="out of range"):
+        eng.update([(0, 99, 1.0)])
+    info = eng.update([(2, 3, 7.0)])                 # no-op: same weight
+    assert info["path"] == "noop"
+    assert eng.update([])["path"] == "noop"          # empty batch is a noop
+
+
+def test_path_query_with_truncation_fallback():
+    n = 10
+    h = np.full((n, n), np.inf, np.float32)
+    np.fill_diagonal(h, 0.0)
+    for i in range(n - 1):
+        h[i, i + 1] = 1.0
+    eng = DynamicAPSP(h, with_pred=True, block_size=8)
+    assert eng.path(0, n - 1) == list(range(n))
+    # max_len too small -> jit walk truncates (length 0) -> host fallback
+    assert eng.path(0, n - 1, max_len=3) == list(range(n))
+    assert eng.path(n - 1, 0) is None                # genuinely unreachable
+    assert eng.path(4, 4) == [4]
+    # updates keep the path queryable
+    eng.update([(0, n - 1, 1.0)])
+    assert eng.path(0, n - 1) == [0, n - 1]
+
+
+def test_serve_recast_masked_and_custom_semiring_error():
+    """Satellite: _recast_graph computes only on the edge mask (no numpy
+    warnings even under errstate=raise) and unknown semirings fail fast
+    with an actionable message."""
+    from repro.launch.serve import _check_recastable, _recast_graph
+
+    h = np.full((6, 6), np.inf, np.float32)
+    np.fill_diagonal(h, 0.0)
+    h[0, 1], h[1, 2] = 3.0, 4.0
+    with np.errstate(all="raise"):
+        rel = _recast_graph(h, "reliability")
+        bot = _recast_graph(h, "bottleneck")
+        boo = _recast_graph(h, "boolean")
+    assert rel[0, 1] == np.float32(1.0 / 4.0) and rel[3, 4] == 0.0
+    assert np.isneginf(bot[3, 4]) and bot[0, 1] == 3.0
+    assert boo[0, 1] == 1.0 and boo[3, 4] == 0.0
+    for m in (rel, boo):
+        assert (np.diag(m) == 1.0).all()
+    with pytest.raises(ValueError, match="recast"):
+        _check_recastable("my_custom_semiring")
+
+
+@pytest.mark.slow
+def test_serve_dynamic_mode_smoke():
+    from repro.launch.serve import serve_apsp_dynamic
+
+    assert serve_apsp_dynamic(
+        10, n_max=24, graphs=1, mutate_rate=0.6, mutate_k=4,
+        verify_every=5, seed=0,
+    ) == 0

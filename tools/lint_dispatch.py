@@ -1,0 +1,79 @@
+"""Dispatch-convention lint: solver modules must use the fused kernels.
+
+The ISSUE-2 convention, promoted from a review-time grep to a real gate
+(``make lint-dispatch``, part of ``make check``): solver code in
+``repro.core`` never calls the unfused semiring product (module-level
+``minplus`` / ``minplus_pred`` from ``core.semiring``) or follows a product
+with a separate elementwise ``jnp.minimum`` / ``jnp.maximum`` accumulate
+sweep — everything routes through ``repro.kernels.ops`` (``kops.minplus``
+fused-accumulate family), which is the single tuned dispatch surface.
+
+Allowed escapes:
+  * the paper-faithful 3D formulation (``minplus_3d``) — a different name,
+    deliberately not flagged;
+  * a line ending in ``# lint: allow-unfused`` — for elementwise uses that
+    are not accumulate sweeps (e.g. the SPD feature cap).
+
+Exit code 1 with file:line diagnostics on violation.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# solver modules under the convention (core/semiring.py itself hosts the
+# plain primitives and is exempt; kernels/ implement the dispatch surface)
+SOLVER_FILES = [
+    "src/repro/core/floyd_warshall.py",
+    "src/repro/core/blocked_fw.py",
+    "src/repro/core/rkleene.py",
+    "src/repro/core/distributed.py",
+    "src/repro/core/apsp.py",
+    "src/repro/core/dynamic.py",
+    "src/repro/core/paths.py",
+]
+
+PRAGMA = "lint: allow-unfused"
+
+BANNED = [
+    # separate elementwise accumulate sweep after a product
+    (re.compile(r"\bjnp\.(minimum|maximum)\s*\("),
+     "separate elementwise accumulate (use the fused kernels.ops dispatch)"),
+    # unfused semiring product: bare minplus()/minplus_pred() not routed
+    # through the kernels.ops dispatch (kops./ops./_kops. prefixes pass;
+    # minplus_3d / minplus_xla are different names and do not match)
+    (re.compile(r"(?<![\w.])minplus(_pred)?\s*\("),
+     "unfused semiring.minplus (route through repro.kernels.ops)"),
+    # importing the unfused primitives into a solver is the same smell
+    (re.compile(r"from\s+[.\w]*semiring\s+import\s+[^#\n]*\bminplus\b"),
+     "importing the unfused semiring product into a solver"),
+]
+
+
+def lint(root: Path) -> int:
+    errors = []
+    for rel in SOLVER_FILES:
+        path = root / rel
+        if not path.exists():
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if PRAGMA in line:
+                continue
+            code = line.split("#", 1)[0]          # ignore comment-only hits
+            for pat, why in BANNED:
+                if pat.search(code):
+                    errors.append(f"{rel}:{lineno}: {why}\n    {line.strip()}")
+    if errors:
+        print("dispatch-convention violations:\n" + "\n".join(errors))
+        print(f"\n{len(errors)} violation(s).  Route solver products through "
+              "repro.kernels.ops (fused accumulate / fused argmin); append "
+              f"'# {PRAGMA}' only for non-accumulate elementwise uses.")
+        return 1
+    print(f"lint-dispatch: {len(SOLVER_FILES)} solver modules clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(lint(Path(__file__).resolve().parent.parent))
