@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dynamic lint-dispatch check bench bench-smoke serve-apsp serve-dynamic
+.PHONY: test test-fast test-dynamic lint-dispatch check bench bench-smoke bench-check serve-apsp serve-dynamic
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -16,15 +16,19 @@ test-dynamic:   ## incremental-engine differential suite (update vs full recompu
 lint-dispatch:  ## fail on unfused semiring products / separate accumulate sweeps in solvers
 	$(PY) tools/lint_dispatch.py
 
-check: lint-dispatch  ## dispatch lint + tier-1 (incl. dynamic suite) + differential-oracle suite
+check: lint-dispatch  ## dispatch lint + tier-1 (incl. dynamic suite) + oracle suite + bench gate
 	$(PY) -m pytest -x -q -m "not oracle"
 	$(PY) -m pytest -q -m oracle tests/test_semiring_oracle.py
+	$(MAKE) bench-check
 
 bench:          ## paper-figure benchmark sweep (CSV to stdout + BENCH_apsp.json)
 	$(PY) -m benchmarks.run --quick
 
 bench-smoke:    ## autotuner + benchmark dispatch-regression canary at N<=128 (seconds)
 	$(PY) -m benchmarks.run --smoke --json BENCH_apsp_smoke.json
+
+bench-check:    ## regression gate: median-of-3 fresh smoke vs committed baseline (noise-tolerant)
+	$(PY) tools/bench_compare.py
 
 serve-apsp:     ## smoke the batched APSP serving loop
 	$(PY) -m repro.launch.serve --arch apsp --requests 32 --batch 16 --n-max 64

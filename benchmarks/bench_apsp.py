@@ -46,26 +46,38 @@ def python_fw(h: np.ndarray) -> np.ndarray:
     return np.asarray([[d[i][j] for j in range(n)] for i in range(n)])
 
 
-def _time(fn, *args, reps=2):
+def _time(fn, *args, reps=5):
+    """Best-of-reps wall time — the one timing policy the tuner and every
+    harness share (``autotune.measure``): on this noisily-shared container
+    the *minimum* is the only statistic that tracks the code, not the
+    neighbors."""
     fn(*args)                      # compile / warm
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
-    return (time.perf_counter() - t0) / reps
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run(sizes=(64, 128, 256, 384, 512), seed: int = 0, py_cpu_max: int = 192):
+    from repro.kernels import autotune
+
     rng = np.random.default_rng(seed)
     rows = []
     for n in sizes:
         g = generate_np(rng, n, rho=60.0)
         h = g.h
 
+        if autotune.mode() != "off":
+            # round-shape winner (block x fused-vs-split) for this edge
+            # bucket, measured on a miss, reused from the cache otherwise —
+            # blocked_fw below runs with block_size=None = the winner
+            autotune.tune_fw_round(n, reps=1)
         t_sq = _time(lambda: np.asarray(solve(h, method="squaring").dist))
         t_rk = _time(lambda: np.asarray(solve(h, method="rkleene", base=64).dist))
-        t_bf = _time(lambda: np.asarray(solve(h, method="blocked_fw",
-                                              block_size=128).dist))
+        t_bf = _time(lambda: np.asarray(solve(h, method="blocked_fw").dist))
         row = {
             "bench": "fig10_apsp_runtime",
             "n": n,
@@ -78,7 +90,6 @@ def run(sizes=(64, 128, 256, 384, 512), seed: int = 0, py_cpu_max: int = 192):
             t0 = time.perf_counter()
             python_fw(h)
             row["us_python_cpu"] = (time.perf_counter() - t0) * 1e6
-            row["speedup_vs_python"] = row["us_python_cpu"] / min(t_sq, t_rk, t_bf) / 1e6 * 1
             row["speedup_vs_python"] = row["us_python_cpu"] / (min(t_sq, t_rk, t_bf) * 1e6)
         rows.append(row)
     # the paper's scaling claim: squaring/rkleene ratio grows with n

@@ -1,0 +1,130 @@
+"""Headline bench for the bandwidth-optimal solver core.
+
+In-process, interleaved (the only comparison this noisy 2-CPU container
+supports) measurement of one blocked-FW solve:
+
+  * legacy 4-product **split** round vs the fused multi-stage round
+    (``kernels.ops.fw_round``) at the same block size — the PR's headline
+    speedup, plus the autotuned (block, mode) winner the fig10 sweep uses;
+  * **bf16 mixed-precision** round: runtime + measured max relative error
+    against the f32 result (the COMPAT.md contract bound is asserted in
+    the test suite; here it is reported);
+  * **donation memory accounting** from XLA's compiled memory analysis:
+    resident bytes (arguments + outputs + temps - donated aliases) for the
+    donated vs non-donated solver — the peak-memory reduction of in-place
+    state.
+
+Bit-exactness of fused vs split is asserted inline (integer graphgen
+weights -> exact f32 sums -> the two candidate orders agree bit-for-bit).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.blocked_fw import (
+    _blocked_fw_jit,
+    blocked_fw,
+)
+from repro.core.graphgen import generate_np
+from repro.core.semiring import TROPICAL
+from repro.kernels import autotune
+
+BF16_CONTRACT_MAX_REL_ERR = 0.02   # documented bound, COMPAT.md §Precision
+
+
+def _mem_stats(h, block, round_mode, donate):
+    """Compiled memory analysis of one solver executable."""
+    import jax
+
+    fn = jax.jit(
+        lambda x: _blocked_fw_jit(
+            x, block_size=block, with_pred=False, semiring=TROPICAL,
+            round_mode=round_mode,
+        )[0],
+        donate_argnums=(0,) if donate else (),
+    )
+    ma = fn.lower(jax.ShapeDtypeStruct(h.shape, h.dtype)).compile().memory_analysis()
+    resident = (
+        ma.argument_size_in_bytes
+        + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "resident_bytes": int(resident),
+    }
+
+
+def run(n: int = 512, block=None, reps: int = 3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    g = generate_np(rng, n, rho=60.0)
+    h = jnp.asarray(g.h)
+
+    if autotune.mode() != "off":
+        won = autotune.tune_fw_round(n, reps=max(1, reps - 1))
+        params = won.get("params") or {}
+        block = block or params.get("block_size")
+        winner_mode = params.get("round_mode")
+    else:
+        winner_mode = None
+    block = int(block or min(128, n))
+
+    def t(round_mode):
+        return autotune.measure(
+            lambda: blocked_fw(h, block_size=block, round_mode=round_mode)[0],
+            reps,
+        )
+
+    # interleave so drift hits both modes equally
+    us_f1, us_s1 = t("fused"), t("split")
+    us_f2, us_s2 = t("fused"), t("split")
+    us_fused, us_split = min(us_f1, us_f2), min(us_s1, us_s2)
+
+    d_fused = np.asarray(blocked_fw(h, block_size=block, round_mode="fused")[0])
+    d_split = np.asarray(blocked_fw(h, block_size=block, round_mode="split")[0])
+    bitexact = bool(np.array_equal(d_fused, d_split))
+    assert bitexact, "fused round diverged from the split round"
+
+    # bf16 mixed-precision mode
+    hb = h.astype(jnp.bfloat16)
+    us_bf16 = autotune.measure(
+        lambda: blocked_fw(hb, block_size=block, round_mode="fused")[0], reps
+    )
+    d_bf16 = np.asarray(
+        blocked_fw(hb, block_size=block, round_mode="fused")[0]
+    ).astype(np.float32)
+    mask = np.isfinite(d_fused) & (d_fused > 0)
+    rel = np.abs(d_bf16[mask] - d_fused[mask]) / d_fused[mask]
+    max_rel = float(rel.max()) if mask.any() else 0.0
+
+    mem_d = _mem_stats(h, block, "fused", donate=True)
+    mem_u = _mem_stats(h, block, "fused", donate=False)
+    peak_red = 1.0 - mem_d["resident_bytes"] / max(mem_u["resident_bytes"], 1)
+
+    return [{
+        "bench": "fused_round",
+        "n": n,
+        "block": block,
+        "round_mode_winner": winner_mode,
+        "us_split": us_split,
+        "us_fused": us_fused,
+        "speedup_fused_round": us_split / us_fused if us_fused else None,
+        "bitexact_fused_vs_split": bitexact,
+        "us_bf16_fused": us_bf16,
+        "bf16_max_rel_err": max_rel,
+        "bf16_contract_max_rel_err": BF16_CONTRACT_MAX_REL_ERR,
+        "bf16_within_contract": bool(max_rel <= BF16_CONTRACT_MAX_REL_ERR),
+        "memory": {"donated": mem_d, "undonated": mem_u},
+        "peak_memory_reduction_frac": peak_red,
+    }]
+
+
+if __name__ == "__main__":
+    for r in run(n=256, reps=2):
+        print(r)

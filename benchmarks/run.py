@@ -38,12 +38,51 @@ def _apsp_summary(rows):
     return out
 
 
+def _check_rkleene_monotone(rows, tol: float = 0.25, base: int = 64):
+    """The monotonicity smoke assertion (ISSUE 5): R-Kleene runtime must be
+    non-decreasing in N across the fig10 sweep, up to ``tol`` jitter —
+    the pow-2 padding pathology (N=384 solving a padded 512 problem,
+    slower than true N=512) trips this immediately.  Pairs whose *padded*
+    edges coincide (e.g. the smoke run's N=32 and N=64 both close one
+    base-64 leaf) do identical work and carry no ordering expectation, so
+    they are skipped rather than left to jitter-fail the gate.  Returns
+    the check row and raises on violation."""
+    from repro.core.rkleene import padded_size
+
+    pts = sorted(
+        (r["n"], r["us_rkleene_accel"])
+        for r in rows
+        if r.get("bench") == "fig10_apsp_runtime" and "us_rkleene_accel" in r
+    )
+    violations = [
+        {"n_small": n0, "n_large": n1, "us_small": t0, "us_large": t1}
+        for (n0, t0), (n1, t1) in zip(pts, pts[1:])
+        if padded_size(n0, base) < padded_size(n1, base)
+        and t1 < t0 * (1.0 - tol)
+    ]
+    row = {
+        "bench": "rkleene_monotonicity",
+        "ok": not violations,
+        "tolerance": tol,
+        "sweep": {str(n): t for n, t in pts},
+        "violations": violations,
+    }
+    assert not violations, (
+        f"R-Kleene runtime not monotone in N (pad/split rule regressed?): "
+        f"{violations}"
+    )
+    return row
+
+
 def _write_json(path, *, mode, all_rows, fused_rows):
     from repro.kernels import autotune, ops
 
     fused = next(
         (r for r in fused_rows if r.get("bench") == "fused_vs_unfused_blocked_fw"),
         None,
+    )
+    fused_round = next(
+        (r for r in all_rows if r.get("bench") == "fused_round"), None
     )
     dynamic = next(
         (r for r in all_rows if r.get("bench") == "dynamic_update_vs_resolve"),
@@ -64,6 +103,7 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         },
         "apsp": _apsp_summary(all_rows),
         "fused_vs_unfused": fused,
+        "fused_round": fused_round,
         "dynamic_update_vs_resolve": dynamic,
         "rows": all_rows,
     }
@@ -93,6 +133,7 @@ def main(argv=None) -> int:
         bench_fused,
         bench_graphgen,
         bench_minplus,
+        bench_round,
     )
 
     if args.smoke:
@@ -100,6 +141,7 @@ def main(argv=None) -> int:
         suites = [
             ("fig10_apsp", lambda: bench_apsp.run(
                 sizes=(32, 64, 128), py_cpu_max=64)),
+            ("fused_round", lambda: bench_round.run(n=128, reps=2)),
             ("fused_dispatch", lambda: bench_fused.run(
                 n=128, block=32, reps=1)),
             ("dynamic_update", lambda: bench_dynamic.run(
@@ -113,6 +155,8 @@ def main(argv=None) -> int:
             ("fig10_apsp", lambda: bench_apsp.run(
                 sizes=(64, 128, 256) if args.quick else (64, 128, 256, 384, 512),
                 py_cpu_max=128 if args.quick else 192)),
+            ("fused_round", lambda: bench_round.run(
+                n=256 if args.quick else 512, reps=2 if args.quick else 3)),
             ("minplus_wall", lambda: bench_minplus.run(
                 sizes=(128, 256) if args.quick else (128, 256, 512, 1024))),
             ("blocked_fw_tiles", lambda: bench_blocksize.run(
@@ -137,6 +181,8 @@ def main(argv=None) -> int:
         all_rows.extend(rows)
         if name == "fused_dispatch":
             fused_rows = rows
+
+    all_rows.append(_check_rkleene_monotone(all_rows))
 
     if args.json:
         _write_json(args.json, mode=mode, all_rows=all_rows,

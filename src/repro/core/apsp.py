@@ -116,14 +116,18 @@ def _classic(h, with_pred, semiring=TROPICAL, **kw):
     return fw_classic(h, with_pred=with_pred, semiring=semiring)
 
 
-def _blocked(h, with_pred, block_size=256, semiring=TROPICAL, **kw):
+def _blocked(h, with_pred, block_size=None, semiring=TROPICAL, donate=False,
+             round_mode=None, **kw):
     return blocked_fw(
-        h, block_size=block_size, with_pred=with_pred, semiring=semiring
+        h, block_size=block_size, with_pred=with_pred, semiring=semiring,
+        round_mode=round_mode, donate=donate,
     )
 
 
-def _rkleene(h, with_pred, base=64, semiring=TROPICAL, **kw):
-    return rkleene(h, base=base, with_pred=with_pred, semiring=semiring)
+def _rkleene(h, with_pred, base=64, semiring=TROPICAL, donate=False, **kw):
+    return rkleene(
+        h, base=base, with_pred=with_pred, semiring=semiring, donate=donate
+    )
 
 
 METHODS: Dict[str, Callable] = {
@@ -149,9 +153,11 @@ def _classic_batch(hs, with_pred, semiring=TROPICAL, **kw):
     return fw_classic_batch(hs, with_pred=with_pred, semiring=semiring)
 
 
-def _blocked_batch(hs, with_pred, block_size=256, semiring=TROPICAL, **kw):
+def _blocked_batch(hs, with_pred, block_size=None, semiring=TROPICAL,
+                   donate=False, round_mode=None, **kw):
     return blocked_fw_batch(
-        hs, block_size=block_size, with_pred=with_pred, semiring=semiring
+        hs, block_size=block_size, with_pred=with_pred, semiring=semiring,
+        round_mode=round_mode, donate=donate,
     )
 
 
@@ -183,6 +189,8 @@ def solve(
     method: str = "blocked_fw",
     with_pred: bool = False,
     semiring: SemiringLike = "tropical",
+    donate: Optional[bool] = None,
+    dtype=None,
     **kwargs,
 ) -> APSPResult:
     """Solve the all-pairs path problem on a dense cost matrix.
@@ -190,12 +198,28 @@ def solve(
     Input conventions: off-diagonal "no edge" = semiring zero (tropical:
     inf), diagonal = semiring one (tropical: 0).  ``semiring`` is a
     registry name or instance; see ``repro.core.semiring.SEMIRINGS``.
+
+    ``donate``: None (default) auto-donates the solver input whenever this
+    call made a fresh conversion copy of ``h`` (host array or dtype cast) —
+    in-place solve with zero aliasing hazard.  ``True`` forces donation (a
+    jax-array ``h`` is consumed: reads after the call raise); ``False``
+    never donates.  Donation is honored by ``blocked_fw`` and ``rkleene``
+    (the in-place solver cores); other methods accept and ignore it.
+
+    ``dtype``: storage dtype for the solve (default float32).
+    ``jnp.bfloat16`` selects the mixed-precision mode — bf16 distance
+    state with f32 pivot/panel arithmetic, tropical-only, error contract
+    in COMPAT.md §Precision & memory.
     """
     if method not in METHODS:
         raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
     sr = get_semiring(semiring)
-    h = jnp.asarray(h, jnp.float32)
-    dist, pred = METHODS[method](h, with_pred, semiring=sr, **kwargs)
+    target = jnp.float32 if dtype is None else jnp.dtype(dtype)
+    x = jnp.asarray(h, target)
+    if donate is None:
+        donate = x is not h               # fresh copy -> safe to consume
+    dist, pred = METHODS[method](x, with_pred, semiring=sr, donate=donate,
+                                 **kwargs)
     return APSPResult(dist=dist, pred=pred, method=method)
 
 
@@ -254,11 +278,15 @@ def pad_batch(
     return jnp.asarray(out), sizes
 
 
-def _solve_stack(stack, with_pred, method, semiring=TROPICAL, **kwargs):
+def _solve_stack(stack, with_pred, method, semiring=TROPICAL, donate=False,
+                 **kwargs):
     """Run one (G, N, N) zero-padded stack through the batched solver."""
     batch_fn = BATCH_METHODS.get(method)
     if batch_fn is not None:
-        return batch_fn(stack, with_pred, semiring=semiring, **kwargs)
+        return batch_fn(stack, with_pred, semiring=semiring, donate=donate,
+                        **kwargs)
+    # vmap fallback: per-slice solvers can't take ownership of the stack,
+    # so donation stops here for non-natively-batched methods
     return jax.vmap(
         lambda h: METHODS[method](h, with_pred, semiring=semiring, **kwargs)
     )(stack)
@@ -289,15 +317,18 @@ def _bucket_count(c: int) -> int:
 
 def _solve_bucketed(
     mats: List[np.ndarray], sizes: np.ndarray, n: int, method: str,
-    with_pred: bool, semiring=TROPICAL, **kwargs
+    with_pred: bool, semiring=TROPICAL, donate=True, dtype=None, **kwargs
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Size-bucketed batched solve: graphs grouped by power-of-two padded
     edge, one batched program per bucket, results scattered back into the
     common (G, n, n) frame.  Bit-identical to the single-stack path —
     padding is inert either way — but a ragged corpus does ~size^3 work per
-    graph instead of n_max^3."""
+    graph instead of n_max^3.  Per-bucket stacks are fresh, so they donate
+    unless the caller opted out; ``dtype`` casts each bucket's stack (bf16
+    mixed mode) and the scattered result frame."""
     g = len(mats)
-    dist = np.full((g, n, n), semiring.zero, np.float32)
+    out_dtype = np.float32 if dtype is None else jnp.dtype(dtype)
+    dist = np.full((g, n, n), semiring.zero, out_dtype)
     idx = np.arange(n)
     dist[:, idx, idx] = semiring.one
     pred = None
@@ -314,7 +345,11 @@ def _solve_bucketed(
         sub = [mats[i] for i in members]
         sub += [np.zeros((0, 0), np.float32)] * (slots - len(members))
         stack, _ = pad_batch(sub, n_max=edge, semiring=semiring)
-        d, p = _solve_stack(stack, with_pred, method, semiring=semiring, **kwargs)
+        if dtype is not None:
+            stack = stack.astype(jnp.dtype(dtype))
+        # pad_batch built a fresh stack -> safe to donate per bucket
+        d, p = _solve_stack(stack, with_pred, method, semiring=semiring,
+                            donate=donate, **kwargs)
         d = np.asarray(d)
         p = None if p is None else np.asarray(p)
         for j, i in enumerate(members):
@@ -334,6 +369,8 @@ def solve_batch(
     n_max: Optional[int] = None,
     bucket_by_size: bool = False,
     semiring: SemiringLike = "tropical",
+    donate: Optional[bool] = None,
+    dtype=None,
     **kwargs,
 ) -> BatchAPSPResult:
     """Solve the all-pairs path problem on a batch of independent graphs in
@@ -350,6 +387,12 @@ def solve_batch(
     batched program (a small, bounded family of compiled shapes instead of
     exactly one), so a mixed-size corpus pays ~size^3 per graph rather than
     n_max^3.  Output is bit-identical to the single-stack path.
+
+    ``donate``/``dtype`` follow :func:`solve`: None auto-donates the
+    padded stack whenever packing made a fresh buffer (always, except a
+    full-size pre-stacked jax input), halving the resident batch state for
+    the natively-batched in-place solvers; ``dtype=jnp.bfloat16`` selects
+    mixed precision (tropical only).
     """
     if method not in METHODS:
         raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
@@ -370,9 +413,15 @@ def solve_batch(
         if int(sizes_.max()) > n:
             raise ValueError(f"n_max={n} smaller than largest graph")
         dist, pred = _solve_bucketed(
-            mats, sizes_, n, method, with_pred, semiring=semiring, **kwargs
+            mats, sizes_, n, method, with_pred, semiring=semiring,
+            donate=donate is not False, dtype=dtype, **kwargs
         )
         return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes_, method=method)
     stack, sizes = pad_batch(hs, sizes, n_max=n_max, semiring=semiring)
-    dist, pred = _solve_stack(stack, with_pred, method, semiring=semiring, **kwargs)
+    if dtype is not None:
+        stack = stack.astype(jnp.dtype(dtype))
+    if donate is None:
+        donate = stack is not hs          # fresh packed stack -> consume it
+    dist, pred = _solve_stack(stack, with_pred, method, semiring=semiring,
+                              donate=donate, **kwargs)
     return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes, method=method)

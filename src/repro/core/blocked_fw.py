@@ -2,31 +2,50 @@
 
 This is the paper's future-work item ("divide the 3D-Tensor L") realized as
 the classic 3-phase blocked FW (Katz & Kider style), restructured so every
-phase is a dense ⊕⊗ product over tiles:
+phase is a dense ⊕⊗ product over tiles.  Since the bandwidth-optimal-core
+rework the default **fused multi-stage round** (Lund & Smith's multi-stage
+scheme) does the whole k-round in one dispatch (``kernels.ops.fw_round``):
 
-for each pivot block t (size B):
-  phase 1: close the pivot block      D_tt <- FW(D_tt)
-  phase 2: row panel  D_t* <- D_tt (x) D_t*        (⊕⊗ product)
-           col panel  D_*t <- D_*t (x) D_tt
-  phase 3: global     D    <- D (+) D_*t (x) D_t*  (elementwise ⊕)
+for each pivot block t (size B, offset o):
+  stage 1: close the pivot block      A* <- FW(D_tt)
+  stage 2: col panel                  col' <- D_*t (x) A*
+  stage 3: fused full update          D <- D (+) col' (x) D_t*
 
-Because the updated column stripe's pivot rows equal the closed pivot block,
-the single phase-3 product also re-derives the stripes — the implementation
-below exploits that to touch the full matrix exactly once per pivot.  The
-subsumption argument ("pivot diag = semiring one => the product includes the
-old panel") holds for every registered semiring: ⊕ is selective and the
-diagonal contributes ``one ⊗ old = old`` to each candidate set.
+Stage 3's single accumulate covers the classic row/col panels and the
+pivot block by subsumption over the *old* operands:
 
-Every panel product goes through the fused ``kernels.ops`` dispatch: phase 3
-is one fused-accumulate ``ops.minplus(col, row, d)`` (no separate elementwise
-⊕ pass), predecessor propagation rides the fused-argmin kernel via
-``ops.minplus_pred``, and the batched solver's panel products lower to a
-single (G, ., .) kernel dispatch.  Block/chunk sizes come from the autotune
-cache (``kernels/autotune.py``) when it has measured winners.
+  * row stripe:   D_t* ⊕ (A ⊗ A*) ⊗ D_t* = (1 ⊕ A A*) ⊗ D_t* = A* ⊗ D_t*
+  * col stripe:   D_*t ⊕ (D_*t ⊗ A*) ⊗ A = D_*t ⊗ (1 ⊕ A* A) = D_*t ⊗ A*
+  * pivot block:  A ⊕ (A ⊗ A*) ⊗ A ⊕ 1  = A*
 
-Work: n/B pivots x O(n^2 B) = O(n^3).  Memory: O(n^2) + O(nB) live panels.
-The same decomposition drives the distributed solver (core/distributed.py)
-and the Pallas kernels (kernels/fw_block.py, kernels/minplus.py).
+(1 is the ⊗-identity the accumulate operand D contributes; the identities
+``1 ⊕ A A* = 1 ⊕ A* A = A*`` hold in every closed semiring).  So the fused
+round eliminates the separate row-panel product and both stripe
+``dynamic_update_slice`` writes of the legacy round — each output element
+is written exactly once per round.  The values are the ⊕ over the same
+path set as the legacy round; under exact edge weights (integer-valued
+floats — the graphgen domain) the two are bit-identical, and
+``round_mode="split"`` keeps the legacy 4-dispatch round for comparison /
+autotuning.
+
+Buffer donation: the public wrappers take ``donate=`` — when True the
+input matrix's buffer is donated to the jitted solver, which lets XLA run
+the pivot loop in place (one resident (N, N) state instead of
+input + output + per-round temporaries).  Donation consumes the caller's
+array (reads after the call raise); pass ``donate=False`` (default at this
+level) when the caller aliases the input.  ``apsp.solve`` auto-donates the
+fresh conversion copy it makes from host inputs.
+
+Mixed precision: a bf16 input runs the mixed-precision round — bf16
+storage, f32 pivot/panel arithmetic, one rounding per stage (tropical
+only; see COMPAT.md §Precision & memory for the error contract).
+
+Block size and round mode come from the persistent autotuner's
+``fwround|...`` winners (``kernels.autotune.tune_fw_round``) when not
+given explicitly.  Work: n/B pivots x O(n^2 B) = O(n^3).  Memory: O(n^2)
++ O(nB) live panels.  The same decomposition drives the distributed solver
+(core/distributed.py) and the Pallas kernels (kernels/fw_round.py,
+kernels/fw_block.py, kernels/minplus.py).
 """
 
 from __future__ import annotations
@@ -40,12 +59,16 @@ from .floyd_warshall import init_pred
 from .semiring import (
     TROPICAL,
     Semiring,
+    SemiringLike,
+    get_semiring,
     pad_pred_to_multiple,
     pad_to_multiple,
     unpad,
 )
 
 __all__ = ["blocked_fw", "blocked_fw_batch", "closure_block"]
+
+_STATIC = ("block_size", "with_pred", "semiring", "round_mode")
 
 
 def _ops():
@@ -55,7 +78,7 @@ def _ops():
 
 
 def closure_block(d: jax.Array, semiring: Semiring = TROPICAL) -> jax.Array:
-    """In-block FW closure (phase 1) — B pivot steps on a (B, B) tile or a
+    """In-block FW closure (stage 1) — B pivot steps on a (B, B) tile or a
     (T, B, B) batch of tiles, one kernel dispatch either way.
 
     Routed through ``kernels/ops.py``: the Pallas kernel on TPU (whole tile
@@ -70,21 +93,47 @@ def _closure_block_pred(
     return _ops().fw_block_pred(d, p, semiring=semiring)
 
 
-@partial(jax.jit, static_argnames=("block_size", "with_pred", "semiring"))
-def blocked_fw(
+def _resolve_round(
+    h: jax.Array,
+    block_size: Optional[int],
+    round_mode: Optional[str],
+    sr: Semiring,
+    g: int = 0,
+    with_pred: bool = False,
+) -> Tuple[int, str]:
+    """Explicit args win; else the autotune ``fwround`` winner; else the
+    compiled-in defaults (fused round, B = min(256, n)).
+
+    Predecessor solves pin ``round_mode`` to the canonical fused round
+    instead of consulting the cache: fused and split rounds emit different
+    (equally valid) tie *witnesses*, and the per-size-bucket cache must
+    never make a batched solve and a per-graph solve of the same
+    (block_size, semiring) disagree on preds — the PR 1 bit-equality
+    contract.  Distances are mode-independent either way."""
+    n = h.shape[-1]
+    if block_size is None or round_mode is None:
+        from repro.kernels import autotune, ops
+
+        won = autotune.lookup_fw_round(
+            ops.backend(), h.dtype, n, g=g, semiring=sr.name
+        )
+        if block_size is None:
+            block_size = won.get("block_size", 256)
+        if round_mode is None:
+            round_mode = "fused" if with_pred else won.get("round_mode", "fused")
+    if round_mode not in ("fused", "split"):
+        raise ValueError(f"round_mode must be 'fused' or 'split', got {round_mode!r}")
+    return min(int(block_size), n), round_mode
+
+
+def _blocked_fw_impl(
     h: jax.Array,
     *,
-    block_size: int = 256,
-    with_pred: bool = False,
-    semiring: Semiring = TROPICAL,
+    block_size: int,
+    with_pred: bool,
+    semiring: Semiring,
+    round_mode: str,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """3-phase blocked Floyd-Warshall.
-
-    ``block_size`` is the tile edge B; the matrix is padded to a multiple of
-    B with unreachable phantom nodes (semantically inert).  The pivot loop is
-    a ``lax.fori_loop`` with ``dynamic_slice`` stripes so the HLO stays
-    O(1) in n/B.
-    """
     sr = semiring
     kops = _ops()
     n = h.shape[0]
@@ -92,82 +141,107 @@ def blocked_fw(
     d = pad_to_multiple(h, b, sr)
     np_ = d.shape[0]
     nblk = np_ // b
+    fused = round_mode == "fused"
 
     if not with_pred:
-        def body(t, d):
-            o = t * b
-            pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
-            pivot = closure_block(pivot, sr)
-            row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))      # (B, N)
-            col = jax.lax.dynamic_slice(d, (0, o), (np_, b))      # (N, B)
-            row = kops.minplus(pivot, row, semiring=sr)   # pivot diag one => subsumes old
-            col = kops.minplus(col, pivot, semiring=sr)
-            # col's pivot rows == closed pivot, so this also updates stripes.
-            col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
-            return kops.minplus(col, row, d, semiring=sr)  # fused phase-3 accumulate
+        if fused:
+            def body(t, d):
+                return kops.fw_round(d, t * b, block_size=b, semiring=sr)
+        else:
+            def body(t, d):
+                o = t * b
+                pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
+                pivot = closure_block(pivot, sr)
+                row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))    # (B, N)
+                col = jax.lax.dynamic_slice(d, (0, o), (np_, b))    # (N, B)
+                row = kops.minplus(pivot, row, semiring=sr)
+                col = kops.minplus(col, pivot, semiring=sr)
+                # col's pivot rows == closed pivot -> also updates stripes.
+                col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
+                return kops.minplus(col, row, d, semiring=sr)
 
         d = jax.lax.fori_loop(0, nblk, body, d)
         return unpad(d, n), None
 
     p = pad_pred_to_multiple(init_pred(h, sr), b)
 
-    def body_p(t, dp):
-        d, p = dp
-        o = t * b
-        pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
-        ppivot = jax.lax.dynamic_slice(p, (o, o), (b, b))
-        pivot, ppivot = _closure_block_pred(pivot, ppivot, sr)
+    if fused:
+        def body_p(t, dp):
+            d, p = dp
+            return kops.fw_round_pred(d, p, t * b, block_size=b, semiring=sr)
+    else:
+        def body_p(t, dp):
+            d, p = dp
+            o = t * b
+            pivot = jax.lax.dynamic_slice(d, (o, o), (b, b))
+            ppivot = jax.lax.dynamic_slice(p, (o, o), (b, b))
+            pivot, ppivot = _closure_block_pred(pivot, ppivot, sr)
 
-        row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))
-        prow = jax.lax.dynamic_slice(p, (o, 0), (b, np_))
-        col = jax.lax.dynamic_slice(d, (0, o), (np_, b))
-        pcol = jax.lax.dynamic_slice(p, (0, o), (np_, b))
+            row = jax.lax.dynamic_slice(d, (o, 0), (b, np_))
+            prow = jax.lax.dynamic_slice(p, (o, 0), (b, np_))
+            col = jax.lax.dynamic_slice(d, (0, o), (np_, b))
+            pcol = jax.lax.dynamic_slice(p, (0, o), (np_, b))
 
-        # Row panel: paths pivot-row -> anywhere; x-cols/y-rows are the pivot
-        # block (global offset o), output cols are global (offset 0).
-        row, prow = kops.minplus_pred(
-            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0,
-            semiring=sr,
-        )
-        # Col panel: paths anywhere -> pivot cols; output cols offset o too.
-        col, pcol = kops.minplus_pred(
-            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o,
-            semiring=sr,
-        )
+            row, prow = kops.minplus_pred(
+                pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o,
+                j_offset=0, semiring=sr,
+            )
+            col, pcol = kops.minplus_pred(
+                col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o,
+                j_offset=o, semiring=sr,
+            )
 
-        col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
-        pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (o, 0))
+            col = jax.lax.dynamic_update_slice(col, pivot, (o, 0))
+            pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (o, 0))
 
-        return kops.minplus_pred(
-            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0,
-            semiring=sr,
-        )
+            return kops.minplus_pred(
+                col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0,
+                semiring=sr,
+            )
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
     return unpad(d, n), unpad(p, n)
 
 
-@partial(jax.jit, static_argnames=("block_size", "with_pred", "semiring"))
-def blocked_fw_batch(
+_blocked_fw_jit = jax.jit(_blocked_fw_impl, static_argnames=_STATIC)
+_blocked_fw_jit_donate = jax.jit(
+    _blocked_fw_impl, static_argnames=_STATIC, donate_argnums=(0,)
+)
+
+
+def blocked_fw(
+    h: jax.Array,
+    *,
+    block_size: Optional[int] = None,
+    with_pred: bool = False,
+    semiring: SemiringLike = TROPICAL,
+    round_mode: Optional[str] = None,
+    donate: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """3-phase blocked Floyd-Warshall (fused multi-stage round by default).
+
+    ``block_size`` is the tile edge B; the matrix is padded to a multiple
+    of B with unreachable phantom nodes (semantically inert).  The pivot
+    loop is a ``lax.fori_loop`` driving one fused round dispatch per pivot
+    (``round_mode="split"`` restores the legacy 4-product round).
+    ``donate=True`` consumes ``h``'s buffer (in-place solve; the caller's
+    array becomes unusable).  A bf16 ``h`` selects the mixed-precision
+    round (tropical only).
+    """
+    sr = get_semiring(semiring)
+    b, rm = _resolve_round(h, block_size, round_mode, sr, with_pred=with_pred)
+    fn = _blocked_fw_jit_donate if donate else _blocked_fw_jit
+    return fn(h, block_size=b, with_pred=with_pred, semiring=sr, round_mode=rm)
+
+
+def _blocked_fw_batch_impl(
     hs: jax.Array,
     *,
-    block_size: int = 256,
-    with_pred: bool = False,
-    semiring: Semiring = TROPICAL,
+    block_size: int,
+    with_pred: bool,
+    semiring: Semiring,
+    round_mode: str,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Blocked FW over a (G, N, N) stack of independent graphs.
-
-    Same 3-phase pivot loop as :func:`blocked_fw`, but at every pivot step
-    the G pivot blocks are gathered into one (G, B, B) stack and closed by a
-    *single* ``kernels.ops.fw_block`` dispatch (the Pallas kernel takes tile
-    batches on its grid), and the panel ⊕⊗ products are (G, ., .) operands
-    of the batched fused dispatch — one kernel grid per phase for the whole
-    batch (leading batch grid dimension on the Pallas path, a single
-    vmapped XLA program on the fallback) instead of G sequential launches.
-    Ragged batches are handled upstream by zero-padding
-    (``apsp.solve_batch``): phantom nodes are inert under every registered
-    semiring.
-    """
     sr = semiring
     kops = _ops()
     g, n, _ = hs.shape
@@ -175,53 +249,96 @@ def blocked_fw_batch(
     d = jax.vmap(lambda h: pad_to_multiple(h, b, sr))(hs)
     np_ = d.shape[1]
     nblk = np_ // b
+    fused = round_mode == "fused"
 
     if not with_pred:
-        def body(t, d):
-            o = t * b
-            pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
-            pivot = closure_block(pivot, sr)               # one (G,B,B) dispatch
-            row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
-            col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
-            row = kops.minplus(pivot, row, semiring=sr)
-            col = kops.minplus(col, pivot, semiring=sr)
-            # col's pivot rows == closed pivot, so this also updates stripes.
-            col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
-            return kops.minplus(col, row, d, semiring=sr)  # fused batched phase-3
+        if fused:
+            def body(t, d):
+                return kops.fw_round(d, t * b, block_size=b, semiring=sr)
+        else:
+            def body(t, d):
+                o = t * b
+                pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
+                pivot = closure_block(pivot, sr)           # one (G,B,B) dispatch
+                row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
+                col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
+                row = kops.minplus(pivot, row, semiring=sr)
+                col = kops.minplus(col, pivot, semiring=sr)
+                # col's pivot rows == closed pivot -> also updates stripes.
+                col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
+                return kops.minplus(col, row, d, semiring=sr)
 
         d = jax.lax.fori_loop(0, nblk, body, d)
         return d[:, :n, :n], None
 
     p = jax.vmap(lambda h: pad_pred_to_multiple(init_pred(h, sr), b))(hs)
 
-    def body_p(t, dp):
-        d, p = dp
-        o = t * b
-        pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
-        ppivot = jax.lax.dynamic_slice(p, (0, o, o), (g, b, b))
-        pivot, ppivot = _closure_block_pred(pivot, ppivot, sr)
+    if fused:
+        def body_p(t, dp):
+            d, p = dp
+            return kops.fw_round_pred(d, p, t * b, block_size=b, semiring=sr)
+    else:
+        def body_p(t, dp):
+            d, p = dp
+            o = t * b
+            pivot = jax.lax.dynamic_slice(d, (0, o, o), (g, b, b))
+            ppivot = jax.lax.dynamic_slice(p, (0, o, o), (g, b, b))
+            pivot, ppivot = _closure_block_pred(pivot, ppivot, sr)
 
-        row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
-        prow = jax.lax.dynamic_slice(p, (0, o, 0), (g, b, np_))
-        col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
-        pcol = jax.lax.dynamic_slice(p, (0, 0, o), (g, np_, b))
+            row = jax.lax.dynamic_slice(d, (0, o, 0), (g, b, np_))
+            prow = jax.lax.dynamic_slice(p, (0, o, 0), (g, b, np_))
+            col = jax.lax.dynamic_slice(d, (0, 0, o), (g, np_, b))
+            pcol = jax.lax.dynamic_slice(p, (0, 0, o), (g, np_, b))
 
-        row, prow = kops.minplus_pred(
-            pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o, j_offset=0,
-            semiring=sr,
-        )
-        col, pcol = kops.minplus_pred(
-            col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o,
-            semiring=sr,
-        )
+            row, prow = kops.minplus_pred(
+                pivot, row, ppivot, prow, a=row, pa=prow, k_offset=o,
+                j_offset=0, semiring=sr,
+            )
+            col, pcol = kops.minplus_pred(
+                col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o,
+                j_offset=o, semiring=sr,
+            )
 
-        col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
-        pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (0, o, 0))
+            col = jax.lax.dynamic_update_slice(col, pivot, (0, o, 0))
+            pcol = jax.lax.dynamic_update_slice(pcol, ppivot, (0, o, 0))
 
-        return kops.minplus_pred(
-            col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0,
-            semiring=sr,
-        )
+            return kops.minplus_pred(
+                col, row, pcol, prow, a=d, pa=p, k_offset=o, j_offset=0,
+                semiring=sr,
+            )
 
     d, p = jax.lax.fori_loop(0, nblk, body_p, (d, p))
     return d[:, :n, :n], p[:, :n, :n]
+
+
+_blocked_fw_batch_jit = jax.jit(_blocked_fw_batch_impl, static_argnames=_STATIC)
+_blocked_fw_batch_jit_donate = jax.jit(
+    _blocked_fw_batch_impl, static_argnames=_STATIC, donate_argnums=(0,)
+)
+
+
+def blocked_fw_batch(
+    hs: jax.Array,
+    *,
+    block_size: Optional[int] = None,
+    with_pred: bool = False,
+    semiring: SemiringLike = TROPICAL,
+    round_mode: Optional[str] = None,
+    donate: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Blocked FW over a (G, N, N) stack of independent graphs.
+
+    Same pivot loop as :func:`blocked_fw`; the fused round's three stages
+    take (G, ., .) operands directly — a leading batch grid dimension on
+    the Pallas path, one vmapped XLA program on the fallback — so the
+    whole batch advances one pivot per dispatch round, exactly as the
+    legacy split round did with its four.  Ragged batches are handled
+    upstream by zero-padding (``apsp.solve_batch``): phantom nodes are
+    inert under every registered semiring.  ``donate=True`` consumes the
+    stack's buffer (in-place batch solve).
+    """
+    sr = get_semiring(semiring)
+    b, rm = _resolve_round(hs, block_size, round_mode, sr, g=hs.shape[0],
+                           with_pred=with_pred)
+    fn = _blocked_fw_batch_jit_donate if donate else _blocked_fw_batch_jit
+    return fn(hs, block_size=b, with_pred=with_pred, semiring=sr, round_mode=rm)

@@ -68,8 +68,7 @@ def _bucket_k(k: int) -> int:
     return next_pow2(k, 4)
 
 
-@partial(jax.jit, static_argnames=("semiring", "with_pred", "max_passes"))
-def _rank_k_fixpoint(dist, pred, u, v, w, *, semiring, with_pred, max_passes):
+def _rank_k_fixpoint_impl(dist, pred, u, v, w, *, semiring, with_pred, max_passes):
     """Iterate the fused rank-k relaxation to fixpoint (early exit)."""
     from repro.kernels import ops as kops
 
@@ -89,6 +88,17 @@ def _rank_k_fixpoint(dist, pred, u, v, w, *, semiring, with_pred, max_passes):
         cond, body, (dist, pred, jnp.bool_(True), jnp.int32(0))
     )
     return d, p, passes
+
+
+_RK_STATIC = ("semiring", "with_pred", "max_passes")
+_rank_k_fixpoint = partial(jax.jit, static_argnames=_RK_STATIC)(
+    _rank_k_fixpoint_impl
+)
+# donating variant: the engine owns (dist, pred), so each update round can
+# write the new state into the old buffers instead of allocating a pair
+_rank_k_fixpoint_donate = jax.jit(
+    _rank_k_fixpoint_impl, static_argnames=_RK_STATIC, donate_argnums=(0, 1)
+)
 
 
 @partial(jax.jit, static_argnames=("semiring", "use_pred"))
@@ -122,8 +132,7 @@ def _affected_mask(dist, pred, u, v, w_old, *, semiring, use_pred):
     return jax.lax.fori_loop(0, u.shape[0], body, mask0)
 
 
-@partial(jax.jit, static_argnames=("semiring", "with_pred", "max_iters"))
-def _warm_resolve(dist, pred, h, affected, *, semiring, with_pred, max_iters):
+def _warm_resolve_impl(dist, pred, h, affected, *, semiring, with_pred, max_iters):
     """Bounded re-solve: reset affected entries to the direct edge, fold the
     updated cost matrix in (covers concurrent decreases), then re-close with
     early-exit fused squaring.
@@ -161,6 +170,13 @@ def _warm_resolve(dist, pred, h, affected, *, semiring, with_pred, max_iters):
     return d, p, iters
 
 
+_WR_STATIC = ("semiring", "with_pred", "max_iters")
+_warm_resolve = partial(jax.jit, static_argnames=_WR_STATIC)(_warm_resolve_impl)
+_warm_resolve_donate = jax.jit(
+    _warm_resolve_impl, static_argnames=_WR_STATIC, donate_argnums=(0, 1)
+)
+
+
 class DynamicAPSP:
     """Incremental all-pairs engine over one persistent graph.
 
@@ -172,6 +188,15 @@ class DynamicAPSP:
     Parameters mirror ``solve``: ``method`` / ``with_pred`` / ``semiring``
     plus solver kwargs; ``resolve_threshold`` is the affected-pair fraction
     above which a worsening batch goes straight to the full solver.
+
+    ``donate=True`` (default): the engine owns its ``(dist, pred)`` state
+    and donates the old buffers into every incremental update, so a
+    rank-k / warm-resolve round updates in place (one resident state
+    instead of old + new).  Caveat: array handles obtained from ``dist`` /
+    ``pred`` *before* an update are consumed by it — reading them
+    afterwards raises (jax deleted-buffer error) rather than returning
+    stale values; re-read the properties after each update, or construct
+    with ``donate=False`` to keep old snapshots alive.
     """
 
     def __init__(
@@ -182,9 +207,11 @@ class DynamicAPSP:
         with_pred: bool = False,
         semiring: SemiringLike = "tropical",
         resolve_threshold: float = 0.25,
+        donate: bool = True,
         **solve_kw,
     ):
         self._sr = get_semiring(semiring)
+        self._donate = bool(donate)
         self._method = method
         self._with_pred = bool(with_pred)
         self._solve_kw = dict(solve_kw)
@@ -209,7 +236,7 @@ class DynamicAPSP:
     @property
     def h(self) -> np.ndarray:
         """Current cost matrix (copy — the engine owns its state)."""
-        return self._h.copy()
+        return self._h.copy()                 # lint: allow-copy (host-side, owned)
 
     @property
     def dist(self) -> jax.Array:
@@ -311,7 +338,8 @@ class DynamicAPSP:
         v = jnp.asarray(np.concatenate([v, np.zeros(pad, np.int32)]))
         w = jnp.asarray(np.concatenate([w, np.full(pad, sr.zero, np.float32)]))
         max_passes = ceil_log2(min(k, self.n - 1) + 1) + 1
-        self._dist, self._pred, passes = _rank_k_fixpoint(
+        fixpoint = _rank_k_fixpoint_donate if self._donate else _rank_k_fixpoint
+        self._dist, self._pred, passes = fixpoint(
             self._dist, self._pred, u, v, w,
             semiring=sr, with_pred=self._with_pred, max_passes=max_passes,
         )
@@ -349,7 +377,8 @@ class DynamicAPSP:
             info["reason"] = f"affected fraction {frac:.2f} > threshold"
             return info
         h = jnp.asarray(self._h)
-        self._dist, self._pred, iters = _warm_resolve(
+        warm = _warm_resolve_donate if self._donate else _warm_resolve
+        self._dist, self._pred, iters = warm(
             self._dist, self._pred, h, affected,
             semiring=sr, with_pred=self._with_pred,
             max_iters=ceil_log2(self.n) + 1,

@@ -13,9 +13,24 @@ Split D = [[A, B], [C, D]] (A: first half <-> first half, etc.) and:
 default, or any registry instance via ``semiring=``.  Work is O(n^3) like
 blocked FW, but all the work lands in large dense ⊕⊗ GEMMs — the paper's
 "GPU-friendly" scalable algorithm.  Recursion is static (python-level), so
-the whole solver jit-compiles; matrices are padded to a power-of-two times
-``base`` with unreachable phantom nodes (semiring zero off-diagonal, one on
-the diagonal).
+the whole solver jit-compiles.
+
+Padding/split rule: distance-only solves pad to the next multiple of
+``base`` (not the next power of two — an earlier revision's pow-2 rule
+made N=384 solve a padded 512 problem, *slower* than the true N=512 run
+and non-monotone in N; see the ``rkleene_monotonicity`` benchmark row)
+and split each level at the half rounded up to a ``base`` multiple —
+R-Kleene is correct for any split point, so halves need not be equal.
+
+Predecessor solves keep the legacy pow-2 pad + equal halving: the
+*witnesses* a recursion emits depend on its quadrant structure, and the
+pow-2 grid is the one whose per-graph structure embeds as a prefix of any
+larger pow-2 solve — that nesting is what makes a batched pred solve
+bit-equal to the per-graph solves (the PR 1 contract).  Distances are
+structure-independent either way (inert phantom padding).
+
+``donate=True`` donates the input buffer to the jitted solver (in-place
+state; the caller's array becomes unusable).
 
 Every quadrant product goes through the fused ``kernels.ops`` dispatch: the
 two (+) accumulate steps are single fused ``ops.minplus(x, y, a)`` calls,
@@ -36,7 +51,7 @@ from .blocked_fw import closure_block, _closure_block_pred
 from .floyd_warshall import init_pred
 from .semiring import INF, TROPICAL, Semiring, unpad
 
-__all__ = ["rkleene"]
+__all__ = ["rkleene", "split_point", "padded_size"]
 
 
 def _ops():
@@ -45,11 +60,30 @@ def _ops():
     return _kops
 
 
-def _pad_pow2(d: jax.Array, base: int, fill: float, diag) -> Tuple[jax.Array, int]:
-    n = d.shape[0]
+def padded_size(n: int, base: int) -> int:
+    """Padded matrix edge: next multiple of ``base`` (>= base)."""
+    return max(-(-n // base) * base, base)
+
+
+def split_point(n: int, base: int) -> int:
+    """First-half size at one recursion level: half of n rounded *up* to a
+    multiple of ``base`` — keeps every sub-block a base multiple without
+    pow-2 inflation (n is a base multiple after padding)."""
+    return base * ((n // base + 1) // 2)
+
+
+def pow2_size(n: int, base: int) -> int:
+    """Legacy pow-2 padded edge (pred solves: canonical witness grid)."""
     target = base
     while target < n:
         target *= 2
+    return target
+
+
+def _pad_base(d: jax.Array, base: int, fill: float, diag, *,
+              pow2: bool = False) -> Tuple[jax.Array, int]:
+    n = d.shape[0]
+    target = pow2_size(n, base) if pow2 else padded_size(n, base)
     if target == n:
         return d, n
     out = jnp.full((target, target), fill, dtype=d.dtype)
@@ -64,7 +98,7 @@ def _rk(d: jax.Array, base: int, sr: Semiring) -> jax.Array:
     n = d.shape[0]
     if n <= base:
         return closure_block(d, sr)
-    m = n // 2
+    m = split_point(n, base)
     a, b = d[:m, :m], d[:m, m:]
     c, dd = d[m:, :m], d[m:, m:]
 
@@ -85,7 +119,7 @@ def _rk_pred(d, p, base: int, off: int, sr: Semiring):
     n = d.shape[0]
     if n <= base:
         return _closure_block_pred(d, p, sr)
-    m = n // 2
+    m = n // 2          # pow-2 canonical halving (see module docstring)
     a, b = d[:m, :m], d[:m, m:]
     c, dd = d[m:, :m], d[m:, m:]
     pa, pb = p[:m, :m], p[:m, m:]
@@ -113,22 +147,43 @@ def _rk_pred(d, p, base: int, off: int, sr: Semiring):
     )
 
 
-@partial(jax.jit, static_argnames=("base", "with_pred", "semiring"))
+def _rkleene_impl(
+    h: jax.Array,
+    *,
+    base: int,
+    with_pred: bool,
+    semiring: Semiring,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    sr = semiring
+    n = h.shape[0]
+    if not with_pred:
+        d, _ = _pad_base(h, base, sr.zero, sr.one)
+        z = _rk(d, base, sr)
+        return unpad(z, n), None
+    d, _ = _pad_base(h, base, sr.zero, sr.one, pow2=True)
+    p0 = init_pred(h, sr)
+    p, _ = _pad_base(p0.astype(jnp.int32), base, -1,
+                     lambda idx: idx.astype(jnp.int32), pow2=True)
+    z, pz = _rk_pred(d, p, base, 0, sr)
+    return unpad(z, n), unpad(pz, n)
+
+
+_STATIC = ("base", "with_pred", "semiring")
+_rkleene_jit = jax.jit(_rkleene_impl, static_argnames=_STATIC)
+_rkleene_jit_donate = jax.jit(
+    _rkleene_impl, static_argnames=_STATIC, donate_argnums=(0,)
+)
+
+
 def rkleene(
     h: jax.Array,
     *,
     base: int = 64,
     with_pred: bool = False,
     semiring: Semiring = TROPICAL,
+    donate: bool = False,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """R-Kleene APSP.  ``base`` is the leaf size closed with in-block FW."""
-    sr = semiring
-    n = h.shape[0]
-    d, _ = _pad_pow2(h, base, sr.zero, sr.one)
-    if not with_pred:
-        z = _rk(d, base, sr)
-        return unpad(z, n), None
-    p0 = init_pred(h, sr)
-    p, _ = _pad_pow2(p0.astype(jnp.int32), base, -1, lambda idx: idx.astype(jnp.int32))
-    z, pz = _rk_pred(d, p, base, 0, sr)
-    return unpad(z, n), unpad(pz, n)
+    """R-Kleene APSP.  ``base`` is the leaf size closed with in-block FW;
+    ``donate=True`` consumes the input buffer (in-place solve)."""
+    fn = _rkleene_jit_donate if donate else _rkleene_jit
+    return fn(h, base=base, with_pred=with_pred, semiring=semiring)

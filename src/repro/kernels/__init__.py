@@ -4,6 +4,8 @@
                     batched (G, ., .) operands run on one kernel grid)
 ``minplus_pred``  — fused argmin + shared predecessor-derivation rule
 ``fw_block``      — in-VMEM Floyd-Warshall pivot-tile closure
+``fw_round``      — fused multi-stage blocked-FW k-round (one grid dispatch:
+                    pivot closure + col' panel + full fused accumulate)
 
 Each kernel ships a pure-jnp oracle in ``ref.py`` and a chunked runtime XLA
 fallback in ``minplus_xla.py``; ``ops.py`` is the public tuned dispatch
@@ -16,6 +18,8 @@ from . import ops, ref
 from .ops import (
     fw_block,
     fw_block_pred,
+    fw_round,
+    fw_round_pred,
     minplus,
     minplus_argmin,
     minplus_pred,
@@ -24,5 +28,6 @@ from .ops import (
 
 __all__ = [
     "ops", "ref", "minplus", "minplus_argmin", "minplus_pred",
-    "pred_from_kstar", "fw_block", "fw_block_pred",
+    "pred_from_kstar", "fw_block", "fw_block_pred", "fw_round",
+    "fw_round_pred",
 ]

@@ -63,10 +63,13 @@ __all__ = [
     "cache_path",
     "bucket",
     "key_for",
+    "key_for_fw_round",
     "lookup",
+    "lookup_fw_round",
     "candidates",
     "tune",
     "tune_blocked_fw",
+    "tune_fw_round",
     "load_entries",
     "touched_entries",
     "measure",
@@ -75,6 +78,9 @@ __all__ = [
 SCHEMA = 1
 _PALLAS_KEYS = ("bm", "bn", "bk", "kc")
 _XLA_KEYS = ("row_chunk", "k_chunk")
+_FW_ROUND_KEYS = ("block_size", "round_mode")
+_FW_ROUND_BLOCKS = (32, 64, 128, 256)
+_FW_ROUND_MODES = ("fused", "split")
 
 # memoized parse of the cache file, invalidated by mtime
 _memo = {"path": None, "mtime": None, "entries": {}}
@@ -119,6 +125,22 @@ def key_for(
     name = jnp.dtype(dtype).name
     gb = bucket(g) if g else 0
     key = f"{backend}|{name}|g{gb}|m{bucket(m)}|k{bucket(k)}|n{bucket(n)}"
+    if semiring != "tropical":
+        key += f"|s:{semiring}"
+    return key
+
+
+def key_for_fw_round(
+    backend: str, dtype, n: int, g: int = 0, semiring: str = "tropical"
+) -> str:
+    """Cache key of the blocked-FW *round shape* family: winner is a
+    (block_size, round_mode) pair for one matrix edge bucket, distinct from
+    the per-product chunk entries (``key_for``) that the round's inner
+    dispatches keep consulting.  dtype is part of the key — bf16 mixed mode
+    tunes (and persists) separately from f32."""
+    name = jnp.dtype(dtype).name
+    gb = bucket(g) if g else 0
+    key = f"fwround|{backend}|{name}|g{gb}|n{bucket(n)}"
     if semiring != "tropical":
         key += f"|s:{semiring}"
     return key
@@ -200,6 +222,33 @@ def lookup(
             if e and isinstance(e.get("params"), dict):
                 _touched.add(key)
                 return _filter(backend, e["params"])
+    return {}
+
+
+def lookup_fw_round(
+    backend: str, dtype, n: int, g: int = 0, semiring: str = "tropical"
+) -> dict:
+    """Winner (block_size, round_mode) for a blocked-FW solve of edge n, or
+    {} (miss / disabled).  Fallbacks mirror :func:`lookup`: batched -> g=0
+    (the per-round product shapes are what the winner bounds), non-tropical
+    -> tropical same shape (identical memory traffic)."""
+    if mode() == "off":
+        return {}
+    entries = load_entries()
+    srs = (semiring, "tropical") if semiring != "tropical" else ("tropical",)
+    for sq in srs:
+        for gq in ((g, 0) if g else (0,)):
+            key = key_for_fw_round(backend, dtype, n, g=gq, semiring=sq)
+            e = entries.get(key)
+            if e and isinstance(e.get("params"), dict):
+                _touched.add(key)
+                p = e["params"]
+                out = {}
+                if "block_size" in p:
+                    out["block_size"] = int(p["block_size"])
+                if p.get("round_mode") in _FW_ROUND_MODES:
+                    out["round_mode"] = p["round_mode"]
+                return out
     return {}
 
 
@@ -390,3 +439,89 @@ def tune_blocked_fw(
                    semiring=semiring)
         for name, (m, k, nn) in shapes.items()
     }
+
+
+def tune_fw_round(
+    n: int,
+    *,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    force: Optional[bool] = None,
+    semiring: str = "tropical",
+    blocks: Optional[tuple] = None,
+) -> dict:
+    """Sweep the blocked-FW *round* space — block size x fused-vs-split
+    round x dtype — with whole solves on an in-domain matrix, and persist
+    the winning (block_size, round_mode) under the ``fwround|...`` key.
+
+    Per-product chunk winners for each candidate's dominant stage-3 shape
+    are warmed first (``tune`` on miss), so the sweep measures each round
+    shape with the same chunking its dispatch will actually use.  The
+    bf16 space is keyed (and tuned) separately from f32.
+    """
+    from repro.core.semiring import get_semiring
+
+    from . import ops
+
+    b = backend or ops.backend()
+    sr = get_semiring(semiring)
+    md = mode()
+    if md == "off":
+        return {"params": {}, "source": "disabled"}
+    key = key_for_fw_round(b, dtype, n, semiring=sr.name)
+    _touched.add(key)
+    refresh = (md == "force") if force is None else force
+    if not refresh:
+        cached = load_entries().get(key)
+        if cached and isinstance(cached.get("params"), dict):
+            out = dict(cached)
+            out["source"] = "cache"
+            return out
+
+    from repro.core.blocked_fw import blocked_fw  # lazy: no import cycle
+
+    nb = bucket(n)
+    cand_blocks = tuple(
+        bb for bb in (blocks or _FW_ROUND_BLOCKS) if bb <= nb
+    ) or (min(nb, 32),)
+    for bb in cand_blocks:
+        tune(nb, bb, nb, dtype=dtype, backend=b, reps=1, semiring=sr.name)
+    x, _, _ = _inputs(nb, nb, nb, 0, dtype, semiring=sr.name)
+    idx = jnp.arange(nb)
+    h = x.at[idx, idx].set(jnp.asarray(sr.one, dtype))
+
+    cands = [
+        {"block_size": bb, "round_mode": rm}
+        for bb in cand_blocks
+        for rm in _FW_ROUND_MODES
+    ]
+
+    def make(params):
+        return lambda: blocked_fw(
+            h, block_size=params["block_size"],
+            round_mode=params["round_mode"], semiring=sr,
+        )[0]
+
+    # Interleaved sweeps (candidate-major, not rep-major): whole solves are
+    # long enough that container load drifts *within* a sequential sweep and
+    # crowns whichever candidate ran in the calm moment — round-robin puts
+    # every candidate in every weather window and the min tracks the code.
+    fns = [make(p) for p in cands]
+    for fn in fns:
+        jax.block_until_ready(fn())                    # compile/warm all
+    best_by_cand = [float("inf")] * len(cands)
+    for _ in range(max(reps, 2)):
+        for i, fn in enumerate(fns):
+            best_by_cand[i] = min(best_by_cand[i], measure(fn, 1))
+    best_us = min(best_by_cand)
+    best_params = cands[best_by_cand.index(best_us)]
+    entry = {
+        "params": best_params,
+        "us": best_us,
+        "lattice": len(cands),
+        "source": "measured",
+        "measured_at": datetime.datetime.now().isoformat(timespec="seconds"),
+    }
+    _save({key: entry})
+    return entry

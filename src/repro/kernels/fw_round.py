@@ -1,0 +1,131 @@
+"""Multi-stage fused blocked-FW k-round — one Pallas dispatch per round.
+
+The legacy blocked-FW round is four kernel launches (pivot closure, row
+panel, col panel, phase-3 outer update) plus stripe copies; Lund & Smith's
+multi-stage CUDA kernel shows the whole round fits in one launch when each
+output tile redundantly closes the pivot block on-core.  This kernel is
+that scheme on the Pallas grid:
+
+  grid = (G, N/B) row stripes; program (g, i) owns the (B, N) output stripe
+  and receives, via scalar-prefetched pivot index t:
+    * its stripe of D (the ⊕-accumulate operand),
+    * the pivot row panel  D[o:o+B, :]   (same block for every i),
+    * its col-panel tile   D[i·B:(i+1)·B, o:o+B].
+
+  body:  A* = FW(pivot)                      (closure, on-core, f32)
+         col' = col ⊗ A*                     ((B,B) ⊗-product)
+         out  = stripe ⊕ col' ⊗ rowpanel     (fused accumulate)
+
+The stage-3 accumulate re-derives the row/col stripes and the pivot block
+by subsumption (see ``core.blocked_fw``), so the round writes each output
+element exactly once and no ``dynamic_update_slice`` pass exists.  The
+pivot closure and col' product are recomputed per stripe — O(N·B^2) extra
+⊗-work per round, the classic multi-stage trade for launch count and HBM
+round-trips.
+
+Bit-exactness: the candidate sums are identical to the chunked-XLA
+fallback (``minplus_xla.fw_round_xla``) — same closure fold, same
+``col ⊗ A*`` association — and a selective ⊕ over the same candidate set
+is order-insensitive, so the two backends agree bit-for-bit (including
+bf16 mixed mode, which rounds at the same three points: closed pivot,
+col', output).
+
+The predecessor-tracking round is composed from the existing fused-argmin
+kernels in ``kernels.ops`` (it needs int32 witness state this kernel does
+not carry).  Scalar prefetch carries the pivot *tile index* so the solver
+can drive the round from inside a ``fori_loop`` with a traced offset.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.semiring import TROPICAL, Semiring
+
+from .minplus import _minplus_body
+
+__all__ = ["fw_round_pallas"]
+
+
+def _kc_for(b: int, kc: int = 8) -> int:
+    """Largest in-tile k chunk from the vreg-friendly ladder dividing B."""
+    while kc > 1 and b % kc:
+        kc //= 2
+    return max(kc, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "interpret", "semiring")
+)
+def fw_round_pallas(
+    d: jax.Array,
+    o: jax.Array,
+    *,
+    block_size: int,
+    interpret: bool = False,
+    semiring: Semiring = TROPICAL,
+) -> jax.Array:
+    """One fused blocked-FW round on a (N, N) matrix or (G, N, N) stack.
+
+    ``o`` is the (traced) element offset of the pivot block; N must be a
+    multiple of ``block_size`` (the solver pads).  Returns the full updated
+    matrix — a single ``pallas_call``.
+    """
+    sr = semiring
+    b = block_size
+    batched = d.ndim == 3
+    dd = d if batched else d[None]
+    g, n, n2 = dd.shape
+    assert n == n2 and n % b == 0, (d.shape, b)
+    kc = _kc_for(b)
+    storage = d.dtype
+    cd = jnp.float32 if storage == jnp.bfloat16 else storage
+
+    def kern(t_ref, acc_ref, rowp_ref, colt_ref, o_ref):
+        rowpan = rowp_ref[0]                           # (b, n) pivot rows
+        colpan = colt_ref[0]                           # (b, b) col-panel tile
+        oo = t_ref[0] * b                              # pivot element offset
+        pivot = jax.lax.dynamic_slice(rowpan, (0, oo), (b, b)).astype(cd)
+
+        def piv_step(k, cur):
+            via = sr.mul(
+                jax.lax.dynamic_slice(cur, (0, k), (b, 1)),
+                jax.lax.dynamic_slice(cur, (k, 0), (1, b)),
+            )
+            return sr.add(cur, via)
+
+        pivot = jax.lax.fori_loop(0, b, piv_step, pivot).astype(storage)
+        colp, _ = _minplus_body(
+            colpan.astype(cd), pivot.astype(cd), kc, 0,
+            jnp.full((b, b), sr.zero, cd), None, sr,
+        )
+        colp = colp.astype(storage)
+        out, _ = _minplus_body(
+            colp.astype(cd), rowpan.astype(cd), kc, 0,
+            acc_ref[0].astype(cd), None, sr,
+        )
+        o_ref[0] = out.astype(storage)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g, n // b),
+        in_specs=[
+            pl.BlockSpec((1, b, n), lambda gi, i, t: (gi, i, 0)),
+            pl.BlockSpec((1, b, n), lambda gi, i, t: (gi, t[0], 0)),
+            pl.BlockSpec((1, b, b), lambda gi, i, t: (gi, i, t[0])),
+        ],
+        out_specs=pl.BlockSpec((1, b, n), lambda gi, i, t: (gi, i, 0)),
+    )
+    t = jnp.reshape(o // b, (1,)).astype(jnp.int32)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, n, n), storage),
+        interpret=interpret,
+    )(t, dd, dd, dd)
+    return out if batched else out[0]

@@ -33,6 +33,23 @@ Chunk sizes: explicit arguments win; otherwise a fixed heuristic applies
 ``semiring.auto_row_chunk`` otherwise).  The autotuner
 (``repro.kernels.autotune``) overrides both per shape bucket via
 ``repro.kernels.ops`` dispatch.
+
+Mixed precision: ``bfloat16`` operands select the mixed mode — the ⊕⊗
+arithmetic runs in float32 (operand chunks are upcast as they stream
+through the fold, the big accumulate operand ``a`` stays bf16-resident and
+is upcast one row block at a time) and each output row block is rounded
+back to bf16 exactly once per dispatch.  Storage traffic halves; the
+arithmetic is full f32.  The semiring validity guard (tropical-only until
+validated) lives in ``repro.kernels.ops`` — this module computes whatever
+it is handed.
+
+``fw_round_xla`` is the chunked-XLA fallback for the multi-stage fused
+blocked-FW k-round (see ``repro.kernels.fw_round`` for the Pallas kernel
+and ``repro.core.blocked_fw`` for the algebraic derivation): pivot closure
+(always f32 accumulation), one ``col' = col ⊗ pivot*`` panel product, and
+one full-matrix fused accumulate ``D ⊕ col' ⊗ row`` that re-derives the
+row/col stripes and the pivot block by subsumption — one dispatch from the
+solver's perspective instead of the legacy 4-product round.
 """
 
 from __future__ import annotations
@@ -47,7 +64,15 @@ from repro.core.semiring import TROPICAL, Semiring
 
 INF = jnp.inf
 
-__all__ = ["minplus_xla", "minplus_argmin_xla"]
+__all__ = ["minplus_xla", "minplus_argmin_xla", "fw_round_xla"]
+
+
+def _compute_dtype(*arrs):
+    """f32 when any operand is bf16 (mixed-precision mode), else passthrough."""
+    for a in arrs:
+        if a is not None and a.dtype == jnp.bfloat16:
+            return jnp.float32
+    return arrs[0].dtype
 
 
 def _auto(m: int, n: int, k: int, row_chunk, k_chunk) -> Tuple[int, int]:
@@ -103,11 +128,16 @@ def minplus_xla(
     if a is not None:
         assert a.shape == (m, n), (a.shape, m, n)
     rc, kc = _auto(m, n, k, row_chunk, k_chunk)
-    yt = y.T
+    out_dtype = x.dtype
+    cd = _compute_dtype(x, y, a)
+    x = x.astype(cd)
+    yt = y.T.astype(cd)
 
     if not kc and rc >= m:
         z = sr.reduce(sr.mul(x[:, None, :], yt[None, :, :]), axis=-1)
-        return z if a is None else sr.add(a, z)
+        if a is not None:
+            z = sr.add(a.astype(cd), z)
+        return z.astype(out_dtype)
 
     rc = min(rc, m)
     xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc, sr.zero)
@@ -125,25 +155,30 @@ def minplus_xla(
 
         if a is None:
             def row(carry, xi):
-                return carry, fold(xi, jnp.full((rc, n), sr.zero, x.dtype))
+                z = fold(xi, jnp.full((rc, n), sr.zero, cd))
+                return carry, z.astype(out_dtype)
 
             _, zb = jax.lax.scan(row, None, xb)
         else:
             def row(carry, inp):
-                return carry, fold(*inp)
+                xi, ai = inp
+                return carry, fold(xi, ai.astype(cd)).astype(out_dtype)
 
             _, zb = jax.lax.scan(row, None, (xb, ab))
     elif a is None:
         def row(carry, xi):
-            return carry, sr.reduce(sr.mul(xi[:, None, :], ytp[None, :, :]), axis=-1)
+            z = sr.reduce(sr.mul(xi[:, None, :], ytp[None, :, :]), axis=-1)
+            return carry, z.astype(out_dtype)
 
         _, zb = jax.lax.scan(row, None, xb)
     else:
         def row(carry, inp):
             xi, ai = inp
-            return carry, sr.add(
-                ai, sr.reduce(sr.mul(xi[:, None, :], ytp[None, :, :]), axis=-1)
+            z = sr.add(
+                ai.astype(cd),
+                sr.reduce(sr.mul(xi[:, None, :], ytp[None, :, :]), axis=-1),
             )
+            return carry, z.astype(out_dtype)
 
         _, zb = jax.lax.scan(row, None, (xb, ab))
     return zb.reshape(-1, n)[:m]
@@ -172,7 +207,10 @@ def minplus_argmin_xla(
     if a is not None:
         assert a.shape == (m, n), (a.shape, m, n)
     rc, kc = _auto(m, n, k, row_chunk, k_chunk)
-    yt = y.T
+    out_dtype = x.dtype
+    cd = _compute_dtype(x, y, a)
+    x = x.astype(cd)
+    yt = y.T.astype(cd)
     rc = min(rc, m)
     xb, ab, kp = _row_blocks(x, a, m, k, n, rc, kc, sr.zero)
     ytp = jnp.pad(yt, ((0, 0), (0, kp - k)), constant_values=sr.zero)
@@ -204,23 +242,27 @@ def minplus_argmin_xla(
 
         if accumulate:
             def row(carry, inp):
-                return carry, fold(*inp)
+                xi, ai = inp
+                z, ks = fold(xi, ai.astype(cd))
+                return carry, (z.astype(out_dtype), ks)
 
             _, (zb, kb) = jax.lax.scan(row, None, (xb, ab))
         else:
             def row(carry, xi):
-                return carry, fold(xi, jnp.full((rc, n), sr.zero, x.dtype))
+                z, ks = fold(xi, jnp.full((rc, n), sr.zero, cd))
+                return carry, (z.astype(out_dtype), ks)
 
             _, (zb, kb) = jax.lax.scan(row, None, xb)
     elif accumulate:
         def row(carry, inp):
             xi, ai = inp
+            ai = ai.astype(cd)
             l = sr.mul(xi[:, None, :], ytp[None, :, :])
             z = sr.reduce(l, axis=-1)
             ks = sr.argreduce(l, axis=-1).astype(jnp.int32)
             better = sr.better(z, ai)
             return carry, (
-                jnp.where(better, z, ai),
+                jnp.where(better, z, ai).astype(out_dtype),
                 jnp.where(better, ks, jnp.int32(-1)),
             )
 
@@ -229,9 +271,76 @@ def minplus_argmin_xla(
         def row(carry, xi):
             l = sr.mul(xi[:, None, :], ytp[None, :, :])
             return carry, (
-                sr.reduce(l, axis=-1),
+                sr.reduce(l, axis=-1).astype(out_dtype),
                 sr.argreduce(l, axis=-1).astype(jnp.int32),
             )
 
         _, (zb, kb) = jax.lax.scan(row, None, xb)
     return finish(zb.reshape(-1, n)[:m], kb.reshape(-1, n)[:m])
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "block_size", "row_chunk", "k_chunk", "panel_row_chunk",
+        "panel_k_chunk", "semiring",
+    ),
+)
+def fw_round_xla(
+    d: jax.Array,
+    o: jax.Array,
+    *,
+    block_size: int,
+    row_chunk: Optional[int] = None,
+    k_chunk: Optional[int] = None,
+    panel_row_chunk: Optional[int] = None,
+    panel_k_chunk: Optional[int] = None,
+    semiring: Semiring = TROPICAL,
+) -> jax.Array:
+    """One fused multi-stage blocked-FW k-round on the full matrix.
+
+    ``o`` is the (traced) global offset of pivot block t; ``block_size`` the
+    tile edge B.  Three stages, one dispatch from the solver's perspective:
+
+      1. pivot closure      A* = FW(D[o:o+B, o:o+B])   (f32 accumulation)
+      2. col panel          col' = D[:, o:o+B] ⊗ A*
+      3. fused full update  D' = D ⊕ col' ⊗ D[o:o+B, :]
+
+    Stage 3's accumulate re-derives the row stripe (A ⊗ A* subsumption), the
+    col stripe (col ⊗ (1 ⊕ A*A) = col ⊗ A*), and the pivot block
+    (A ⊕ A A*A ⊕ 1 = A*) — see ``core.blocked_fw`` — so no
+    ``dynamic_update_slice`` stripe writes and no separate row-panel product
+    are needed.  Versus the legacy 4-product round this removes one
+    (B,B)x(B,N) product and two full-panel copies per round; the values are
+    the ⊕ over the same path set (bit-exact under exact — e.g. integer —
+    edge weights, where every candidate sum is exact in f32).
+
+    ``row_chunk``/``k_chunk`` tune the dominant stage-3 (N,B)x(B,N)
+    accumulate; ``panel_row_chunk``/``panel_k_chunk`` the stage-2 panel
+    product.  bf16 storage triggers the mixed-precision mode of
+    :func:`minplus_xla` (f32 arithmetic, one bf16 round per stage).
+    """
+    sr = semiring
+    n = d.shape[-1]
+    b = block_size
+    cd = _compute_dtype(d)
+    pivot = jax.lax.dynamic_slice(d, (o, o), (b, b)).astype(cd)
+
+    def piv_step(k, dd):
+        via = sr.mul(
+            jax.lax.dynamic_slice(dd, (0, k), (b, 1)),
+            jax.lax.dynamic_slice(dd, (k, 0), (1, b)),
+        )
+        return sr.add(dd, via)
+
+    pivot = jax.lax.fori_loop(0, b, piv_step, pivot)
+    col = jax.lax.dynamic_slice(d, (0, o), (n, b))
+    # plain product subsumes the old panel: A* has one on its diagonal
+    colp = minplus_xla(
+        col, pivot.astype(d.dtype), row_chunk=panel_row_chunk,
+        k_chunk=panel_k_chunk, semiring=sr,
+    )
+    row = jax.lax.dynamic_slice(d, (o, 0), (b, n))
+    return minplus_xla(
+        colp, row, d, row_chunk=row_chunk, k_chunk=k_chunk, semiring=sr
+    )

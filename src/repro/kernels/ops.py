@@ -56,7 +56,7 @@ from repro.core.semiring import Semiring, SemiringLike, get_semiring
 from . import ref
 from .fw_block import fw_block_pallas, fw_block_pred_pallas
 from .minplus import minplus_argmin_pallas, minplus_pallas
-from .minplus_xla import minplus_argmin_xla, minplus_xla
+from .minplus_xla import fw_round_xla, minplus_argmin_xla, minplus_xla
 
 __all__ = [
     "minplus",
@@ -66,8 +66,17 @@ __all__ = [
     "rank_k_update",
     "fw_block",
     "fw_block_pred",
+    "fw_round",
+    "fw_round_pred",
     "backend",
+    "MIXED_PRECISION_SEMIRINGS",
 ]
+
+# Semirings validated for bf16 storage with f32 accumulation (the
+# mixed-precision mode).  Tropical-only until the differential oracle has
+# pinned an error contract for the others — see COMPAT.md §Precision &
+# memory for the tropical bound.
+MIXED_PRECISION_SEMIRINGS = ("tropical",)
 
 
 def backend() -> str:
@@ -75,6 +84,22 @@ def backend() -> str:
     if env in ("interpret", "xla", "pallas"):
         return env
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _check_mixed(sr: Semiring, *arrays) -> bool:
+    """True when any operand is bf16 (mixed mode); rejects unvalidated
+    semirings — the one guard every entry point shares."""
+    mixed = any(
+        a is not None and a.dtype == jnp.bfloat16 for a in arrays
+    )
+    if mixed and sr.name not in MIXED_PRECISION_SEMIRINGS:
+        raise ValueError(
+            f"bf16 mixed-precision min-plus is only validated for semirings "
+            f"{list(MIXED_PRECISION_SEMIRINGS)}; semiring {sr.name!r} must "
+            f"stay in float32 until its error contract is established "
+            f"(COMPAT.md §Precision & memory)"
+        )
+    return mixed
 
 
 def _dims(x, y):
@@ -113,6 +138,7 @@ def minplus(
     """
     sr = get_semiring(semiring)
     b = backend()
+    mixed = _check_mixed(sr, x, y, a)
     kw = _tuned(b, x, y, block_kw, sr)
     if b == "xla":
         rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
@@ -123,6 +149,17 @@ def minplus(
                 )
             )(x, y, a)
         return minplus_xla(x, y, a, row_chunk=rc, k_chunk=kc, semiring=sr)
+    if mixed:
+        # pallas kernel is dtype-generic; run it in f32 and round once —
+        # elementwise identical to the XLA fallback's per-row rounding
+        out = x.dtype
+        x, y = x.astype(jnp.float32), y.astype(jnp.float32)
+        a = None if a is None else a.astype(jnp.float32)
+        z = minplus_pallas(
+            x, y, a, accumulate=a is not None, interpret=(b == "interpret"),
+            semiring=sr, **kw,
+        )
+        return z.astype(out)
     return minplus_pallas(
         x, y, a, accumulate=a is not None, interpret=(b == "interpret"),
         semiring=sr, **kw,
@@ -140,6 +177,7 @@ def minplus_argmin(
     """(Z, K*) with fused global-k witness (see ref for tie/-1 semantics)."""
     sr = get_semiring(semiring)
     b = backend()
+    mixed = _check_mixed(sr, x, y, a)
     kw = _tuned(b, x, y, block_kw, sr)
     if b == "xla":
         rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
@@ -150,6 +188,15 @@ def minplus_argmin(
                 )
             )(x, y, a)
         return minplus_argmin_xla(x, y, a, row_chunk=rc, k_chunk=kc, semiring=sr)
+    if mixed:
+        out = x.dtype
+        x, y = x.astype(jnp.float32), y.astype(jnp.float32)
+        a = None if a is None else a.astype(jnp.float32)
+        z, ks = minplus_argmin_pallas(
+            x, y, a, accumulate=a is not None, interpret=(b == "interpret"),
+            semiring=sr, **kw,
+        )
+        return z.astype(out), ks
     return minplus_argmin_pallas(
         x, y, a, accumulate=a is not None, interpret=(b == "interpret"),
         semiring=sr, **kw,
@@ -274,14 +321,23 @@ def rank_k_update(
 
 
 def fw_block(d: jax.Array, *, semiring: SemiringLike = "tropical") -> jax.Array:
-    """In-VMEM FW closure of a (B,B) tile or (T,B,B) batch of tiles."""
+    """In-VMEM FW closure of a (B,B) tile or (T,B,B) batch of tiles.
+
+    bf16 tiles are closed with f32 accumulation (the pivot chain is the
+    most rounding-sensitive piece of a round) and rounded once on exit.
+    """
     sr = get_semiring(semiring)
     b = backend()
+    out = d.dtype
+    if _check_mixed(sr, d):
+        d = d.astype(jnp.float32)
     if b == "xla":
         if d.ndim == 3:
-            return jax.vmap(lambda dd: ref.fw_block_ref(dd, sr))(d)
-        return ref.fw_block_ref(d, sr)
-    return fw_block_pallas(d, interpret=(b == "interpret"), semiring=sr)
+            return jax.vmap(lambda dd: ref.fw_block_ref(dd, sr))(d).astype(out)
+        return ref.fw_block_ref(d, sr).astype(out)
+    return fw_block_pallas(
+        d, interpret=(b == "interpret"), semiring=sr
+    ).astype(out)
 
 
 def fw_block_pred(
@@ -289,8 +345,115 @@ def fw_block_pred(
 ) -> Tuple[jax.Array, jax.Array]:
     sr = get_semiring(semiring)
     b = backend()
+    out = d.dtype
+    if _check_mixed(sr, d):
+        d = d.astype(jnp.float32)
     if b == "xla":
         if d.ndim == 3:
-            return jax.vmap(lambda dd, pp: ref.fw_block_pred_ref(dd, pp, sr))(d, p)
-        return ref.fw_block_pred_ref(d, p, sr)
-    return fw_block_pred_pallas(d, p, interpret=(b == "interpret"), semiring=sr)
+            z, pz = jax.vmap(lambda dd, pp: ref.fw_block_pred_ref(dd, pp, sr))(d, p)
+        else:
+            z, pz = ref.fw_block_pred_ref(d, p, sr)
+    else:
+        z, pz = fw_block_pred_pallas(
+            d, p, interpret=(b == "interpret"), semiring=sr
+        )
+    return z.astype(out), pz
+
+
+def fw_round(
+    d: jax.Array,
+    o,
+    *,
+    block_size: int,
+    semiring: SemiringLike = "tropical",
+    **block_kw,
+) -> jax.Array:
+    """One fused multi-stage blocked-FW k-round over the full matrix.
+
+    ``o`` is the (traced) element offset of pivot block t = o // B.  The
+    three stages (pivot closure, col' = col ⊗ A*, fused full accumulate
+    D ⊕ col' ⊗ row) run as a single Pallas grid dispatch on the
+    pallas/interpret backends (``kernels.fw_round``) and as one jitted
+    chunked-XLA program on the fallback (``minplus_xla.fw_round_xla``) —
+    replacing the legacy 4-product round.  Accepts (N, N) or batched
+    (G, N, N) state; bf16 storage selects the mixed-precision mode
+    (f32 arithmetic, tropical-only).  ``block_kw`` overrides the stage-3
+    chunking; otherwise the autotune cache is consulted for the dominant
+    (N, B) x (B, N) accumulate shape.
+    """
+    sr = get_semiring(semiring)
+    _check_mixed(sr, d)
+    b = backend()
+    if b == "xla":
+        n = d.shape[-1]
+        g = d.shape[0] if d.ndim == 3 else 0
+        if not block_kw:
+            from . import autotune
+
+            block_kw = autotune.lookup(
+                b, d.dtype, n, block_size, n, g=g, semiring=sr.name
+            )
+        rc, kc = block_kw.get("row_chunk"), block_kw.get("k_chunk")
+        if d.ndim == 3:
+            return jax.vmap(
+                lambda dd: fw_round_xla(
+                    dd, o, block_size=block_size, row_chunk=rc, k_chunk=kc,
+                    semiring=sr,
+                )
+            )(d)
+        return fw_round_xla(
+            d, o, block_size=block_size, row_chunk=rc, k_chunk=kc, semiring=sr
+        )
+    from .fw_round import fw_round_pallas
+
+    return fw_round_pallas(
+        d, o, block_size=block_size, interpret=(b == "interpret"), semiring=sr
+    )
+
+
+def fw_round_pred(
+    d: jax.Array,
+    p: jax.Array,
+    o,
+    *,
+    block_size: int,
+    semiring: SemiringLike = "tropical",
+    **block_kw,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused multi-stage round with predecessor propagation.
+
+    Same three stages as :func:`fw_round`, composed from the fused-argmin
+    primitives (the witness state k* rides each stage): pivot closure via
+    :func:`fw_block_pred`, col' via one accumulate :func:`minplus_pred`,
+    and the full update via one accumulate :func:`minplus_pred` — the
+    stripe/pivot subsumption argument carries over because the pred rule
+    only reads the winning k*.  Values are identical to :func:`fw_round`
+    (the col' accumulate's ``col ⊕ .`` candidates are already inside the
+    plain product's candidate set: A* carries ``one`` on its diagonal).
+    """
+    sr = get_semiring(semiring)
+    _check_mixed(sr, d)
+    bsz = block_size
+    n = d.shape[-1]
+    if d.ndim == 3:
+        g = d.shape[0]
+
+        def sl(arr, starts, sizes):
+            return jax.lax.dynamic_slice(arr, (0,) + starts, (g,) + sizes)
+    else:
+        sl = jax.lax.dynamic_slice
+    pivot = sl(d, (o, o), (bsz, bsz))
+    ppivot = sl(p, (o, o), (bsz, bsz))
+    pivot, ppivot = fw_block_pred(pivot, ppivot, semiring=sr)
+    col = sl(d, (0, o), (n, bsz))
+    pcol = sl(p, (0, o), (n, bsz))
+    colp, pcolp = minplus_pred(
+        col, pivot, pcol, ppivot, a=col, pa=pcol, k_offset=o, j_offset=o,
+        semiring=sr, **block_kw,
+    )
+    row = sl(d, (o, 0), (bsz, n))
+    prow = sl(p, (o, 0), (bsz, n))
+    return minplus_pred(
+        colp, row, pcolp, prow, a=d, pa=p, k_offset=o, j_offset=0,
+        semiring=sr, **block_kw,
+    )

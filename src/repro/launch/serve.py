@@ -177,25 +177,40 @@ def serve_apsp(
         t_tune = time.time()
         src = "nothing to tune"
         if method == "blocked_fw":
+            # round-shape winner (block size x fused-vs-split) first — it
+            # decides which panel shapes the dispatch will look up at all
+            e = autotune.tune_fw_round(n_max, reps=1, semiring=semiring)
+            b = e.get("params", {}).get("block_size", 256)
             tuned = autotune.tune_blocked_fw(
-                n_max, 256, g=batch, reps=1, semiring=semiring
+                n_max, b, g=batch, reps=1, semiring=semiring
             )
-            src = {k: e.get("source") for k, e in tuned.items()}
+            src = {"fw_round": e.get("source"),
+                   **{k: e2.get("source") for k, e2 in tuned.items()}}
         elif method in ("squaring", "squaring_3d"):
             e = autotune.tune(n_max, n_max, n_max, reps=1, semiring=semiring)
             src = e.get("source")
         elif method == "rkleene":
-            s = 64                            # rkleene pads to pow2 x base=64
-            while s < n_max:
-                s *= 2
-            s //= 2                           # largest quadrant product edge
+            # quadrant-product edges are the *children* of each split along
+            # the multiple-of-base chain — the root edge itself is never a
+            # product operand, so don't pay its (largest) tune sweep
+            from repro.core.rkleene import padded_size, split_point
+
             srcs = []
-            while s >= 64:
+            seen = set()
+            root = padded_size(n_max, 64)
+            stack = [split_point(root, 64), root - split_point(root, 64)] \
+                if root > 64 else []
+            while stack:
+                s = stack.pop()
+                if s <= 64 or s in seen:
+                    continue
+                seen.add(s)
                 srcs.append(
                     autotune.tune(s, s, s, reps=1, semiring=semiring)
                     .get("source")
                 )
-                s //= 2
+                m = split_point(s, 64)
+                stack += [m, s - m]
             src = srcs or "leaf-only (closure kernel)"
         print(f"[autotune] dispatch warm for n_max={n_max} "
               f"({src}, {time.time()-t_tune:.2f}s)")

@@ -80,6 +80,31 @@ def generate(rng: np.random.Generator, n: int, semiring: str,
     return out
 
 
+def max_rel_err(got: np.ndarray, ref: np.ndarray) -> float:
+    """Max relative error over the finite, non-zero entries of ``ref`` —
+    the metric of the mixed-precision (bf16) error contract.  Entries that
+    are non-finite in either operand must agree exactly (inf stays inf in
+    bf16); a disagreement returns inf."""
+    got = np.asarray(got, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if not np.array_equal(np.isfinite(got), np.isfinite(ref)):
+        return float("inf")
+    mask = np.isfinite(ref) & (ref != 0)
+    if not mask.any():
+        return 0.0
+    return float(np.max(np.abs(got[mask] - ref[mask]) / np.abs(ref[mask])))
+
+
+def assert_bit_equal(got, ref, msg: str = "") -> None:
+    """Bit-exactness assert (NaN-safe) shared by the donation and
+    fused-round differential tests."""
+    got, ref = np.asarray(got), np.asarray(ref)
+    assert got.dtype == ref.dtype and got.shape == ref.shape, (
+        msg, got.dtype, ref.dtype, got.shape, ref.shape
+    )
+    assert np.array_equal(got, ref, equal_nan=True), msg
+
+
 def nx_tropical_closure(h: np.ndarray) -> Optional[np.ndarray]:
     """Independent shortest-path oracle via NetworkX Dijkstra, or None when
     networkx is not importable.  Tropical domain only (nonnegative costs)."""

@@ -140,3 +140,37 @@ def test_candidates_respect_shape(at_cache):
     assert any(c.get("k_chunk") == 0 for c in lattice) # single-pass present
     for c in autotune.candidates("pallas", 1024, 128, 1024):
         assert c["bk"] % c["kc"] == 0
+
+
+def test_fw_round_tune_roundtrip_and_dispatch(at_cache):
+    """tune_fw_round persists a (block_size, round_mode) winner under the
+    fwround| key family; lookup_fw_round serves it; blocked_fw with
+    unspecified block/mode resolves to it."""
+    e1 = autotune.tune_fw_round(48, backend="xla", reps=1, blocks=(16, 32))
+    assert e1["source"] == "measured"
+    assert e1["params"]["block_size"] in (16, 32)
+    assert e1["params"]["round_mode"] in ("fused", "split")
+    e2 = autotune.tune_fw_round(48, backend="xla", reps=1, blocks=(16, 32))
+    assert e2["source"] == "cache" and e2["params"] == e1["params"]
+
+    got = autotune.lookup_fw_round("xla", jnp.float32, 40)   # same bucket (64)
+    assert got == e1["params"]
+    assert autotune.lookup_fw_round("xla", jnp.float32, 400) == {}
+    # batched + non-tropical lookups fall back like the product cache
+    assert autotune.lookup_fw_round("xla", jnp.float32, 40, g=4) == got
+    assert autotune.lookup_fw_round(
+        "xla", jnp.float32, 40, semiring="bottleneck") == got
+
+    keys = set(json.loads(at_cache.read_text())["entries"])
+    assert autotune.key_for_fw_round("xla", jnp.float32, 48) in keys
+
+    # the solver resolves unspecified block/mode to the persisted winner
+    from repro.core.blocked_fw import _resolve_round
+    from repro.core.semiring import TROPICAL
+
+    h = jnp.zeros((40, 40), jnp.float32)
+    b, rm = _resolve_round(h, None, None, TROPICAL)
+    assert b == e1["params"]["block_size"] and rm == e1["params"]["round_mode"]
+    # explicit args always win
+    b, rm = _resolve_round(h, 8, "split", TROPICAL)
+    assert (b, rm) == (8, "split")

@@ -1,0 +1,63 @@
+"""Unit tests for the bench regression gate's comparison logic (the smoke
+runs themselves are exercised by `make bench-check`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+
+import bench_compare  # noqa: E402
+
+
+def _payload(ms_by_method):
+    return {"apsp": {m: {n: {"ms": ms, "graphs_per_s": 1e3 / ms}
+                         for n, ms in by_n.items()}
+                     for m, by_n in ms_by_method.items()}}
+
+
+def test_compare_median_and_threshold():
+    baseline = _payload({"blocked_fw": {"128": 10.0, "64": 2.0}})
+    # median of (9, 50, 11) = 11 -> 1.1x: fine at 4x
+    fresh = [_payload({"blocked_fw": {"128": ms, "64": 2.0}})
+             for ms in (9.0, 50.0, 11.0)]
+    assert bench_compare.compare(baseline, fresh, threshold=4.0) == []
+    # all three runs slow -> median 50 -> 5x: regression
+    fresh = [_payload({"blocked_fw": {"128": 50.0, "64": 2.0}})] * 3
+    regs = bench_compare.compare(baseline, fresh, threshold=4.0)
+    assert [(r[0], r[1]) for r in regs] == [("blocked_fw", "128")]
+    assert regs[0][4] == 5.0
+
+
+def test_compare_skips_missing_series():
+    baseline = _payload({"blocked_fw": {"128": 10.0},
+                         "retired_method": {"128": 1.0}})
+    fresh = [_payload({"blocked_fw": {"128": 12.0},
+                       "new_method": {"128": 99.0}})]
+    # retired baseline series and new fresh series both skip cleanly
+    assert bench_compare.compare(baseline, fresh, threshold=4.0) == []
+
+
+def test_method_times_flattening():
+    t = bench_compare._method_times(
+        _payload({"rkleene": {"64": 1.5, "128": 3.0}})
+    )
+    assert t == {("rkleene", "64"): 1.5, ("rkleene", "128"): 3.0}
+    assert bench_compare._method_times({}) == {}
+
+
+def test_rkleene_monotone_check_skips_equal_padded_sizes():
+    """N=32 vs N=64 both pad to one base-64 leaf: identical work, so an
+    inversion between them is jitter, not a pad-rule regression — the gate
+    must not fire (while a real N=384 > N=512 inversion must)."""
+    from benchmarks.run import _check_rkleene_monotone
+
+    def rows(pairs):
+        return [{"bench": "fig10_apsp_runtime", "n": n, "us_rkleene_accel": t}
+                for n, t in pairs]
+
+    row = _check_rkleene_monotone(rows([(32, 2.0), (64, 0.5), (128, 3.0)]))
+    assert row["ok"]                       # 32->64 inversion skipped
+    import pytest
+
+    with pytest.raises(AssertionError):
+        _check_rkleene_monotone(rows([(384, 136.0), (512, 96.0)]))

@@ -1,0 +1,119 @@
+"""Mixed-precision (bf16 storage, f32 accumulation) contract tests.
+
+The documented contract (COMPAT.md §Precision & memory): for the tropical
+semiring, a bf16 solve's distances have max relative error <= 2% against
+the f32 oracle on graphgen corpora — bf16 quantization is 2^-9 per
+rounding, the arithmetic stays f32, and each value is re-rounded at most
+once per round, so the bound has an order of magnitude of slack.
+Non-tropical semirings must *reject* bf16 until validated.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from oracle import max_rel_err, np_closure
+
+from repro.core import solve
+from repro.core.graphgen import generate_np
+from repro.kernels import autotune, ops
+
+CONTRACT_MAX_REL_ERR = 0.02
+
+
+def _corpus(rng):
+    """Sparse graphs -> long paths -> distances well past bf16's exact-
+    integer range (256), so quantization error is actually exercised."""
+    return [generate_np(rng, n, rho=rho).h
+            for n, rho in ((64, 10.0), (96, 8.0), (128, 12.0))]
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("blocked_fw", {"block_size": 32}),
+    ("blocked_fw", {"block_size": 32, "round_mode": "split"}),
+    ("rkleene", {"base": 32}),
+    ("squaring", {}),
+])
+def test_bf16_error_contract_vs_f32_oracle(method, kw, rng):
+    worst = 0.0
+    exercised = False
+    for h in _corpus(rng):
+        ref = np_closure(h).astype(np.float32)
+        r = solve(h, method=method, dtype=jnp.bfloat16, **kw)
+        assert r.dist.dtype == jnp.bfloat16
+        got = np.asarray(r.dist.astype(jnp.float32))
+        err = max_rel_err(got, ref)
+        worst = max(worst, err)
+        exercised |= bool(np.isfinite(ref).all() or True) and err > 0
+        assert err <= CONTRACT_MAX_REL_ERR, (method, err)
+    # the corpus must actually exercise quantization, or the bound is vacuous
+    assert worst > 0.0, "corpus produced only bf16-exact distances"
+
+
+def test_bf16_pred_mode(rng):
+    h = generate_np(rng, 64, rho=10.0).h
+    ref = np_closure(h).astype(np.float32)
+    r = solve(h, method="blocked_fw", block_size=32, dtype=jnp.bfloat16,
+              with_pred=True)
+    err = max_rel_err(np.asarray(r.dist.astype(jnp.float32)), ref)
+    assert err <= CONTRACT_MAX_REL_ERR
+    assert r.pred is not None and r.pred.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("semiring", ["bottleneck", "reliability", "boolean"])
+def test_non_tropical_rejects_bf16(semiring, rng):
+    h = generate_np(rng, 32).h
+    with pytest.raises(ValueError, match="mixed-precision"):
+        solve(h, method="blocked_fw", block_size=16, dtype=jnp.bfloat16,
+              semiring=semiring)
+    x = jnp.asarray(h, jnp.bfloat16)
+    with pytest.raises(ValueError, match="mixed-precision"):
+        ops.minplus(x, x, semiring=semiring)
+
+
+def test_bf16_ops_level_mixed_compute(rng):
+    """ops.minplus on bf16 operands: f32 arithmetic, bf16 out — the result
+    equals computing in f32 on the bf16-quantized inputs and rounding once
+    (NOT bf16 arithmetic, which would compound error per k-chunk)."""
+    x = jnp.asarray(rng.uniform(1, 1000, (40, 56)), jnp.bfloat16)
+    y = jnp.asarray(rng.uniform(1, 1000, (56, 33)), jnp.bfloat16)
+    z = ops.minplus(x, y)
+    assert z.dtype == jnp.bfloat16
+    xf = np.asarray(x.astype(jnp.float32))
+    yf = np.asarray(y.astype(jnp.float32))
+    ref = jnp.asarray(
+        np.min(xf[:, :, None] + yf[None, :, :], axis=1)
+    ).astype(jnp.bfloat16)
+    assert np.array_equal(np.asarray(z.astype(jnp.float32)),
+                          np.asarray(ref.astype(jnp.float32)))
+
+
+def test_autotune_keys_segment_by_dtype():
+    k32 = autotune.key_for("xla", jnp.float32, 512, 128, 512)
+    kbf = autotune.key_for("xla", jnp.bfloat16, 512, 128, 512)
+    assert "float32" in k32 and "bfloat16" in kbf and k32 != kbf
+    r32 = autotune.key_for_fw_round("xla", jnp.float32, 512)
+    rbf = autotune.key_for_fw_round("xla", jnp.bfloat16, 512)
+    assert r32.startswith("fwround|") and r32 != rbf
+    assert "bfloat16" in rbf
+
+
+def test_bf16_batch_solve(rng):
+    from repro.core import solve_batch
+
+    mats = [generate_np(rng, n, rho=10.0).h for n in (40, 56)]
+    r = solve_batch(mats, method="blocked_fw", block_size=32,
+                    dtype=jnp.bfloat16)
+    assert r.dist.dtype == jnp.bfloat16
+    for i, h in enumerate(mats):
+        ref = np_closure(h).astype(np.float32)
+        got = np.asarray(r.unpadded(i).dist.astype(jnp.float32))
+        assert max_rel_err(got, ref) <= CONTRACT_MAX_REL_ERR, i
+    # the bucketed scheduler must honor dtype too (was silently float32)
+    rb = solve_batch(mats, method="blocked_fw", block_size=32,
+                     dtype=jnp.bfloat16, bucket_by_size=True)
+    assert rb.dist.dtype == jnp.bfloat16
+    for i, h in enumerate(mats):
+        ref = np_closure(h).astype(np.float32)
+        got = np.asarray(rb.unpadded(i).dist.astype(jnp.float32))
+        assert max_rel_err(got, ref) <= CONTRACT_MAX_REL_ERR, i

@@ -1,0 +1,126 @@
+"""Bench regression gate: fresh smoke run vs the committed baseline.
+
+    PYTHONPATH=src python tools/bench_compare.py [--baseline BENCH_apsp_smoke.json]
+                                                 [--runs 3] [--threshold 4.0]
+
+Runs the ``benchmarks.run --smoke`` suite ``--runs`` times in-process,
+takes the per-(method, n) **median** across runs, and fails (exit 1) when
+any median exceeds ``threshold`` x the committed baseline's time.
+
+Why median-of-3 and a 4x default threshold: this 2-CPU container is noisily
+shared — absolute times swing several-fold *between processes*, so a tight
+gate would be all false alarms.  The gate exists to catch catastrophic
+regressions (a solver falling off the fused/tuned dispatch path is a
+5-10x cliff), not single-digit percent drift; percent-level tracking is
+what the in-process interleaved benches (bench_round / bench_fused /
+bench_dynamic) are for.  Speedups are reported but never fail the gate.
+
+Wired into ``make bench-check`` (part of ``make check``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import io
+import json
+import statistics
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+for p in (str(ROOT), str(ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def _method_times(payload: dict) -> dict:
+    """{(method, n): ms} from a BENCH json payload."""
+    out = {}
+    for method, by_n in (payload.get("apsp") or {}).items():
+        for n, row in by_n.items():
+            if isinstance(row, dict) and row.get("ms"):
+                out[(method, str(n))] = float(row["ms"])
+    return out
+
+
+def _run_smoke_once() -> dict:
+    from benchmarks import run as bench_run
+
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        path = f.name
+    # the smoke suite prints its CSV to stdout — swallow it, keep stderr
+    with contextlib.redirect_stdout(io.StringIO()):
+        rc = bench_run.main(["--smoke", "--json", path])
+    if rc != 0:
+        raise RuntimeError(f"smoke bench failed with exit code {rc}")
+    payload = json.loads(Path(path).read_text())
+    Path(path).unlink(missing_ok=True)
+    return payload
+
+
+def series(baseline: dict, fresh_runs: list) -> list:
+    """All comparable series: [(method, n, median_ms, baseline_ms, ratio)].
+    Keys missing from either side are skipped (new/renamed benches never
+    fail the gate).  The one place the median/skip policy lives — both the
+    pass/fail decision and the printed table derive from it."""
+    base = _method_times(baseline)
+    fresh = [_method_times(p) for p in fresh_runs]
+    out = []
+    for key, base_ms in sorted(base.items()):
+        samples = [f[key] for f in fresh if key in f]
+        if not samples:
+            continue
+        med = statistics.median(samples)
+        ratio = med / base_ms if base_ms > 0 else float("inf")
+        out.append((key[0], key[1], med, base_ms, ratio))
+    return out
+
+
+def compare(baseline: dict, fresh_runs: list, threshold: float) -> list:
+    """Regressions among :func:`series`: entries whose ratio exceeds
+    ``threshold``."""
+    return [s for s in series(baseline, fresh_runs) if s[4] > threshold]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(ROOT / "BENCH_apsp_smoke.json"))
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--threshold", type=float, default=4.0,
+                    help="fail when median exceeds threshold x baseline")
+    args = ap.parse_args(argv)
+
+    baseline_path = Path(args.baseline)
+    if not baseline_path.exists():
+        print(f"bench-check: no baseline at {baseline_path}; nothing to "
+              "compare (commit one with `make bench-smoke`)")
+        return 0
+    baseline = json.loads(baseline_path.read_text())
+
+    fresh = []
+    for i in range(max(args.runs, 1)):
+        print(f"bench-check: smoke run {i + 1}/{args.runs} ...",
+              file=sys.stderr)
+        fresh.append(_run_smoke_once())
+
+    rows = series(baseline, fresh)
+    regressions = [s for s in rows if s[4] > args.threshold]
+    for m, n, med, b, ratio in rows:
+        print(f"  {m:>12} n={n:>4}: median {med:8.2f} ms  "
+              f"baseline {b:8.2f} ms  x{ratio:.2f}")
+    if regressions:
+        print(f"\nbench-check FAILED (> {args.threshold}x baseline, "
+              f"median of {args.runs}):")
+        for m, n, med, b, r in regressions:
+            print(f"  {m} n={n}: {med:.2f} ms vs baseline {b:.2f} ms "
+                  f"(x{r:.2f})")
+        return 1
+    print(f"bench-check OK ({len(rows)} series within "
+          f"{args.threshold}x of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,11 +8,21 @@ with a separate elementwise ``jnp.minimum`` / ``jnp.maximum`` accumulate
 sweep — everything routes through ``repro.kernels.ops`` (``kops.minplus``
 fused-accumulate family), which is the single tuned dispatch surface.
 
+Since the bandwidth-optimal-core rework (ISSUE 5) the same gate enforces
+the **no-copy convention**: solver round bodies never materialize a
+full-matrix copy (``.copy()`` / ``jnp.copy`` / copying ``jnp.array``
+constructors) — state is threaded through the fused round dispatches and,
+at the API boundary, moved by buffer donation (``donate=``), not
+duplicated.
+
 Allowed escapes:
   * the paper-faithful 3D formulation (``minplus_3d``) — a different name,
     deliberately not flagged;
   * a line ending in ``# lint: allow-unfused`` — for elementwise uses that
-    are not accumulate sweeps (e.g. the SPD feature cap).
+    are not accumulate sweeps (e.g. the SPD feature cap);
+  * a line ending in ``# lint: allow-copy`` — for host-side defensive
+    copies outside any round body (e.g. returning an owned cost matrix to
+    a caller).
 
 Exit code 1 with file:line diagnostics on violation.
 """
@@ -36,19 +46,29 @@ SOLVER_FILES = [
 ]
 
 PRAGMA = "lint: allow-unfused"
+PRAGMA_COPY = "lint: allow-copy"
 
 BANNED = [
     # separate elementwise accumulate sweep after a product
     (re.compile(r"\bjnp\.(minimum|maximum)\s*\("),
-     "separate elementwise accumulate (use the fused kernels.ops dispatch)"),
+     "separate elementwise accumulate (use the fused kernels.ops dispatch)",
+     PRAGMA),
     # unfused semiring product: bare minplus()/minplus_pred() not routed
     # through the kernels.ops dispatch (kops./ops./_kops. prefixes pass;
     # minplus_3d / minplus_xla are different names and do not match)
     (re.compile(r"(?<![\w.])minplus(_pred)?\s*\("),
-     "unfused semiring.minplus (route through repro.kernels.ops)"),
+     "unfused semiring.minplus (route through repro.kernels.ops)",
+     PRAGMA),
     # importing the unfused primitives into a solver is the same smell
     (re.compile(r"from\s+[.\w]*semiring\s+import\s+[^#\n]*\bminplus\b"),
-     "importing the unfused semiring product into a solver"),
+     "importing the unfused semiring product into a solver",
+     PRAGMA),
+    # un-donated full-matrix copies in solver bodies (the ISSUE-5 no-copy
+    # convention): state moves by donation, not duplication
+    (re.compile(r"\.copy\s*\(\s*\)|\bjnp\.copy\s*\(|\bjnp\.array\s*\("),
+     "full-matrix copy in a solver (thread state via buffer donation "
+     "instead; see blocked_fw/rkleene donate=)",
+     PRAGMA_COPY),
 ]
 
 
@@ -59,17 +79,19 @@ def lint(root: Path) -> int:
         if not path.exists():
             continue
         for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if PRAGMA in line:
-                continue
             code = line.split("#", 1)[0]          # ignore comment-only hits
-            for pat, why in BANNED:
+            for pat, why, pragma in BANNED:
+                if pragma in line:
+                    continue
                 if pat.search(code):
                     errors.append(f"{rel}:{lineno}: {why}\n    {line.strip()}")
     if errors:
         print("dispatch-convention violations:\n" + "\n".join(errors))
         print(f"\n{len(errors)} violation(s).  Route solver products through "
               "repro.kernels.ops (fused accumulate / fused argmin); append "
-              f"'# {PRAGMA}' only for non-accumulate elementwise uses.")
+              f"'# {PRAGMA}' only for non-accumulate elementwise uses and "
+              f"'# {PRAGMA_COPY}' only for host-side copies outside round "
+              "bodies.")
         return 1
     print(f"lint-dispatch: {len(SOLVER_FILES)} solver modules clean")
     return 0
