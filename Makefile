@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dynamic lint-dispatch check bench bench-smoke bench-check serve-apsp serve-dynamic
+.PHONY: test test-fast test-dynamic lint-dispatch analyze analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -13,10 +13,16 @@ test-fast:      ## smoke path: skip slow subprocess tests and O(n^3) oracle swee
 test-dynamic:   ## incremental-engine differential suite (update vs full recompute)
 	$(PY) -m pytest -x -q -m dynamic
 
-lint-dispatch:  ## fail on unfused semiring products / separate accumulate sweeps in solvers
+lint-dispatch:  ## back-compat alias: the unfused-dispatch check alone (see analyze)
 	$(PY) tools/lint_dispatch.py
 
-check: lint-dispatch  ## dispatch lint + tier-1 (incl. dynamic suite) + oracle suite + bench gate
+analyze:        ## full invariant sweep: AST checkers + jaxpr/HLO donation sanitizer
+	$(PY) tools/analyze.py
+
+analyze-baseline:  ## regenerate the committed machine-readable clean baseline
+	$(PY) tools/analyze.py --json > ANALYZE_baseline.json
+
+check: analyze  ## invariant sweep + tier-1 (incl. dynamic suite) + oracle suite + bench gate
 	$(PY) -m pytest -x -q -m "not oracle"
 	$(PY) -m pytest -q -m oracle tests/test_semiring_oracle.py
 	$(MAKE) bench-check

@@ -1,0 +1,45 @@
+"""Static + jaxpr-level invariant checkers for the repro tree.
+
+The repo's conventions — fused single-dispatch through ``kernels.ops``,
+semiring genericity, trace purity, autotune-key completeness, and donation
+integrity — are machine-checked here.  ``tools/analyze.py`` is the CLI
+(gates ``make check``); ``run_checks`` / ``CHECKERS`` are the library
+surface; suppressions are ``# repro: allow-<check>`` pragmas (see
+``analysis.pragmas``).
+
+Importing this package populates the registry:
+
+==================  =====================================================
+``unfused-dispatch``   solver products route through the fused dispatch;
+                       no unfused minplus, no accumulate sweeps, no
+                       full-matrix copies (tier A, AST)
+``semiring-hardcode``  no literal tropical ops in semiring-parametrized
+                       modules (tier A, AST)
+``trace-impurity``     no host-Python control flow / syncs / clocks in
+                       jit-reachable functions (tier A, AST)
+``autotune-key``       dispatch-affecting parameters reach the cache key,
+                       call sites bind every key axis (tier A, AST)
+``donation``           donating jits compile to real input/output aliases,
+                       no read-after-donation, buffers actually consumed
+                       (tier B, jaxpr/HLO — real repo only)
+==================  =====================================================
+"""
+
+from .base import CHECKERS, Checker, Finding, Project, register_checker, run_checks
+from . import dispatch as _dispatch            # noqa: F401  (registers)
+from . import semiring_hardcode as _semiring   # noqa: F401
+from . import purity as _purity                # noqa: F401
+from . import autotune_key as _autotune        # noqa: F401
+from . import donation as _donation            # noqa: F401
+from .donation import DonationSpec, run_donation_checks
+
+__all__ = [
+    "CHECKERS",
+    "Checker",
+    "Finding",
+    "Project",
+    "register_checker",
+    "run_checks",
+    "DonationSpec",
+    "run_donation_checks",
+]

@@ -1,0 +1,175 @@
+"""Checker framework core: findings, the checker protocol, the registry.
+
+The repo's load-bearing conventions (fused single-dispatch, semiring
+genericity, trace purity, autotune-key completeness, donation integrity)
+started as review folklore, were partially gated by a 101-line regex lint,
+and are now machine-checked by this framework.  A checker is a named object
+with a ``run(project)`` method yielding :class:`Finding`s; the registry maps
+check names to instances; ``tools/analyze.py`` is the CLI that runs them and
+gates ``make check``.
+
+Two tiers share the protocol:
+
+* **Tier A (AST)** — checkers parse the source tree (``Project`` caches
+  sources and ASTs) and flag convention violations at file:line.
+* **Tier B (jaxpr/HLO)** — the donation sanitizer (``analysis.donation``)
+  imports the solvers, traces their donating jits with abstract inputs, and
+  walks the closed jaxpr + compiled executable.  It only runs when the
+  project root is the real repo (fixture trees are not importable).
+
+Suppression: a finding is dropped when its source line carries
+``# repro: allow-<check>`` (per-line) or the file contains a standalone
+comment line with the same pragma (per-file) — see ``analysis.pragmas``.
+The migrated ``unfused-dispatch`` checker additionally honors its legacy
+``# lint: allow-unfused`` / ``# lint: allow-copy`` syntax internally.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+from . import pragmas
+
+__all__ = [
+    "Finding",
+    "Checker",
+    "Project",
+    "CHECKERS",
+    "register_checker",
+    "run_checks",
+]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One convention violation.  ``line == 0`` marks a module/project-level
+    finding (e.g. a dropped donation discovered by tracing, not parsing)."""
+
+    check: str
+    path: str                 # project-relative posix path
+    line: int                 # 1-based; 0 = whole-module finding
+    message: str
+    snippet: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{loc}: [{self.check}] {self.message}"
+        if self.snippet:
+            out += f"\n    {self.snippet}"
+        return out
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+class Project:
+    """A source tree under analysis: root + file list + parse caches.
+
+    The default file set is every ``.py`` under ``src/repro`` (the analyzed
+    package); fixture tests construct Projects over
+    ``tests/analysis_fixtures/*`` mini-trees with the same relative layout.
+    """
+
+    def __init__(self, root, rel_files: Optional[Sequence[str]] = None):
+        self.root = Path(root)
+        self._rel_files = list(rel_files) if rel_files is not None else None
+        self._source: Dict[str, str] = {}
+        self._lines: Dict[str, List[str]] = {}
+        self._tree: Dict[str, Optional[ast.AST]] = {}
+
+    def files(self) -> List[str]:
+        if self._rel_files is None:
+            base = self.root / "src" / "repro"
+            self._rel_files = sorted(
+                p.relative_to(self.root).as_posix()
+                for p in base.rglob("*.py")
+            )
+        return self._rel_files
+
+    def has(self, rel: str) -> bool:
+        return (self.root / rel).is_file()
+
+    def source(self, rel: str) -> str:
+        if rel not in self._source:
+            self._source[rel] = (self.root / rel).read_text()
+        return self._source[rel]
+
+    def lines(self, rel: str) -> List[str]:
+        if rel not in self._lines:
+            self._lines[rel] = self.source(rel).splitlines()
+        return self._lines[rel]
+
+    def line(self, rel: str, lineno: int) -> str:
+        lines = self.lines(rel)
+        return lines[lineno - 1] if 1 <= lineno <= len(lines) else ""
+
+    def tree(self, rel: str) -> Optional[ast.AST]:
+        """Parsed AST, or None on a syntax error (reported by the runner)."""
+        if rel not in self._tree:
+            try:
+                self._tree[rel] = ast.parse(self.source(rel), filename=rel)
+            except SyntaxError:
+                self._tree[rel] = None
+        return self._tree[rel]
+
+
+class Checker:
+    """Base class for a registered check.  Subclasses set ``name`` (the
+    pragma suffix: ``# repro: allow-<name>``) and ``description`` and
+    implement :meth:`run`."""
+
+    name: str = ""
+    description: str = ""
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    # convenience for subclasses
+    def finding(self, project: Project, rel: str, line: int, message: str) -> Finding:
+        return Finding(
+            check=self.name, path=rel, line=line, message=message,
+            snippet=project.line(rel, line).strip() if line else "",
+        )
+
+
+CHECKERS: Dict[str, Checker] = {}
+
+
+def register_checker(checker: Checker) -> Checker:
+    """Add a checker instance to the registry (name collision = replace)."""
+    if not checker.name:
+        raise ValueError("checker must have a name")
+    CHECKERS[checker.name] = checker
+    return checker
+
+
+def _suppressed(project: Project, f: Finding) -> bool:
+    if not f.path or not project.has(f.path):
+        return False
+    if pragmas.file_allows(project.lines(f.path), f.check):
+        return True
+    if f.line:
+        return pragmas.line_allows(project.line(f.path, f.line), f.check)
+    return False
+
+
+def run_checks(
+    project: Project, names: Optional[Iterable[str]] = None
+) -> List[Finding]:
+    """Run the named checks (default: all registered) over ``project`` and
+    return pragma-filtered findings sorted by location."""
+    selected = list(names) if names is not None else sorted(CHECKERS)
+    unknown = [n for n in selected if n not in CHECKERS]
+    if unknown:
+        raise ValueError(
+            f"unknown check(s) {unknown}; registered: {sorted(CHECKERS)}"
+        )
+    findings: List[Finding] = []
+    for name in selected:
+        for f in CHECKERS[name].run(project):
+            if not _suppressed(project, f):
+                findings.append(f)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.check))

@@ -1,0 +1,126 @@
+"""``unfused-dispatch`` — the ISSUE-2/ISSUE-5 solver-dispatch conventions.
+
+Migration of ``tools/lint_dispatch.py`` (the 101-line regex lint) onto the
+framework, now AST-based: comment/docstring mentions can no longer trip it,
+and the patterns match call structure instead of line text.  The rules are
+unchanged:
+
+* solver modules never call the unfused semiring product — bare
+  ``minplus(...)`` / ``minplus_pred(...)`` (the ``kops.`` / ``ops.``
+  attribute forms are the fused dispatch and pass; ``minplus_3d`` /
+  ``minplus_xla`` are different names, deliberately unflagged);
+* no separate elementwise ``jnp.minimum`` / ``jnp.maximum`` accumulate
+  sweep after a product — accumulation is fused into the kernel;
+* no importing the unfused primitives from ``core.semiring``;
+* (no-copy convention, ISSUE 5) no full-matrix copies in solver bodies —
+  ``.copy()`` / ``jnp.copy`` / ``jnp.array`` — state moves by buffer
+  donation (``donate=``), not duplication.
+
+Scope: ``src/repro/core/*`` minus ``semiring.py`` (hosts the plain
+primitives), ``graphgen.py`` (a generator, not a solver), ``__init__.py``.
+
+Pragmas: the legacy spellings are preserved — ``# lint: allow-unfused`` for
+non-accumulate elementwise uses, ``# lint: allow-copy`` for host-side
+copies outside round bodies — plus the framework's
+``# repro: allow-unfused-dispatch``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import dotted
+from .base import Checker, Finding, Project, register_checker
+
+__all__ = ["UnfusedDispatchChecker", "SOLVER_EXEMPT"]
+
+SOLVER_EXEMPT = {"__init__.py", "semiring.py", "graphgen.py"}
+
+_LEGACY_UNFUSED = "lint: allow-unfused"
+_LEGACY_COPY = "lint: allow-copy"
+
+
+class UnfusedDispatchChecker(Checker):
+    name = "unfused-dispatch"
+    description = (
+        "solver products must route through the fused kernels.ops dispatch; "
+        "no unfused semiring.minplus, no separate accumulate sweeps, no "
+        "full-matrix copies in solver bodies (donation moves state)"
+    )
+
+    def _in_scope(self, rel: str) -> bool:
+        parts = rel.split("/")
+        return (
+            len(parts) >= 2
+            and parts[-2] == "core"
+            and parts[-1] not in SOLVER_EXEMPT
+        )
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for rel in project.files():
+            if not self._in_scope(rel):
+                continue
+            tree = project.tree(rel)
+            if tree is None:
+                yield self.finding(project, rel, 0, "file does not parse")
+                continue
+            yield from self._check_module(project, rel, tree)
+
+    def _check_module(self, project: Project, rel: str, tree) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom):
+                if (node.module or "").split(".")[-1] == "semiring":
+                    bad = [
+                        a.name for a in node.names
+                        if a.name in ("minplus", "minplus_pred")
+                    ]
+                    if bad and not self._legacy(project, rel, node.lineno,
+                                                _LEGACY_UNFUSED):
+                        yield self.finding(
+                            project, rel, node.lineno,
+                            f"importing the unfused semiring product "
+                            f"{bad} into a solver (route through "
+                            f"repro.kernels.ops)",
+                        )
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            line = node.lineno
+            if name in ("jnp.minimum", "jnp.maximum"):
+                if not self._legacy(project, rel, line, _LEGACY_UNFUSED):
+                    yield self.finding(
+                        project, rel, line,
+                        f"separate elementwise {name} accumulate (use the "
+                        "fused kernels.ops dispatch)",
+                    )
+            elif isinstance(node.func, ast.Name) and node.func.id in (
+                "minplus", "minplus_pred"
+            ):
+                if not self._legacy(project, rel, line, _LEGACY_UNFUSED):
+                    yield self.finding(
+                        project, rel, line,
+                        f"unfused semiring.{node.func.id} (route through "
+                        "repro.kernels.ops)",
+                    )
+            elif name in ("jnp.copy", "jnp.array") or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "copy"
+                and not node.args
+                and not node.keywords
+            ):
+                if not self._legacy(project, rel, line, _LEGACY_COPY):
+                    yield self.finding(
+                        project, rel, line,
+                        "full-matrix copy in a solver (thread state via "
+                        "buffer donation instead; see blocked_fw/rkleene "
+                        "donate=)",
+                    )
+
+    @staticmethod
+    def _legacy(project: Project, rel: str, line: int, pragma: str) -> bool:
+        return pragma in project.line(rel, line)
+
+
+register_checker(UnfusedDispatchChecker())

@@ -1,0 +1,399 @@
+"""Tier B — the donation sanitizer (jaxpr/HLO level).
+
+The repo's no-copy convention moves solver state by buffer donation:
+``blocked_fw`` / ``rkleene`` / ``DynamicAPSP`` thread matrices through
+``donate_argnums`` jits so each round writes into the previous round's
+buffer.  The failure mode is silent: XLA *drops* a donation it cannot
+honor (shape/dtype mismatch with every output, or an output that cannot
+reuse the input buffer) and falls back to allocating — correctness is
+unchanged, the 2x memory win quietly disappears, and at APSP scale
+(N^2 f32 matrices) that is the difference between fitting a graph and
+OOMing.  A donation is a *claim about the compiled program*, so this
+checker verifies it at the artifact level rather than trusting the
+``donate_argnums=`` annotation:
+
+1. **Aliasing is compiled in** — lower + compile each donating entry
+   point with its real static configuration and assert every donated
+   argument appears as a parameter in the executable's
+   ``input_output_alias`` table.  A dropped donation (also surfaced as
+   jax's "donated buffers were not usable" warning, which the check
+   captures) is a finding.
+2. **No read-after-donation** — walk the inner jaxpr of the jitted call
+   and assert no equation consumes a donated invar *after* the equation
+   producing its aliased output: such a read forces XLA to keep the old
+   buffer alive and defeats the alias (or, with manual aliasing, would
+   read clobbered memory).
+3. **The alias is real at runtime** (pointer proof, CPU backend) — run
+   the entry point on concrete inputs and assert the donated input's
+   ``unsafe_buffer_pointer()`` equals the output's, and that the input
+   buffer was actually consumed (``is_deleted()``).  Only asserted for
+   the specs where the output tensor is the donated tensor updated
+   in place (blocked FW with N a multiple of the block: unpad is an
+   identity slice); ``rkleene`` rebuilds its output via ``jnp.block``
+   concatenation, so it gets checks 1-2 plus consumption only.
+
+Specs cover the donating jits behind ``blocked_fw``, ``blocked_fw_batch``,
+``rkleene``, and ``DynamicAPSP.update`` (rank-k fixpoint + warm resolve);
+``solve`` / ``solve_batch`` / ``DynamicAPSP.update`` are additionally
+exercised end-to-end through their public wrappers (consumption checks).
+
+This tier imports and compiles the real solvers, so it only runs when the
+analyzed project *is* this repo — fixture mini-trees are skipped.  Tests
+inject synthetic :class:`DonationSpec`s (e.g. a donation-dropping stub)
+via :func:`run_donation_checks`.
+"""
+
+from __future__ import annotations
+
+import re
+import warnings
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
+
+from .base import Checker, Finding, Project, register_checker
+
+__all__ = [
+    "DonationSpec",
+    "default_specs",
+    "run_donation_checks",
+    "parse_input_output_alias",
+    "DonationChecker",
+]
+
+_CHECK = "donation"
+
+
+@dataclass
+class DonationSpec:
+    """One donating entry point to sanitize.
+
+    ``make`` builds fresh concrete inputs (donation consumes them, so every
+    phase re-makes its own): returns ``(fn, args, kwargs)`` where ``fn`` is
+    the *jitted* callable, ``args`` the positional array arguments and
+    ``kwargs`` the static keywords.  ``donated`` are the donated argnums
+    (== XLA parameter numbers: all array args are positional).
+    ``alias_out`` picks, from the result pytree, the array expected to
+    alias donated arg ``donated[0]``; set it only where in-place identity
+    holds (enables the runtime pointer proof).
+    """
+
+    name: str
+    path: str                        # repo-relative source file for findings
+    make: Callable[[], tuple]        # () -> (fn, args, kwargs)
+    donated: tuple
+    alias_out: Optional[Callable] = None
+
+
+def _dropped_donation_warnings(ws) -> List[str]:
+    return [
+        str(w.message) for w in ws
+        if "donated" in str(w.message).lower()
+    ]
+
+
+def _extract_alias_block(hlo: str) -> str:
+    """The balanced ``{...}`` following ``input_output_alias=``, or ''."""
+    i = hlo.find("input_output_alias=")
+    if i < 0:
+        return ""
+    j = hlo.find("{", i)
+    depth = 0
+    for k in range(j, len(hlo)):
+        if hlo[k] == "{":
+            depth += 1
+        elif hlo[k] == "}":
+            depth -= 1
+            if depth == 0:
+                return hlo[j:k + 1]
+    return ""
+
+
+def parse_input_output_alias(hlo: str) -> Dict[int, int]:
+    """{param_number: output_tuple_index} from compiled HLO text.
+
+    Entry format: ``{out_idx}: (param, {param_idx}, may-alias)`` with
+    ``{}`` for a single (non-tuple) output — mapped to index 0.
+    """
+    block = _extract_alias_block(hlo)
+    out: Dict[int, int] = {}
+    for m in re.finditer(r"\{([\d\s,]*)\}:\s*\((\d+),", block):
+        idx_txt = m.group(1).strip().replace(",", " ").split()
+        out_idx = int(idx_txt[0]) if idx_txt else 0
+        out[int(m.group(2))] = out_idx
+    return out
+
+
+def _inner_jaxpr(fn, args, kwargs):
+    """Closed jaxpr of the jitted call's body (the pjit eqn's inner jaxpr)."""
+    import jax
+
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    for eqn in closed.jaxpr.eqns:
+        if eqn.primitive.name in ("pjit", "jit") and "jaxpr" in eqn.params:
+            return eqn.params["jaxpr"].jaxpr
+    return closed.jaxpr
+
+
+def _read_after_donation(jaxpr, donated, alias_map: Dict[int, int]) -> List[str]:
+    """Messages for donated invars read after their aliased output exists."""
+    msgs: List[str] = []
+    for param in donated:
+        if param not in alias_map or param >= len(jaxpr.invars):
+            continue
+        invar = jaxpr.invars[param]
+        out_idx = alias_map[param]
+        if out_idx >= len(jaxpr.outvars):
+            continue
+        outvar = jaxpr.outvars[out_idx]
+        producer = None
+        for i, eqn in enumerate(jaxpr.eqns):
+            if any(o is outvar for o in eqn.outvars):
+                producer = i
+        if producer is None:
+            continue                       # passthrough output
+        late = [
+            i for i, eqn in enumerate(jaxpr.eqns)
+            if i > producer and any(v is invar for v in eqn.invars)
+        ]
+        if late:
+            msgs.append(
+                f"donated arg {param} is read by equation(s) {late} after "
+                f"its aliased output is produced at equation {producer} — "
+                "the read pins the old buffer and defeats the donation"
+            )
+    return msgs
+
+
+def check_spec(spec: DonationSpec) -> List[Finding]:
+    """Run the three donation checks on one spec (ready-made findings)."""
+    import jax
+
+    def finding(msg: str) -> Finding:
+        return Finding(check=_CHECK, path=spec.path, line=0,
+                       message=f"{spec.name}: {msg}")
+
+    out: List[Finding] = []
+
+    # -- 1: compile-level aliasing -----------------------------------------
+    fn, args, kwargs = spec.make()
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        compiled = fn.lower(*args, **kwargs).compile()
+    for msg in _dropped_donation_warnings(ws):
+        out.append(finding(f"donation dropped by XLA — {msg}"))
+    alias_map = parse_input_output_alias(compiled.as_text())
+    for param in spec.donated:
+        if param not in alias_map:
+            out.append(finding(
+                f"donate_argnums includes arg {param} but the compiled "
+                "executable's input_output_alias has no entry for that "
+                "parameter — XLA found no output to alias it with"
+            ))
+
+    # -- 2: jaxpr read-after-donation --------------------------------------
+    fn, args, kwargs = spec.make()
+    jaxpr = _inner_jaxpr(fn, args, kwargs)
+    for msg in _read_after_donation(jaxpr, spec.donated, alias_map):
+        out.append(finding(msg))
+
+    # -- 3: runtime consumption + pointer proof ----------------------------
+    fn, args, kwargs = spec.make()
+    ptrs = {}
+    for p in spec.donated:
+        jax.block_until_ready(args[p])
+        try:
+            ptrs[p] = args[p].unsafe_buffer_pointer()
+        except Exception:
+            ptrs[p] = None                # backend without pointer access
+    result = jax.block_until_ready(fn(*args, **kwargs))
+    for p in spec.donated:
+        if p in alias_map and not args[p].is_deleted():
+            out.append(finding(
+                f"donated arg {p} still alive after the call — the runtime "
+                "did not consume the buffer despite the compiled alias"
+            ))
+    if spec.alias_out is not None and ptrs.get(spec.donated[0]) is not None:
+        target = spec.alias_out(result)
+        try:
+            out_ptr = target.unsafe_buffer_pointer()
+        except Exception:
+            out_ptr = None
+        if out_ptr is not None and out_ptr != ptrs[spec.donated[0]]:
+            out.append(finding(
+                "output buffer pointer differs from the donated input's — "
+                "the in-place alias is not real at runtime"
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# default specs: the repo's donating entry points
+# ---------------------------------------------------------------------------
+
+def _host_matrix(n: int, seed: int = 0):
+    """Small in-domain tropical cost matrix (host-built, then committed)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(1.0, 10.0, size=(n, n)).astype(np.float32)
+    a = np.where(rng.uniform(size=(n, n)) < 0.3, np.inf, a)
+    np.fill_diagonal(a, 0.0)
+    return jnp.asarray(a)
+
+
+def default_specs() -> List[DonationSpec]:
+    import jax.numpy as jnp
+
+    # "import repro.core.blocked_fw as bfw" resolves through the package
+    # attribute, which is the re-exported *function* — go via sys.modules
+    import importlib
+    bfw = importlib.import_module("repro.core.blocked_fw")
+    dyn = importlib.import_module("repro.core.dynamic")
+    rkl = importlib.import_module("repro.core.rkleene")
+    from repro.core.semiring import TROPICAL
+
+    def mk_blocked(with_pred: bool, round_mode: str, n: int):
+        # n is chosen per round mode so the pointer proof is decisive: which
+        # physical buffer XLA parks the final round in flips with the pivot
+        # count, and these configs land it back in the donated slot
+        def make():
+            kw = dict(block_size=16, with_pred=with_pred, semiring=TROPICAL,
+                      round_mode=round_mode)
+            return bfw._blocked_fw_jit_donate, (_host_matrix(n),), kw
+        return make
+
+    def mk_blocked_batch():
+        def make():
+            hs = jnp.stack([_host_matrix(16, seed=s) for s in range(2)])
+            kw = dict(block_size=8, with_pred=False, semiring=TROPICAL,
+                      round_mode="fused")
+            return bfw._blocked_fw_batch_jit_donate, (hs,), kw
+        return make
+
+    def mk_rkleene():
+        def make():
+            kw = dict(base=16, with_pred=False, semiring=TROPICAL)
+            return rkl._rkleene_jit_donate, (_host_matrix(32),), kw
+        return make
+
+    def mk_rank_k():
+        def make():
+            n, k = 16, 4
+            d, p = _solved(n)
+            u = jnp.asarray([1, 3, 5, 7], jnp.int32)
+            v = jnp.asarray([2, 4, 6, 8], jnp.int32)
+            w = jnp.full((k,), 0.5, jnp.float32)
+            kw = dict(semiring=TROPICAL, with_pred=True, max_passes=4)
+            return dyn._rank_k_fixpoint_donate, (d, p, u, v, w), kw
+        return make
+
+    def mk_warm():
+        def make():
+            n = 16
+            d, p = _solved(n)
+            h = _host_matrix(n, seed=3)
+            affected = jnp.zeros((n, n), bool).at[2:5, :].set(True)
+            kw = dict(semiring=TROPICAL, with_pred=True, max_iters=4)
+            return dyn._warm_resolve_donate, (d, p, h, affected), kw
+        return make
+
+    def _solved(n: int):
+        from repro.core.apsp import solve
+        r = solve(_host_matrix(n, seed=1), method="squaring",
+                  with_pred=True, donate=False)
+        return r.dist, r.pred
+
+    bf = "src/repro/core/blocked_fw.py"
+    return [
+        DonationSpec("blocked_fw[fused]", bf, mk_blocked(False, "fused", 48),
+                     (0,), alias_out=lambda r: r[0]),
+        DonationSpec("blocked_fw[split,pred]", bf,
+                     mk_blocked(True, "split", 32),
+                     (0,), alias_out=lambda r: r[0]),
+        DonationSpec("blocked_fw_batch", bf, mk_blocked_batch(),
+                     (0,), alias_out=lambda r: r[0]),
+        DonationSpec("rkleene", "src/repro/core/rkleene.py", mk_rkleene(),
+                     (0,)),                      # jnp.block output: no ptr proof
+        DonationSpec("rank_k_fixpoint", "src/repro/core/dynamic.py",
+                     mk_rank_k(), (0, 1), alias_out=lambda r: r[0]),
+        DonationSpec("warm_resolve", "src/repro/core/dynamic.py",
+                     mk_warm(), (0, 1), alias_out=lambda r: r[0]),
+    ]
+
+
+def _wrapper_consumption_findings() -> List[Finding]:
+    """End-to-end checks through the public APIs: donation must consume."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.apsp import solve, solve_batch
+    from repro.core.dynamic import DynamicAPSP
+
+    out: List[Finding] = []
+
+    def finding(path: str, msg: str) -> Finding:
+        return Finding(check=_CHECK, path=path, line=0, message=msg)
+
+    h = _host_matrix(32)
+    r = solve(h, method="blocked_fw", block_size=16, donate=True)
+    jax.block_until_ready(r.dist)
+    if not h.is_deleted():
+        out.append(finding(
+            "src/repro/core/apsp.py",
+            "solve(donate=True) did not consume its input buffer",
+        ))
+
+    hs = [_host_matrix(12, seed=7), _host_matrix(16, seed=8)]
+    rb = solve_batch(hs, method="blocked_fw", block_size=8)
+    jax.block_until_ready(rb.dist)
+
+    eng = DynamicAPSP(_host_matrix(16, seed=9), method="squaring",
+                      with_pred=True, donate=True)
+    old_dist = eng.dist
+    eng.update(jnp.asarray([1], jnp.int32), jnp.asarray([2], jnp.int32),
+               jnp.asarray([0.25], jnp.float32))
+    jax.block_until_ready(eng.dist)
+    if not old_dist.is_deleted():
+        out.append(finding(
+            "src/repro/core/dynamic.py",
+            "DynamicAPSP.update(donate=True) did not consume the previous "
+            "dist buffer",
+        ))
+    return out
+
+
+def run_donation_checks(
+    specs: Optional[Sequence[DonationSpec]] = None,
+    *,
+    wrappers: bool = True,
+) -> List[Finding]:
+    """Run the sanitizer over ``specs`` (default: the repo's entry points)."""
+    findings: List[Finding] = []
+    for spec in (default_specs() if specs is None else specs):
+        findings.extend(check_spec(spec))
+    if specs is None and wrappers:
+        findings.extend(_wrapper_consumption_findings())
+    return findings
+
+
+class DonationChecker(Checker):
+    name = _CHECK
+    description = (
+        "donating solver entry points must compile to real input/output "
+        "aliases (XLA drops infeasible donations silently), never read a "
+        "donated buffer after its aliased output exists, and consume their "
+        "inputs at runtime"
+    )
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        # compiles the real solvers — meaningless (and unimportable) for
+        # fixture mini-trees, so bail unless the project is this repo
+        repo_root = Path(__file__).resolve().parents[3]
+        if Path(project.root).resolve() != repo_root:
+            return
+        yield from run_donation_checks()
+
+
+register_checker(DonationChecker())

@@ -1,0 +1,49 @@
+"""Suppression pragmas for the analysis framework.
+
+Two scopes, one syntax:
+
+* **Per-line** — append ``# repro: allow-<check>  <one-line justification>``
+  to the flagged line.  Multiple checks on one line are fine (separate
+  ``repro:`` comments or comma-joined: ``# repro: allow-a,allow-b reason``).
+* **Per-file** — a *standalone* comment line anywhere in the file reading
+  ``# repro: allow-<check>  <justification>`` suppresses that check for the
+  whole file (used for modules that are deliberately outside a convention,
+  e.g. a documented tropical-only feature path).
+
+The migrated ``unfused-dispatch`` checker keeps its legacy spelling working
+(``# lint: allow-unfused`` / ``# lint: allow-copy``) so the PR 2-5 pragma
+sites and CHANGES.md references stay valid; those legacy pragmas are
+per-line only and are honored by the dispatch checker itself, not here.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Iterable, List, Set
+
+__all__ = ["line_allows", "file_allows", "pragmas_on_line"]
+
+# "# repro: allow-foo,allow-bar some justification text"
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*([^#]*)")
+_ALLOW_RE = re.compile(r"allow-([A-Za-z0-9_-]+)")
+
+
+def pragmas_on_line(line: str) -> Set[str]:
+    """Check names allowed by ``repro:`` pragmas on this source line."""
+    out: Set[str] = set()
+    for m in _PRAGMA_RE.finditer(line):
+        out.update(_ALLOW_RE.findall(m.group(1)))
+    return out
+
+
+def line_allows(line: str, check: str) -> bool:
+    return check in pragmas_on_line(line)
+
+
+def file_allows(lines: Iterable[str], check: str) -> bool:
+    """True when a standalone comment line carries the pragma (file scope)."""
+    for line in lines:
+        stripped = line.strip()
+        if stripped.startswith("#") and check in pragmas_on_line(stripped):
+            return True
+    return False

@@ -1,0 +1,302 @@
+"""``trace-impurity`` — host-Python leaking into jit-traced functions.
+
+Python ``if``/``while`` on a traced value aborts tracing (or silently
+specializes on one branch under ``concrete`` paths); ``.item()`` /
+``float()`` on a tracer forces a device sync per trace; ``np.asarray`` on a
+tracer errors late and cryptically; host clocks read at trace time freeze
+into the compiled program.  All four have bitten jax codebases exactly when
+a host-side helper migrates under ``jax.jit`` — so this checker finds the
+*jit-reachable* subset of the tree and flags host-isms inside it.
+
+**Reachability** (static, conservative): seed functions are those wrapped
+by ``jax.jit`` — ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators and
+``name = jax.jit(fn, ...)`` / ``partial(jax.jit, ...)(fn)`` module-level
+assignments.  From the seeds, the call graph is walked through same-module
+calls, ``from .mod import fn`` names, and module-alias attribute calls
+(``kops.minplus`` where ``from repro.kernels import ops as kops``).  Nested
+defs (``lax.while_loop`` bodies) are scanned as part of their enclosing
+function.  Calls the resolver cannot see (dynamic dispatch, lazy-import
+helpers like ``_ops()``) are not followed — the checker under-approximates
+reachability rather than spray false positives.
+
+**Taint** (per directly-jitted function): traced values are the function's
+parameters *minus its* ``static_argnames`` (read off the jit site,
+including ``_STATIC``-style module constants), plus locals assigned from
+expressions involving traced values or ``jnp.* / jax.lax.*`` calls.  Shape
+metadata (``x.shape / ndim / dtype / size``) and ``is None`` tests are
+explicitly untainted — branching on those at trace time is the idiom, not
+a bug.  Transitively-reached functions get call-derived taint only (their
+parameter traced-ness is unknown), so only ``if jnp.any(...)``-style direct
+uses are flagged there.
+
+Flagged inside jit-reachable code:
+  * ``if`` / ``while`` / ternary on a tainted test  -> use ``lax.cond`` /
+    ``lax.while_loop`` / ``jnp.where``
+  * ``.item()``, ``float/int/bool`` of a tainted value -> host sync
+  * ``np.asarray`` / ``np.array``                     -> host round-trip
+  * ``time.time`` / ``perf_counter`` / ``datetime.now`` & co -> a clock
+    read at trace time compiles into a constant
+
+Scope: ``src/repro/core/*`` + ``src/repro/kernels/*``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .astutil import ModuleInfo, dotted, literal_str_tuple
+from .base import Checker, Finding, Project, register_checker
+
+__all__ = ["TraceImpurityChecker"]
+
+# attribute reads that stay static under tracing
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type"}
+
+# call prefixes that produce traced values
+_TRACED_PREFIXES = ("jnp.", "jax.lax.", "lax.", "jax.numpy.")
+
+_HOST_NP = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_HOST_CLOCK = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "datetime.datetime.now", "datetime.now",
+    "datetime.datetime.utcnow", "datetime.date.today",
+}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted(node) in ("jax.jit", "jit")
+
+
+def _jit_seed_sites(info: ModuleInfo) -> Dict[str, Tuple[str, ...]]:
+    """{function name: static_argnames} for every jax.jit wrapping site."""
+
+    def statics_from_call(call: ast.Call) -> Tuple[str, ...]:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                lit = literal_str_tuple(kw.value)
+                if lit is not None:
+                    return lit
+                if isinstance(kw.value, ast.Name):
+                    return info.constants.get(kw.value.id, ())
+        return ()
+
+    seeds: Dict[str, Tuple[str, ...]] = {}
+
+    for qual, fn in info.functions.items():
+        for dec in getattr(fn, "decorator_list", []):
+            if _is_jax_jit(dec):
+                seeds[qual] = ()
+            elif isinstance(dec, ast.Call):
+                if _is_jax_jit(dec.func):
+                    seeds[qual] = statics_from_call(dec)
+                elif dotted(dec.func) in ("partial", "functools.partial") and \
+                        dec.args and _is_jax_jit(dec.args[0]):
+                    seeds[qual] = statics_from_call(dec)
+
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # jax.jit(fn, static_argnames=...)
+        if _is_jax_jit(node.func) and node.args and \
+                isinstance(node.args[0], ast.Name):
+            target = node.args[0].id
+            if target in info.functions:
+                seeds.setdefault(target, statics_from_call(node))
+        # partial(jax.jit, static_argnames=...)(fn)
+        if isinstance(node.func, ast.Call) and \
+                dotted(node.func.func) in ("partial", "functools.partial") and \
+                node.func.args and _is_jax_jit(node.func.args[0]) and \
+                node.args and isinstance(node.args[0], ast.Name):
+            target = node.args[0].id
+            if target in info.functions:
+                seeds.setdefault(target, statics_from_call(node.func))
+    return seeds
+
+
+class TraceImpurityChecker(Checker):
+    name = "trace-impurity"
+    description = (
+        "no python control flow on traced values, host syncs (.item/float), "
+        "numpy round-trips, or clock reads inside jit-reachable functions"
+    )
+
+    def _in_scope(self, rel: str) -> bool:
+        parts = rel.split("/")
+        return (
+            len(parts) >= 2
+            and parts[-2] in ("core", "kernels")
+            and parts[-1] != "__init__.py"
+        )
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        infos: Dict[str, ModuleInfo] = {}
+        for rel in project.files():
+            if self._in_scope(rel):
+                info = ModuleInfo.build(project, rel)
+                if info is not None:
+                    infos[rel] = info
+
+        # ---- seed + BFS the jit-reachable set --------------------------
+        # reachable: (rel, qualname) -> static_argnames or None (None =
+        # transitively reached: parameter taint unknown, call-taint only)
+        reachable: Dict[Tuple[str, str], Optional[Tuple[str, ...]]] = {}
+        work: List[Tuple[str, str]] = []
+        for rel, info in infos.items():
+            for qual, statics in _jit_seed_sites(info).items():
+                reachable[(rel, qual)] = statics
+                work.append((rel, qual))
+
+        while work:
+            rel, qual = work.pop()
+            info = infos[rel]
+            fn = info.functions.get(qual)
+            if fn is None:
+                continue
+            for callee in self._callees(info, fn, infos):
+                if callee not in reachable:
+                    reachable[callee] = None
+                    work.append(callee)
+
+        # ---- scan each reachable function ------------------------------
+        seen_lines: Set[Tuple[str, int, str]] = set()
+        for (rel, qual), statics in sorted(
+            reachable.items(), key=lambda kv: (kv[0][0], kv[0][1])
+        ):
+            info = infos[rel]
+            fn = info.functions.get(qual)
+            if fn is None:
+                continue
+            for f in self._scan_function(project, info, qual, fn, statics):
+                key = (f.path, f.line, f.message)
+                if key not in seen_lines:
+                    seen_lines.add(key)
+                    yield f
+
+    # -- call graph ------------------------------------------------------
+
+    def _callees(self, info: ModuleInfo, fn, infos) -> Iterator[Tuple[str, str]]:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name):
+                name = node.func.id
+                if name in info.functions:
+                    yield (info.rel, name)
+                elif name in info.name_imports:
+                    mod, orig = info.name_imports[name]
+                    if mod in infos and orig in infos[mod].functions:
+                        yield (mod, orig)
+            elif isinstance(node.func, ast.Attribute) and \
+                    isinstance(node.func.value, ast.Name):
+                alias = node.func.value.id
+                mod = info.module_aliases.get(alias)
+                if mod and mod in infos and \
+                        node.func.attr in infos[mod].functions:
+                    yield (mod, node.func.attr)
+
+    # -- taint + pattern scan -------------------------------------------
+
+    def _scan_function(
+        self, project: Project, info: ModuleInfo, qual: str, fn,
+        statics: Optional[Tuple[str, ...]],
+    ) -> Iterator[Finding]:
+        tainted: Set[str] = set()
+        if statics is not None:
+            params = info.func_params(fn)
+            tainted = {p for p in params if p not in statics}
+
+        def taint(node: ast.AST) -> bool:
+            if isinstance(node, ast.Name):
+                return node.id in tainted
+            if isinstance(node, ast.Attribute):
+                if node.attr in _STATIC_ATTRS:
+                    return False
+                return taint(node.value)
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                if name and name.startswith(_TRACED_PREFIXES):
+                    return True
+                return any(taint(a) for a in node.args) or any(
+                    taint(kw.value) for kw in node.keywords
+                )
+            if isinstance(node, ast.Compare):
+                # "x is None" / "x is not None" is static structure
+                if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                    consts = [node.left] + list(node.comparators)
+                    if any(
+                        isinstance(c, ast.Constant) and c.value is None
+                        for c in consts
+                    ):
+                        return False
+                return taint(node.left) or any(
+                    taint(c) for c in node.comparators
+                )
+            if isinstance(node, (ast.BoolOp,)):
+                return any(taint(v) for v in node.values)
+            if isinstance(node, ast.UnaryOp):
+                return taint(node.operand)
+            if isinstance(node, ast.BinOp):
+                return taint(node.left) or taint(node.right)
+            if isinstance(node, ast.Subscript):
+                return taint(node.value)
+            if isinstance(node, (ast.Tuple, ast.List)):
+                return any(taint(e) for e in node.elts)
+            if isinstance(node, ast.IfExp):
+                return taint(node.body) or taint(node.orelse)
+            return False
+
+        where = f"in jit-reachable `{qual}` ({'direct' if statics is not None else 'transitive'})"
+
+        for node in ast.walk(fn):
+            # propagate taint through simple assignments (walk order is
+            # source order for the flat function bodies this tree has)
+            if isinstance(node, ast.Assign) and taint(node.value):
+                for tgt in node.targets:
+                    for t in ast.walk(tgt):
+                        if isinstance(t, ast.Name):
+                            tainted.add(t.id)
+                continue
+            if isinstance(node, (ast.If, ast.While)) and taint(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield self.finding(
+                    project, info.rel, node.lineno,
+                    f"python `{kind}` on a traced value {where} — use "
+                    "lax.cond / lax.while_loop / jnp.where",
+                )
+            elif isinstance(node, ast.IfExp) and taint(node.test):
+                yield self.finding(
+                    project, info.rel, node.lineno,
+                    f"ternary on a traced value {where} — use jnp.where",
+                )
+            elif isinstance(node, ast.Call):
+                name = dotted(node.func)
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    yield self.finding(
+                        project, info.rel, node.lineno,
+                        f".item() {where} — forces a host sync per trace",
+                    )
+                elif name in _HOST_NP:
+                    yield self.finding(
+                        project, info.rel, node.lineno,
+                        f"{name} {where} — host numpy round-trip of traced "
+                        "data (use jnp)",
+                    )
+                elif name in _HOST_CLOCK:
+                    yield self.finding(
+                        project, info.rel, node.lineno,
+                        f"{name} {where} — a clock read at trace time "
+                        "compiles into a constant",
+                    )
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int", "bool") and \
+                        node.args and any(taint(a) for a in node.args):
+                    yield self.finding(
+                        project, info.rel, node.lineno,
+                        f"{node.func.id}() of a traced value {where} — "
+                        "host sync; keep it on-device",
+                    )
+
+
+register_checker(TraceImpurityChecker())

@@ -1,0 +1,90 @@
+"""``semiring-hardcode`` — semiring-generic modules must not bake in ⊕⊗.
+
+The PR 3 registry made every solver and kernel parametric over the closed
+semiring (``sr.add`` / ``sr.mul`` / ``sr.reduce`` / ``sr.argreduce`` /
+``sr.better``).  A literal ``jnp.minimum`` (or ``jnp.add``-as-⊗, or a
+min/argmin reduction) inside one of those modules silently re-hardcodes the
+tropical instance: every other registry instance (bottleneck, reliability,
+boolean, user-registered) then computes garbage on that path — exactly the
+bug class the differential-oracle suite exists to catch at runtime, moved
+to parse time.
+
+Scope: ``src/repro/core/*`` + ``src/repro/kernels/*`` minus
+``core/semiring.py`` — the one module allowed to spell the instances out:
+it *hosts* the registry (``TROPICAL = Semiring(add=jnp.minimum, ...)``),
+the paper-faithful ``minplus_3d`` path, and the tropical-limit
+``softmin_matmul`` transform.
+
+Flagged ops (call positions only — references like the ``_NP_MUL`` mapping
+table in ``core/paths.py`` don't call anything): the elementwise ⊕⊗
+candidates ``jnp.minimum / maximum / add / multiply``, the ⊕-reductions
+``jnp.min / max / sum``, and the witness reductions ``jnp.argmin / argmax``.
+
+Deliberate exceptions (index clamps, tropical-only documented feature
+paths) carry ``# repro: allow-semiring-hardcode  <why>``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import dotted
+from .base import Checker, Finding, Project, register_checker
+
+__all__ = ["SemiringHardcodeChecker", "HARDCODED_OPS"]
+
+HARDCODED_OPS = {
+    "jnp.minimum": "elementwise ⊕/⊗ candidate",
+    "jnp.maximum": "elementwise ⊕/⊗ candidate",
+    "jnp.add": "elementwise ⊗ candidate",
+    "jnp.multiply": "elementwise ⊗ candidate",
+    "jnp.min": "⊕-reduction",
+    "jnp.max": "⊕-reduction",
+    "jnp.sum": "⊕-reduction (+-fold)",
+    "jnp.argmin": "witness reduction",
+    "jnp.argmax": "witness reduction",
+}
+
+_EXEMPT = {"core/semiring.py"}
+
+
+class SemiringHardcodeChecker(Checker):
+    name = "semiring-hardcode"
+    description = (
+        "no literal tropical ops (jnp.minimum/add/min/argmin...) in "
+        "semiring-parametrized modules — use the Semiring instance's "
+        "add/mul/reduce/argreduce or the kernels.ops dispatch"
+    )
+
+    def _in_scope(self, rel: str) -> bool:
+        parts = rel.split("/")
+        if len(parts) < 2 or parts[-1] == "__init__.py":
+            return False
+        tail = "/".join(parts[-2:])
+        if tail in _EXEMPT:
+            return False
+        return parts[-2] in ("core", "kernels")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for rel in project.files():
+            if not self._in_scope(rel):
+                continue
+            tree = project.tree(rel)
+            if tree is None:
+                continue
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted(node.func)
+                if name in HARDCODED_OPS:
+                    yield self.finding(
+                        project, rel, node.lineno,
+                        f"hardcoded {HARDCODED_OPS[name]} {name} in a "
+                        "semiring-parametrized module (use semiring."
+                        "add/mul/reduce/argreduce or kernels.ops; tropical "
+                        "literals only belong in core/semiring.py)",
+                    )
+
+
+register_checker(SemiringHardcodeChecker())

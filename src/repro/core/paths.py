@@ -149,4 +149,4 @@ def spd_features(h: jax.Array, landmarks: jax.Array, *, cap: float = 1e4) -> jax
         return z, jnp.any(z < d), it + 1
 
     d, _, _ = jax.lax.while_loop(cond, body, (d0, jnp.bool_(True), jnp.int32(0)))
-    return jnp.minimum(d, cap).T             # (n, L) cap  # lint: allow-unfused
+    return jnp.minimum(d, cap).T  # lint: allow-unfused  # repro: allow-semiring-hardcode tropical-only SPD feature cap

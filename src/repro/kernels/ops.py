@@ -234,7 +234,7 @@ def pred_from_kstar(
         return jax.vmap(fn)(kstar, px, py, fallback)
     n = kstar.shape[-1]
     cols = jnp.arange(n)
-    ks = jnp.maximum(kstar, 0)                       # safe gather index
+    ks = jnp.maximum(kstar, 0)  # repro: allow-semiring-hardcode index clamp, not an ⊕⊗ op
     p_via = py[ks, cols[None, :]]
     p_own = jnp.take_along_axis(px, ks, axis=1)
     same_node = (ks + k_offset) == (cols[None, :] + j_offset)
@@ -312,7 +312,7 @@ def rank_k_update(
     if pred is None:
         return minplus(x, y, dist, semiring=sr, **block_kw), None
     z, kstar = minplus_argmin(x, y, dist, semiring=sr, **block_kw)
-    ks = jnp.maximum(kstar, 0)                   # safe gather index
+    ks = jnp.maximum(kstar, 0)  # repro: allow-semiring-hardcode index clamp, not an ⊕⊗ op
     cols = jnp.arange(dist.shape[-1])[None, :]
     p_via = pred[v, :][ks, cols]                 # pred[v_{k*}, b]
     pz = jnp.where(v[ks] == cols, u[ks], p_via)  # empty tail: pred is u_{k*}

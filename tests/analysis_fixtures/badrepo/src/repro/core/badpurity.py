@@ -1,0 +1,25 @@
+"""Fixture: host-Python impurities inside jit-reachable functions."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def helper(y):
+    if jnp.any(y):                   # transitive: branch on a traced value
+        return y
+    return y
+
+
+@jax.jit
+def bad_branch(x):
+    if jnp.any(x > 0):               # python if on a traced value
+        x = x * 2.0
+    while jnp.sum(x) > 1.0:          # python while on a traced value
+        x = x - 1.0
+    _t = time.time()                 # clock read at trace time
+    _v = float(jnp.sum(x))           # host sync
+    _s = x.sum().item()              # host sync
+    _a = np.asarray(x)               # host numpy round-trip
+    return helper(x)

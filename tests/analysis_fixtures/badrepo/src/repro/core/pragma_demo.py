@@ -1,0 +1,8 @@
+"""Fixture: per-line pragma suppression round-trip."""
+import jax.numpy as jnp
+
+
+def pair(d, e):
+    x = jnp.minimum(d, e)  # repro: allow-unfused-dispatch deliberate demo
+    y = jnp.minimum(d, e)
+    return x, y

@@ -1,0 +1,7 @@
+"""Fixture: file-scope pragma suppression."""
+# repro: allow-unfused-dispatch  whole module is a deliberate demo
+import jax.numpy as jnp
+
+
+def capped(d, e):
+    return jnp.minimum(d, e)

@@ -1,0 +1,10 @@
+"""Fixture: a lookup parameter that never reaches the cache key."""
+
+
+def key_for(backend, dtype, m, k, n):
+    return f"{backend}|{dtype}|{m}|{k}|{n}"
+
+
+def lookup(backend, dtype, m, k, n, flavor="plain"):
+    # "flavor" affects dispatch but is key-blind: two flavors collide
+    return {}

@@ -1,0 +1,199 @@
+"""Tests for the invariant-checker framework (`repro.analysis`).
+
+Tier A checkers must each fire on their known-bad fixture under
+``tests/analysis_fixtures/badrepo`` (same relative layout as the real
+tree) and stay quiet on the real tree; pragma suppression must round-trip
+at line and file scope.  Tier B (the donation sanitizer) is exercised on
+synthetic specs — a donation-dropping stub, a clean in-place stub, a
+read-after-donation program — plus one real solver spec (``blocked_fw``,
+small N) proving the compiled alias and the runtime pointer round-trip on
+the CPU backend.  The full real-tree sweep runs under ``make analyze``.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    CHECKERS,
+    DonationSpec,
+    Project,
+    run_checks,
+    run_donation_checks,
+)
+from repro.analysis.donation import check_spec, default_specs
+
+pytestmark = pytest.mark.analysis
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURE = REPO / "tests" / "analysis_fixtures" / "badrepo"
+
+
+def fixture_findings(check):
+    return run_checks(Project(FIXTURE), [check])
+
+
+def lines_for(findings, path_tail):
+    return [f.line for f in findings if f.path.endswith(path_tail)]
+
+
+# ---------------------------------------------------------------------------
+# registry / CLI surface
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_five_checks():
+    assert set(CHECKERS) == {
+        "unfused-dispatch",
+        "semiring-hardcode",
+        "trace-impurity",
+        "autotune-key",
+        "donation",
+    }
+    for c in CHECKERS.values():
+        assert c.name and c.description
+
+
+def test_unknown_check_rejected():
+    with pytest.raises(ValueError, match="unknown check"):
+        run_checks(Project(FIXTURE), ["no-such-check"])
+
+
+# ---------------------------------------------------------------------------
+# tier A: each checker fires on its fixture
+# ---------------------------------------------------------------------------
+
+def test_unfused_dispatch_fires_on_fixture():
+    fs = fixture_findings("unfused-dispatch")
+    got = lines_for(fs, "core/badsolver.py")
+    # import, bare minplus, accumulate sweep, .copy()
+    assert got == [3, 7, 8, 9]
+
+
+def test_semiring_hardcode_fires_on_fixture():
+    fs = fixture_findings("semiring-hardcode")
+    got = lines_for(fs, "kernels/badkernel.py")
+    # jnp.add, jnp.min reduction, jnp.minimum
+    assert got == [6, 7, 8]
+
+
+def test_trace_impurity_fires_on_fixture():
+    fs = fixture_findings("trace-impurity")
+    msgs = {f.line: f.message for f in fs if f.path.endswith("badpurity.py")}
+    assert 17 in msgs and "`if`" in msgs[17]          # if on traced
+    assert 19 in msgs and "`while`" in msgs[19]       # while on traced
+    assert 21 in msgs and "time.time" in msgs[21]     # clock at trace time
+    assert 22 in msgs and "float()" in msgs[22]       # host sync
+    assert 23 in msgs and ".item()" in msgs[23]       # host sync
+    assert 24 in msgs and "np.asarray" in msgs[24]    # numpy round-trip
+    # transitive reachability: helper() is only reached through the seed
+    assert 10 in msgs and "transitive" in msgs[10]
+
+
+def test_autotune_key_fires_on_fixture():
+    fs = fixture_findings("autotune-key")
+    blind = [f for f in fs if f.path.endswith("kernels/autotune.py")]
+    site = [f for f in fs if f.path.endswith("core/baddispatch.py")]
+    assert len(blind) == 1 and "flavor" in blind[0].message
+    assert len(site) == 1 and "flavor" in site[0].message
+
+
+# ---------------------------------------------------------------------------
+# tier A: quiet on the real tree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("check", [
+    "unfused-dispatch", "semiring-hardcode", "trace-impurity", "autotune-key",
+])
+def test_real_tree_clean(check):
+    assert run_checks(Project(REPO), [check]) == []
+
+
+# ---------------------------------------------------------------------------
+# pragma suppression round-trip
+# ---------------------------------------------------------------------------
+
+def test_pragma_line_scope_roundtrip():
+    fs = fixture_findings("unfused-dispatch")
+    got = lines_for(fs, "core/pragma_demo.py")
+    assert got == [7]           # line 6 carries the allow pragma, line 7 fires
+
+
+def test_pragma_file_scope():
+    fs = fixture_findings("unfused-dispatch")
+    assert lines_for(fs, "core/pragma_filescope.py") == []
+    # ...but the pragma only covers its named check
+    hard = fixture_findings("semiring-hardcode")
+    assert lines_for(hard, "core/pragma_filescope.py") == [7]
+
+
+# ---------------------------------------------------------------------------
+# tier B: donation sanitizer on synthetic specs (small, CPU-fast)
+# ---------------------------------------------------------------------------
+
+def _stub_spec(fn_builder, donated=(0,), alias_out=None, name="stub"):
+    return DonationSpec(name=name, path="tests/test_analysis.py",
+                        make=fn_builder, donated=donated, alias_out=alias_out)
+
+
+def test_donation_dropped_stub_flagged():
+    import jax
+    import jax.numpy as jnp
+
+    # output shape () can never alias the (8, 8) donated input -> dropped
+    f = jax.jit(lambda x: jnp.sum(x), donate_argnums=(0,))
+    spec = _stub_spec(lambda: (f, (jnp.ones((8, 8)),), {}))
+    msgs = [x.message for x in check_spec(spec)]
+    assert any("no output to alias" in m for m in msgs)
+    assert any("dropped" in m for m in msgs)     # jax warned, we caught it
+
+
+def test_donation_clean_stub_quiet():
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+    spec = _stub_spec(lambda: (f, (jnp.ones((8, 8)),), {}),
+                      alias_out=lambda r: r)
+    assert check_spec(spec) == []
+
+
+def test_read_after_donation_flagged():
+    import jax
+    import jax.numpy as jnp
+
+    # out0 aliases the donated x; the second equation reads x *after*
+    # out0 exists — the donation-defeating pattern the jaxpr walk catches
+    def f(x):
+        y = x * 2.0
+        s = x + 1.0
+        return y, s
+
+    jf = jax.jit(f, donate_argnums=(0,))
+    spec = _stub_spec(lambda: (jf, (jnp.ones((8, 8)),), {}))
+    msgs = [x.message for x in check_spec(spec)]
+    assert any("read by equation" in m for m in msgs)
+
+
+def test_run_donation_checks_accepts_custom_specs():
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x * 1.5, donate_argnums=(0,))
+    spec = _stub_spec(lambda: (f, (jnp.ones((4, 4)),), {}))
+    assert run_donation_checks([spec], wrappers=False) == []
+
+
+# ---------------------------------------------------------------------------
+# tier B: one real solver spec — blocked_fw in-place proof on CPU
+# ---------------------------------------------------------------------------
+
+def test_blocked_fw_donation_aliases_on_cpu():
+    specs = {s.name: s for s in default_specs()}
+    spec = specs["blocked_fw[fused]"]
+    assert spec.alias_out is not None     # the pointer proof is armed
+    assert check_spec(spec) == []
+
+
+def test_donation_checker_skips_fixture_trees():
+    donation = CHECKERS["donation"]
+    assert list(donation.run(Project(FIXTURE))) == []

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Run the repro invariant checkers (``src/repro/analysis``) over the tree.
+
+Usage:
+    PYTHONPATH=src python tools/analyze.py                 # all checks, human
+    PYTHONPATH=src python tools/analyze.py --json          # machine-readable
+    PYTHONPATH=src python tools/analyze.py --checks unfused-dispatch,donation
+    PYTHONPATH=src python tools/analyze.py --list          # registered checks
+    PYTHONPATH=src python tools/analyze.py --root <tree>   # fixture trees
+
+Exit status: 0 = clean, 1 = findings, 2 = usage error.  Suppress deliberate
+exceptions at the flagged line with ``# repro: allow-<check>  <why>`` (or a
+standalone comment line for file scope).
+
+``--json`` emits ``{"schema": 1, "checks": [...], "findings": [...]}``;
+``ANALYZE_baseline.json`` in the repo root is the committed baseline of that
+output on a clean tree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import CHECKERS, Project, run_checks  # noqa: E402
+
+SCHEMA = 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true", help="JSON output")
+    ap.add_argument(
+        "--checks", default=None,
+        help="comma-separated check names (default: all registered)",
+    )
+    ap.add_argument(
+        "--root", default=str(REPO),
+        help="project root to analyze (default: this repo)",
+    )
+    ap.add_argument("--list", action="store_true",
+                    help="list registered checks and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(CHECKERS):
+            print(f"{name:20s} {CHECKERS[name].description}")
+        return 0
+
+    names = (
+        [c.strip() for c in args.checks.split(",") if c.strip()]
+        if args.checks else None
+    )
+    project = Project(args.root)
+    try:
+        findings = run_checks(project, names)
+    except ValueError as e:
+        print(f"analyze: {e}", file=sys.stderr)
+        return 2
+
+    selected = names if names is not None else sorted(CHECKERS)
+    if args.json:
+        print(json.dumps(
+            {
+                "schema": SCHEMA,
+                "checks": selected,
+                "findings": [f.to_json() for f in findings],
+            },
+            indent=1, sort_keys=True,
+        ))
+    else:
+        for f in findings:
+            print(f.format())
+        n = len(findings)
+        tick = "clean" if not n else f"{n} finding{'s' if n != 1 else ''}"
+        print(f"analyze: {len(selected)} check(s) over "
+              f"{len(project.files())} file(s): {tick}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,101 +1,40 @@
-"""Dispatch-convention lint: solver modules must use the fused kernels.
+"""Back-compat alias: the dispatch-convention lint, now framework-hosted.
 
-The ISSUE-2 convention, promoted from a review-time grep to a real gate
-(``make lint-dispatch``, part of ``make check``): solver code in
-``repro.core`` never calls the unfused semiring product (module-level
-``minplus`` / ``minplus_pred`` from ``core.semiring``) or follows a product
-with a separate elementwise ``jnp.minimum`` / ``jnp.maximum`` accumulate
-sweep — everything routes through ``repro.kernels.ops`` (``kops.minplus``
-fused-accumulate family), which is the single tuned dispatch surface.
-
-Since the bandwidth-optimal-core rework (ISSUE 5) the same gate enforces
-the **no-copy convention**: solver round bodies never materialize a
-full-matrix copy (``.copy()`` / ``jnp.copy`` / copying ``jnp.array``
-constructors) — state is threaded through the fused round dispatches and,
-at the API boundary, moved by buffer donation (``donate=``), not
-duplicated.
-
-Allowed escapes:
-  * the paper-faithful 3D formulation (``minplus_3d``) — a different name,
-    deliberately not flagged;
-  * a line ending in ``# lint: allow-unfused`` — for elementwise uses that
-    are not accumulate sweeps (e.g. the SPD feature cap);
-  * a line ending in ``# lint: allow-copy`` — for host-side defensive
-    copies outside any round body (e.g. returning an owned cost matrix to
-    a caller).
-
-Exit code 1 with file:line diagnostics on violation.
+The ISSUE-2/ISSUE-5 regex lint migrated to ``repro.analysis`` as the
+AST-based ``unfused-dispatch`` checker (same rules, same legacy
+``# lint: allow-unfused`` / ``# lint: allow-copy`` pragmas, comment
+mentions can no longer trip it).  ``make lint-dispatch`` keeps working
+through this shim; the full suite is ``make analyze`` /
+``tools/analyze.py``.
 """
 
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-# solver modules under the convention (core/semiring.py itself hosts the
-# plain primitives and is exempt; kernels/ implement the dispatch surface)
-SOLVER_FILES = [
-    "src/repro/core/floyd_warshall.py",
-    "src/repro/core/blocked_fw.py",
-    "src/repro/core/rkleene.py",
-    "src/repro/core/distributed.py",
-    "src/repro/core/apsp.py",
-    "src/repro/core/dynamic.py",
-    "src/repro/core/paths.py",
-]
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
 
-PRAGMA = "lint: allow-unfused"
-PRAGMA_COPY = "lint: allow-copy"
-
-BANNED = [
-    # separate elementwise accumulate sweep after a product
-    (re.compile(r"\bjnp\.(minimum|maximum)\s*\("),
-     "separate elementwise accumulate (use the fused kernels.ops dispatch)",
-     PRAGMA),
-    # unfused semiring product: bare minplus()/minplus_pred() not routed
-    # through the kernels.ops dispatch (kops./ops./_kops. prefixes pass;
-    # minplus_3d / minplus_xla are different names and do not match)
-    (re.compile(r"(?<![\w.])minplus(_pred)?\s*\("),
-     "unfused semiring.minplus (route through repro.kernels.ops)",
-     PRAGMA),
-    # importing the unfused primitives into a solver is the same smell
-    (re.compile(r"from\s+[.\w]*semiring\s+import\s+[^#\n]*\bminplus\b"),
-     "importing the unfused semiring product into a solver",
-     PRAGMA),
-    # un-donated full-matrix copies in solver bodies (the ISSUE-5 no-copy
-    # convention): state moves by donation, not duplication
-    (re.compile(r"\.copy\s*\(\s*\)|\bjnp\.copy\s*\(|\bjnp\.array\s*\("),
-     "full-matrix copy in a solver (thread state via buffer donation "
-     "instead; see blocked_fw/rkleene donate=)",
-     PRAGMA_COPY),
-]
+from repro.analysis import Project, run_checks  # noqa: E402
 
 
 def lint(root: Path) -> int:
-    errors = []
-    for rel in SOLVER_FILES:
-        path = root / rel
-        if not path.exists():
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            code = line.split("#", 1)[0]          # ignore comment-only hits
-            for pat, why, pragma in BANNED:
-                if pragma in line:
-                    continue
-                if pat.search(code):
-                    errors.append(f"{rel}:{lineno}: {why}\n    {line.strip()}")
-    if errors:
-        print("dispatch-convention violations:\n" + "\n".join(errors))
-        print(f"\n{len(errors)} violation(s).  Route solver products through "
-              "repro.kernels.ops (fused accumulate / fused argmin); append "
-              f"'# {PRAGMA}' only for non-accumulate elementwise uses and "
-              f"'# {PRAGMA_COPY}' only for host-side copies outside round "
-              "bodies.")
+    project = Project(root)
+    findings = run_checks(project, ["unfused-dispatch"])
+    if findings:
+        print("dispatch-convention violations:")
+        for f in findings:
+            print(f.format())
+        print(f"\n{len(findings)} violation(s).  Route solver products "
+              "through repro.kernels.ops (fused accumulate / fused argmin); "
+              "append '# lint: allow-unfused' only for non-accumulate "
+              "elementwise uses and '# lint: allow-copy' only for host-side "
+              "copies outside round bodies.")
         return 1
-    print(f"lint-dispatch: {len(SOLVER_FILES)} solver modules clean")
+    print("lint-dispatch: clean (unfused-dispatch via repro.analysis)")
     return 0
 
 
 if __name__ == "__main__":
-    sys.exit(lint(Path(__file__).resolve().parent.parent))
+    sys.exit(lint(REPO))
