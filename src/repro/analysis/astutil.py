@@ -16,6 +16,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 __all__ = [
     "dotted",
     "walk_calls",
+    "walk_source_order",
     "ModuleInfo",
     "module_rel_for",
     "literal_str_tuple",
@@ -38,6 +39,21 @@ def walk_calls(tree: ast.AST) -> Iterator[ast.Call]:
     for node in ast.walk(tree):
         if isinstance(node, ast.Call):
             yield node
+
+
+def walk_source_order(node: ast.AST) -> Iterator[ast.AST]:
+    """Pre-order DFS over ``node``'s descendants, in source order.
+
+    ``ast.walk`` is breadth-first: a statement nested inside an ``if``/loop
+    body is visited *after* every later top-level sibling, which breaks any
+    pass whose state must evolve in program order (e.g. taint propagation
+    through assignments).  Child fields of every statement/expression node
+    are declared in source order, so a depth-first pre-order walk yields
+    nodes as they appear in the file.
+    """
+    for child in ast.iter_child_nodes(node):
+        yield child
+        yield from walk_source_order(child)
 
 
 def module_rel_for(rel: str, module: str, level: int) -> Optional[str]:

@@ -15,7 +15,8 @@ Two tiers share the protocol:
 * **Tier B (jaxpr/HLO)** — the donation sanitizer (``analysis.donation``)
   imports the solvers, traces their donating jits with abstract inputs, and
   walks the closed jaxpr + compiled executable.  It only runs when the
-  project root is the real repo (fixture trees are not importable).
+  analyzed tree contains the solver sources (fixture trees are not
+  importable and are skipped with a notice).
 
 Suppression: a finding is dropped when its source line carries
 ``# repro: allow-<check>`` (per-line) or the file contains a standalone

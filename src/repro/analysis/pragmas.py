@@ -8,7 +8,10 @@ Two scopes, one syntax:
 * **Per-file** — a *standalone* comment line anywhere in the file reading
   ``# repro: allow-<check>  <justification>`` suppresses that check for the
   whole file (used for modules that are deliberately outside a convention,
-  e.g. a documented tropical-only feature path).
+  e.g. a documented tropical-only feature path).  The line must *begin*
+  with the pragma — a commented-out line of code that happened to carry a
+  per-line pragma, or a comment merely mentioning the syntax, is not a
+  file-scope suppression.
 
 The migrated ``unfused-dispatch`` checker keeps its legacy spelling working
 (``# lint: allow-unfused`` / ``# lint: allow-copy``) so the PR 2-5 pragma
@@ -26,6 +29,8 @@ __all__ = ["line_allows", "file_allows", "pragmas_on_line"]
 # "# repro: allow-foo,allow-bar some justification text"
 _PRAGMA_RE = re.compile(r"#\s*repro:\s*([^#]*)")
 _ALLOW_RE = re.compile(r"allow-([A-Za-z0-9_-]+)")
+# file scope demands the whole line BE the pragma, not merely contain one
+_FILE_PRAGMA_RE = re.compile(r"^#\s*repro:\s*allow-")
 
 
 def pragmas_on_line(line: str) -> Set[str]:
@@ -41,9 +46,11 @@ def line_allows(line: str, check: str) -> bool:
 
 
 def file_allows(lines: Iterable[str], check: str) -> bool:
-    """True when a standalone comment line carries the pragma (file scope)."""
+    """True when a standalone comment line *starting with* the pragma names
+    ``check`` (file scope).  Commented-out code that carried a per-line
+    pragma, or prose mentioning the syntax, does not count."""
     for line in lines:
         stripped = line.strip()
-        if stripped.startswith("#") and check in pragmas_on_line(stripped):
+        if _FILE_PRAGMA_RE.match(stripped) and check in pragmas_on_line(stripped):
             return True
     return False

@@ -45,7 +45,7 @@ from __future__ import annotations
 import ast
 from typing import Dict, Iterator, List, Optional, Set, Tuple
 
-from .astutil import ModuleInfo, dotted, literal_str_tuple
+from .astutil import ModuleInfo, dotted, literal_str_tuple, walk_source_order
 from .base import Checker, Finding, Project, register_checker
 
 __all__ = ["TraceImpurityChecker"]
@@ -248,9 +248,12 @@ class TraceImpurityChecker(Checker):
 
         where = f"in jit-reachable `{qual}` ({'direct' if statics is not None else 'transitive'})"
 
-        for node in ast.walk(fn):
-            # propagate taint through simple assignments (walk order is
-            # source order for the flat function bodies this tree has)
+        # depth-first source-order traversal: taint introduced by an
+        # assignment inside a nested if/for/while body must be visible to
+        # every statement that executes after it (ast.walk is breadth-first
+        # and would visit later top-level siblings before nested bodies)
+        for node in walk_source_order(fn):
+            # propagate taint through simple assignments
             if isinstance(node, ast.Assign) and taint(node.value):
                 for tgt in node.targets:
                     for t in ast.walk(tgt):

@@ -22,4 +22,8 @@ def bad_branch(x):
     _v = float(jnp.sum(x))           # host sync
     _s = x.sum().item()              # host sync
     _a = np.asarray(x)               # host numpy round-trip
+    if x.ndim == 2:                  # static metadata branch: not flagged
+        z = x * 4.0                  # taint born inside a nested body
+    if z:                            # if on the nested-born taint
+        z = z + 1.0
     return helper(x)
