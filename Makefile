@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dynamic lint-dispatch analyze analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic
+.PHONY: test test-fast test-dynamic test-resilience lint-dispatch analyze analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic serve-chaos
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -13,6 +13,9 @@ test-fast:      ## smoke path: skip slow subprocess tests and O(n^3) oracle swee
 test-dynamic:   ## incremental-engine differential suite (update vs full recompute)
 	$(PY) -m pytest -x -q -m dynamic
 
+test-resilience:  ## serving-tier fault-tolerance suite (chaos, lifecycle, eviction)
+	$(PY) -m pytest -x -q -m resilience
+
 lint-dispatch:  ## back-compat alias: the unfused-dispatch check alone (see analyze)
 	$(PY) tools/lint_dispatch.py
 
@@ -22,9 +25,10 @@ analyze:        ## full invariant sweep: AST checkers + jaxpr/HLO donation sanit
 analyze-baseline:  ## regenerate the committed machine-readable clean baseline
 	$(PY) tools/analyze.py --json > ANALYZE_baseline.json
 
-check: analyze  ## invariant sweep + tier-1 (incl. dynamic suite) + oracle suite + bench gate
+check: analyze  ## invariant sweep + tier-1 (incl. dynamic suite) + oracle suite + chaos smoke + bench gate
 	$(PY) -m pytest -x -q -m "not oracle"
 	$(PY) -m pytest -q -m oracle tests/test_semiring_oracle.py
+	$(MAKE) serve-chaos
 	$(MAKE) bench-check
 
 bench:          ## paper-figure benchmark sweep (CSV to stdout + BENCH_apsp.json)
@@ -42,3 +46,9 @@ serve-apsp:     ## smoke the batched APSP serving loop
 serve-dynamic:  ## smoke the incremental (edge-update) serving loop
 	$(PY) -m repro.launch.serve --arch apsp --requests 32 --n-max 64 \
 		--mutate-rate 0.5 --graphs 2 --verify-every 8
+
+serve-chaos:    ## chaos smoke: seeded faults, zero poisoned answers, full recovery (non-zero exit on drift)
+	$(PY) -m repro.launch.serve --arch apsp --requests 48 --n-max 32 \
+		--mutate-rate 0.5 --graphs 3 --mutate-k 4 --verify-every 12 --seed 7 \
+		--fault-spec "nan:0.15,crash:0.1:3,latency:0.1:10,poison:0.1,mem:0.15:0.5" \
+		--deadline-ms 100 --mem-budget-mb 0.008 --backlog-watermark 4

@@ -1,0 +1,136 @@
+"""Serving-tier resilience under chaos: latency SLO + recovery headline.
+
+Drives an in-process :class:`repro.launch.pool.EnginePool` with a seeded
+load generator — interleaved edge-update batches and 8-point distance
+queries against ``graphs`` persistent engines — while the fault injector
+(``repro.launch.faults``) fires NaN updates, slot crashes, latency spikes,
+state poison, and memory-budget squeezes at it.  Reported numbers:
+
+* **p50 / p99 query latency** (ms) across *all* answered queries — live
+  and degraded alike, because the SLO covers what the client sees, not
+  just the happy path;
+* **updates/s and queries/s** sustained over the run;
+* **max recovery time** (s) from the first unhealthy transition of a slot
+  to its return to healthy, over every fault the run injected;
+* the degraded-answer mix (live / snapshot / shed / deadline-missed).
+
+The run *asserts* the resilience contract (the same one ``make
+serve-chaos`` gates on): zero poisoned answers served, and no slot left
+degraded or quarantined after the final ``recover_all`` — a benchmark
+that quietly served NaNs would be measuring the wrong system.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.graphgen import generate_edge_updates, generate_np
+from repro.launch.faults import FaultInjector, FaultSpec
+from repro.launch.pool import EnginePool, SlotState
+
+#: default chaos mix: every fault kind active, crash bursts longer than the
+#: default retry budget so the quarantine path is on the measured path.
+DEFAULT_SPEC = "nan:0.1,crash:0.08:3,latency:0.08:5,poison:0.08,mem:0.1:0.5"
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def run(n: int = 128, graphs: int = 3, requests: int = 200, k: int = 8,
+        mutate_rate: float = 0.5, seed: int = 0, method: str = "blocked_fw",
+        block_size: int = 64, fault_spec: str = DEFAULT_SPEC,
+        deadline_ms: float = 50.0, budget_engines: int = 0,
+        backlog_watermark: int = 4):
+    """Returns one row: latency percentiles, throughput, recovery times.
+
+    ``budget_engines`` > 0 caps the memory budget at that many live
+    engines (forcing LRU eviction + re-admission under load); 0 disables
+    the budget.
+    """
+    rng = np.random.default_rng(seed)
+    per_engine = n * n * 4
+    pool = EnginePool(
+        method=method, semiring="tropical",
+        solve_kw={"block_size": block_size} if method == "blocked_fw" else {},
+        deadline_s=deadline_ms / 1e3,
+        mem_budget_bytes=budget_engines * per_engine,
+        backlog_watermark=backlog_watermark,
+        injector=FaultInjector(FaultSpec.parse(fault_spec), seed=seed),
+        seed=seed,
+    )
+    t0 = time.perf_counter()
+    for gid in range(graphs):
+        pool.admit(gid, generate_np(rng, n, rho=60.0).h)
+    t_warm = time.perf_counter() - t0
+
+    latencies_ms = []
+    sources = {"live": 0, "snapshot": 0}
+    shed = missed = 0
+    t0 = time.perf_counter()
+    for _ in range(requests):
+        gid = int(rng.integers(0, graphs))
+        slot = pool.slots[gid]
+        if rng.uniform() < mutate_rate:
+            h = slot.engine.h if slot.engine is not None else slot._h
+            u, v, w = generate_edge_updates(
+                rng, h, int(rng.integers(1, k + 1)), worsen_frac=0.05)
+            pool.submit_update(gid, u, v, w)
+            if pool.backlog() > pool.backlog_watermark:
+                pool.drain_all()
+        else:
+            qi = rng.integers(0, n, 8)
+            qj = rng.integers(0, n, 8)
+            r = pool.query(gid, qi, qj)
+            latencies_ms.append(r.latency_s * 1e3)
+            sources[r.source] += 1
+            shed += int(r.shed)
+            missed += int(r.deadline_missed)
+    wall = time.perf_counter() - t0
+    pool.recover_all(readmit=True)
+    summary = pool.summary()
+    pool.close()
+
+    # the resilience contract — a chaos benchmark that serves poison or
+    # cannot heal is a failing benchmark, not a slow one
+    assert summary["pool"]["poisoned_served"] == 0, summary
+    bad = summary["states"][SlotState.DEGRADED] + summary["states"][SlotState.QUARANTINED]
+    assert bad == 0, f"unrecovered slots after recover_all: {summary['states']}"
+
+    rec = pool.recovery_times()
+    applied = summary["slots"]["updates_applied"]
+    row = {
+        "bench": "serve_resilience",
+        "n": n,
+        "graphs": graphs,
+        "requests": requests,
+        "fault_spec": fault_spec,
+        "deadline_ms": deadline_ms,
+        "budget_engines": budget_engines,
+        "warm_s": round(t_warm, 3),
+        "wall_s": round(wall, 3),
+        "query_p50_ms": round(_pct(latencies_ms, 50), 3),
+        "query_p99_ms": round(_pct(latencies_ms, 99), 3),
+        "queries_per_s": round(len(latencies_ms) / wall, 1) if wall > 0 else 0.0,
+        "updates_per_s": round(applied / wall, 1) if wall > 0 else 0.0,
+        "queries_live": sources["live"],
+        "queries_snapshot": sources["snapshot"],
+        "queries_shed": shed,
+        "deadline_misses": missed,
+        "updates_rejected": summary["pool"]["updates_rejected"],
+        "poison_blocked": summary["pool"]["poison_blocked"],
+        "poisoned_served": summary["pool"]["poisoned_served"],
+        "recoveries": len(rec),
+        "recovery_s_max": round(max(rec), 6) if rec else 0.0,
+        "recovery_s_p50": round(_pct(rec, 50), 6),
+        "faults_injected": summary["faults_injected"],
+        "final_states": summary["states"],
+    }
+    return [row]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

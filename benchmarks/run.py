@@ -88,6 +88,9 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         (r for r in all_rows if r.get("bench") == "dynamic_update_vs_resolve"),
         None,
     )
+    resilience = next(
+        (r for r in all_rows if r.get("bench") == "serve_resilience"), None
+    )
     payload = {
         "schema": 1,
         "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -105,6 +108,7 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         "fused_vs_unfused": fused,
         "fused_round": fused_round,
         "dynamic_update_vs_resolve": dynamic,
+        "serve_resilience": resilience,
         "rows": all_rows,
     }
     with open(path, "w") as f:
@@ -134,6 +138,7 @@ def main(argv=None) -> int:
         bench_graphgen,
         bench_minplus,
         bench_round,
+        bench_serve_resilience,
     )
 
     if args.smoke:
@@ -146,6 +151,9 @@ def main(argv=None) -> int:
                 n=128, block=32, reps=1)),
             ("dynamic_update", lambda: bench_dynamic.run(
                 n=128, k=8, reps=2, block_size=64)),
+            ("serve_resilience", lambda: bench_serve_resilience.run(
+                n=64, graphs=2, requests=60, k=4, budget_engines=1,
+                deadline_ms=100.0)),
         ]
     else:
         mode = "quick" if args.quick else "full"
@@ -169,6 +177,11 @@ def main(argv=None) -> int:
             ("dynamic_update", lambda: bench_dynamic.run(
                 n=256 if args.quick else 512, k=16,
                 reps=3 if args.quick else 5,
+                block_size=64 if args.quick else 128)),
+            ("serve_resilience", lambda: bench_serve_resilience.run(
+                n=128 if args.quick else 256,
+                graphs=3, requests=120 if args.quick else 300,
+                budget_engines=2, deadline_ms=50.0,
                 block_size=64 if args.quick else 128)),
         ]
 

@@ -22,6 +22,9 @@ Importing this package populates the registry:
 ``donation``           donating jits compile to real input/output aliases,
                        no read-after-donation, buffers actually consumed
                        (tier B, jaxpr/HLO — real repo only)
+``except-swallow``     serving-tier except handlers re-raise, transition
+                       slot state, or record the failure (tier A, AST,
+                       *advisory* — reported, never gates)
 ==================  =====================================================
 """
 
@@ -31,6 +34,7 @@ from . import semiring_hardcode as _semiring   # noqa: F401
 from . import purity as _purity                # noqa: F401
 from . import autotune_key as _autotune        # noqa: F401
 from . import donation as _donation            # noqa: F401
+from . import except_swallow as _swallow       # noqa: F401
 from .donation import DonationSpec, run_donation_checks
 
 __all__ = [

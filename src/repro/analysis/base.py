@@ -54,10 +54,12 @@ class Finding:
     line: int                 # 1-based; 0 = whole-module finding
     message: str
     snippet: str = ""
+    advisory: bool = False    # advisory findings report but never gate
 
     def format(self) -> str:
         loc = f"{self.path}:{self.line}" if self.line else self.path
-        out = f"{loc}: [{self.check}] {self.message}"
+        tag = f"{self.check}:advisory" if self.advisory else self.check
+        out = f"{loc}: [{tag}] {self.message}"
         if self.snippet:
             out += f"\n    {self.snippet}"
         return out
@@ -120,10 +122,13 @@ class Project:
 class Checker:
     """Base class for a registered check.  Subclasses set ``name`` (the
     pragma suffix: ``# repro: allow-<name>``) and ``description`` and
-    implement :meth:`run`."""
+    implement :meth:`run`.  ``advisory = True`` marks a check whose
+    findings are reported but never fail the gate (``tools/analyze.py``
+    exits 0 on advisory-only findings)."""
 
     name: str = ""
     description: str = ""
+    advisory: bool = False
 
     def run(self, project: Project) -> Iterator[Finding]:
         raise NotImplementedError
@@ -133,6 +138,7 @@ class Checker:
         return Finding(
             check=self.name, path=rel, line=line, message=message,
             snippet=project.line(rel, line).strip() if line else "",
+            advisory=self.advisory,
         )
 
 

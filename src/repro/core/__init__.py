@@ -12,7 +12,13 @@ from .apsp import (
     solve_batch,
 )
 from .blocked_fw import blocked_fw, blocked_fw_batch
-from .dynamic import DynamicAPSP
+from .dynamic import DynamicAPSP, domain_violations
+from .errors import (
+    APSPError,
+    InputValidationError,
+    NegativeCycleError,
+    UpdateError,
+)
 from .floyd_warshall import (
     fw_classic,
     fw_classic_batch,
@@ -57,4 +63,6 @@ __all__ = [
     "softmin_matmul", "tropical_eye",
     "Semiring", "SEMIRINGS", "get_semiring", "register_semiring",
     "semiring_eye",
+    "APSPError", "InputValidationError", "NegativeCycleError", "UpdateError",
+    "domain_violations",
 ]

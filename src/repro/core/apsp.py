@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .blocked_fw import blocked_fw, blocked_fw_batch
+from .errors import InputValidationError, NegativeCycleError
 from .floyd_warshall import (
     fw_classic,
     fw_classic_batch,
@@ -67,7 +68,61 @@ __all__ = [
     "METHODS",
     "BATCH_METHODS",
     "register_method",
+    "validate_cost_matrix",
+    "check_negative_cycles",
 ]
+
+
+def validate_cost_matrix(h, semiring: SemiringLike = "tropical") -> None:
+    """Input-boundary contract check shared by ``solve`` / ``solve_batch`` /
+    ``DynamicAPSP``: NaN entries are rejected with a typed
+    :class:`~repro.core.errors.InputValidationError` *before* any dispatch —
+    a NaN is absorbing under every registered ⊕/⊗ pair, so one poisoned
+    entry silently corrupts the whole closure.  Works on a single (n, n)
+    matrix or a (G, n, n) stack; host-side (syncs a device input — pass
+    ``validate=False`` at the entry points on hot paths that already
+    guarantee clean inputs)."""
+    a = np.asarray(h)
+    bad = np.isnan(a)
+    if bad.any():
+        idx = tuple(int(x) for x in np.argwhere(bad)[0])
+        sr = get_semiring(semiring)
+        raise InputValidationError(
+            f"cost matrix contains {int(bad.sum())} NaN entr"
+            f"{'y' if bad.sum() == 1 else 'ies'} (first at {idx}): NaN is "
+            f"absorbing under the {sr.name!r} semiring and would poison the "
+            "whole closure.  Clean the input (no-edge is the semiring zero, "
+            f"{sr.zero!r}) or pass validate=False to skip this check."
+        )
+
+
+def check_negative_cycles(
+    dist, semiring: Semiring, sizes: Optional[np.ndarray] = None
+) -> None:
+    """Tropical-only post-solve contract check: a strictly negative entry on
+    the *solved* diagonal means the graph contains a negative cycle, so
+    shortest-path distances are unbounded below and the returned matrix is
+    not meaningful — raise :class:`~repro.core.errors.NegativeCycleError`
+    instead of handing it back.  Detecting on the closure (not the input)
+    is exact: negative *edges* are fine, only a closed negative *walk*
+    drives ``dist[i, i]`` below the diagonal's one (0).  Accepts (n, n) or
+    (G, n, n); ``sizes`` restricts each graph's check to its true block
+    (padding diagonals are the semiring one by construction)."""
+    if semiring.name != "tropical":
+        return
+    d = np.asarray(dist)
+    diag = np.diagonal(d, axis1=-2, axis2=-1)
+    neg = diag < 0
+    if sizes is not None:
+        neg = neg & (np.arange(diag.shape[-1]) < np.asarray(sizes)[:, None])
+    if neg.any():
+        idx = tuple(int(x) for x in np.argwhere(neg)[0])
+        raise NegativeCycleError(
+            f"negative cycle detected: solved diagonal entry {idx} is "
+            f"{diag[neg].min():g} < 0, so tropical distances are unbounded "
+            "below.  Remove the cycle or pass validate=False to skip this "
+            "check (the returned matrix would be meaningless)."
+        )
 
 
 @dataclass
@@ -191,6 +246,7 @@ def solve(
     semiring: SemiringLike = "tropical",
     donate: Optional[bool] = None,
     dtype=None,
+    validate: bool = True,
     **kwargs,
 ) -> APSPResult:
     """Solve the all-pairs path problem on a dense cost matrix.
@@ -210,16 +266,26 @@ def solve(
     ``jnp.bfloat16`` selects the mixed-precision mode — bf16 distance
     state with f32 pivot/panel arithmetic, tropical-only, error contract
     in COMPAT.md §Precision & memory.
+
+    ``validate`` (default True): reject NaN input entries with a typed
+    ``InputValidationError`` before dispatch, and (tropical only) raise
+    ``NegativeCycleError`` when the solved diagonal goes negative instead
+    of returning meaningless distances.  Both checks sync the host; pass
+    ``validate=False`` on hot paths with guaranteed-clean inputs.
     """
     if method not in METHODS:
         raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
     sr = get_semiring(semiring)
+    if validate:
+        validate_cost_matrix(h, sr)
     target = jnp.float32 if dtype is None else jnp.dtype(dtype)
     x = jnp.asarray(h, target)
     if donate is None:
         donate = x is not h               # fresh copy -> safe to consume
     dist, pred = METHODS[method](x, with_pred, semiring=sr, donate=donate,
                                  **kwargs)
+    if validate:
+        check_negative_cycles(dist, sr)
     return APSPResult(dist=dist, pred=pred, method=method)
 
 
@@ -371,6 +437,7 @@ def solve_batch(
     semiring: SemiringLike = "tropical",
     donate: Optional[bool] = None,
     dtype=None,
+    validate: bool = True,
     **kwargs,
 ) -> BatchAPSPResult:
     """Solve the all-pairs path problem on a batch of independent graphs in
@@ -392,11 +459,19 @@ def solve_batch(
     padded stack whenever packing made a fresh buffer (always, except a
     full-size pre-stacked jax input), halving the resident batch state for
     the natively-batched in-place solvers; ``dtype=jnp.bfloat16`` selects
-    mixed precision (tropical only).
+    mixed precision (tropical only).  ``validate`` follows :func:`solve`
+    (NaN rejection per graph + tropical negative-cycle detection on each
+    unpadded diagonal; ``validate=False`` to skip on hot paths).
     """
     if method not in METHODS:
         raise ValueError(f"unknown APSP method {method!r}; have {sorted(METHODS)}")
     semiring = get_semiring(semiring)
+    if validate:
+        if hasattr(hs, "ndim"):
+            validate_cost_matrix(hs, semiring)
+        else:
+            for m in hs:
+                validate_cost_matrix(m, semiring)
     if bucket_by_size:
         if hasattr(hs, "ndim") and hs.ndim == 3:
             mats = [np.asarray(h) for h in hs]
@@ -416,6 +491,8 @@ def solve_batch(
             mats, sizes_, n, method, with_pred, semiring=semiring,
             donate=donate is not False, dtype=dtype, **kwargs
         )
+        if validate:
+            check_negative_cycles(dist, semiring, sizes=sizes_)
         return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes_, method=method)
     stack, sizes = pad_batch(hs, sizes, n_max=n_max, semiring=semiring)
     if dtype is not None:
@@ -424,4 +501,6 @@ def solve_batch(
         donate = stack is not hs          # fresh packed stack -> consume it
     dist, pred = _solve_stack(stack, with_pred, method, semiring=semiring,
                               donate=donate, **kwargs)
+    if validate:
+        check_negative_cycles(dist, semiring, sizes=sizes)
     return BatchAPSPResult(dist=dist, pred=pred, sizes=sizes, method=method)

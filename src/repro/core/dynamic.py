@@ -54,12 +54,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .apsp import next_pow2, solve
+from .apsp import next_pow2, solve, validate_cost_matrix
+from .errors import UpdateError
 from .floyd_warshall import init_pred
 from .paths import reconstruct_path, reconstruct_path_jit
 from .semiring import Semiring, SemiringLike, ceil_log2, get_semiring
 
-__all__ = ["DynamicAPSP"]
+__all__ = ["DynamicAPSP", "domain_violations"]
+
+
+def domain_violations(x, semiring: SemiringLike) -> np.ndarray:
+    """Boolean mask of entries outside the semiring's value domain — the
+    shared leak detector for update weights (reject before mutation) and
+    solved-state health probes (a poisoned closure must never be served).
+
+    NaN is invalid everywhere (absorbing under every ⊕/⊗ pair).  Per
+    instance: tropical values live in [0, +inf] (a negative entry is a
+    corrupted distance or a negative-cycle symptom, -inf is semiring
+    garbage), reliability in [0, 1], boolean in {0.0, 1.0}; bottleneck's
+    domain is all of [-inf, +inf] so only NaN is invalid.  Custom
+    registered semirings get the NaN-only check.
+    """
+    sr = get_semiring(semiring)
+    a = np.asarray(x)
+    bad = np.isnan(a)
+    if sr.name == "tropical":
+        bad = bad | (a < 0)
+    elif sr.name == "reliability":
+        bad = bad | (a < 0) | (a > 1)
+    elif sr.name == "boolean":
+        bad = bad | ((a != 0.0) & (a != 1.0))
+    return bad
 
 
 def _bucket_k(k: int) -> int:
@@ -208,6 +233,7 @@ class DynamicAPSP:
         semiring: SemiringLike = "tropical",
         resolve_threshold: float = 0.25,
         donate: bool = True,
+        validate: bool = True,
         **solve_kw,
     ):
         self._sr = get_semiring(semiring)
@@ -216,15 +242,19 @@ class DynamicAPSP:
         self._with_pred = bool(with_pred)
         self._solve_kw = dict(solve_kw)
         self._threshold = float(resolve_threshold)
+        self._validate = bool(validate)
         self._h = np.array(h, dtype=np.float32)
         if self._h.ndim != 2 or self._h.shape[0] != self._h.shape[1]:
             raise ValueError(f"h must be square, got {self._h.shape}")
+        if self._validate:
+            validate_cost_matrix(self._h, self._sr)
         self.stats: Dict[str, int] = {
             "rank_k": 0, "warm_resolve": 0, "full_resolve": 0, "noop": 0,
             "rank_k_passes": 0, "warm_iters": 0,
         }
         self._dist: Optional[jax.Array] = None
         self._pred: Optional[jax.Array] = None
+        self._version = 0
         self.solve_full()
 
     # -- state accessors ---------------------------------------------------
@@ -250,13 +280,76 @@ class DynamicAPSP:
     def semiring(self) -> Semiring:
         return self._sr
 
+    @property
+    def version(self) -> int:
+        """Monotone state-version counter: bumps on every state-changing
+        update and every full re-solve.  Snapshots carry the version they
+        were taken at, so a serving tier can tag stale answers with an
+        exact updates-behind count."""
+        return self._version
+
     def solve_full(self) -> None:
         """Full re-solve from the current cost matrix (the last resort)."""
         r = solve(
             self._h, method=self._method, with_pred=self._with_pred,
-            semiring=self._sr, **self._solve_kw,
+            semiring=self._sr, validate=self._validate, **self._solve_kw,
         )
         self._dist, self._pred = r.dist, r.pred
+        self._version += 1
+
+    # -- serving-tier hooks (snapshot + health) ----------------------------
+
+    def snapshot(self) -> Dict:
+        """Host-side copy of the solved state: ``{"dist", "pred", "h",
+        "version"}`` as numpy arrays.  The copies are donation-safe by
+        construction — a later in-place (donating) update consumes the
+        engine's *device* buffers, never these host arrays — so a serving
+        tier can keep the snapshot as its last-known-good answer source
+        while updates mutate the live state."""
+        return {
+            "dist": np.array(self._dist),            # lint: allow-copy (host snapshot, donation-safe)
+            "pred": None if self._pred is None else np.array(self._pred),  # lint: allow-copy (host snapshot)
+            "h": self._h.copy(),                     # lint: allow-copy (host-side, owned)
+            "version": self._version,
+        }
+
+    def health_probe(self, n_samples: int = 64, rng=None) -> Dict:
+        """Cheap invariant probe over the live state; returns ``{"ok",
+        "domain_violations", "triangle_violations", "edge_violations"}``.
+
+        Three layers, cheapest first: (1) **domain leak** — any entry of
+        ``dist`` outside the semiring's value domain (NaN anywhere, negative
+        tropical distance, reliability outside [0, 1]; see
+        :func:`domain_violations`); (2) **edge dominance** — the closure
+        must weakly dominate every direct edge (``h`` strictly better than
+        ``dist`` anywhere means the state misses an applied update);
+        (3) **triangle spot check** — ``n_samples`` sampled (i, k, j)
+        triples must satisfy ``dist[i,j] ⊕ (dist[i,k] ⊗ dist[k,j]) ==
+        dist[i,j]`` up to float tolerance.  All host-side on synced copies;
+        O(n² + samples), no O(n³) work — this is a *probe*, the full
+        differential oracle remains ``verify``-style cold-solve compare.
+        """
+        sr = self._sr
+        d = np.asarray(self._dist)
+        out: Dict = {
+            "ok": True,
+            "domain_violations": int(domain_violations(d, sr).sum()),
+            "edge_violations": 0,
+            "triangle_violations": 0,
+        }
+        if out["domain_violations"]:
+            out["ok"] = False
+            return out                   # arithmetic below would hit the NaNs
+        close = partial(np.isclose, rtol=1e-5, atol=1e-5)
+        edge = np.asarray(sr.better(self._h, d)) & ~close(self._h, d)
+        out["edge_violations"] = int(edge.sum())
+        rng = np.random.default_rng(0) if rng is None else rng
+        i, k, j = rng.integers(0, self.n, (3, max(int(n_samples), 1)))
+        cand = np.asarray(sr.mul(d[i, k], d[k, j]))
+        tri = np.asarray(sr.better(cand, d[i, j])) & ~close(cand, d[i, j])
+        out["triangle_violations"] = int(tri.sum())
+        out["ok"] = not (out["edge_violations"] or out["triangle_violations"])
+        return out
 
     # -- updates -----------------------------------------------------------
 
@@ -273,15 +366,28 @@ class DynamicAPSP:
         v = np.asarray(v, np.int32).ravel()
         w = np.asarray(w, np.float32).ravel()
         if not (u.shape == v.shape == w.shape):
-            raise ValueError("u, v, w must have matching lengths")
+            raise UpdateError("u, v, w must have matching lengths")
         n = self.n
         if u.size and (u.min() < 0 or u.max() >= n or v.min() < 0 or v.max() >= n):
-            raise ValueError(f"edge endpoints out of range for n={n}")
+            raise UpdateError(f"edge endpoints out of range for n={n}")
         if np.any(u == v):
-            raise ValueError(
+            raise UpdateError(
                 "self-loop updates are not allowed: the diagonal is the "
                 "semiring one by convention"
             )
+        if self._validate:
+            bad = domain_violations(w, self._sr)
+            # the semiring zero (= delete edge) is always a legal weight,
+            # even where the value domain excludes it (reliability 0 is both)
+            bad &= w != np.float32(self._sr.zero)
+            if bad.any():
+                i = int(np.argmax(bad))
+                raise UpdateError(
+                    f"update batch rejected: {int(bad.sum())} weight(s) "
+                    f"outside the {self._sr.name!r} domain (first: edge "
+                    f"({int(u[i])}, {int(v[i])}) -> {w[i]!r}); engine state "
+                    "is unchanged.  Pass validate=False to skip this check."
+                )
         if u.size > 1:
             flat = u.astype(np.int64) * n + v
             # last occurrence of each (u, v) wins — streaming set semantics
@@ -345,6 +451,7 @@ class DynamicAPSP:
         )
         self.stats["rank_k"] += 1
         self.stats["rank_k_passes"] += int(passes)
+        self._version += 1
         info.update(path="rank_k", k_padded=k, passes=int(passes))
         return info
 
@@ -385,6 +492,7 @@ class DynamicAPSP:
         )
         self.stats["warm_resolve"] += 1
         self.stats["warm_iters"] += int(iters)
+        self._version += 1
         info.update(path="warm_resolve", iters=int(iters))
         return info
 

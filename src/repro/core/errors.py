@@ -1,0 +1,48 @@
+"""Typed error hierarchy for the APSP stack.
+
+The serving tier (``repro.launch.pool``) routes on these: an
+:class:`UpdateError` means a poisoned *request* was rejected before it
+touched engine state (the slot stays healthy); a
+:class:`NegativeCycleError` / :class:`InputValidationError` means the
+*problem instance* is outside the solver's contract and no answer exists
+(silently returning one would be the real failure).  Everything derives
+from :class:`APSPError` so callers can catch the whole family without
+swallowing unrelated bugs.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "APSPError",
+    "InputValidationError",
+    "NegativeCycleError",
+    "UpdateError",
+]
+
+
+class APSPError(Exception):
+    """Base class for typed APSP solver/serving errors."""
+
+
+class InputValidationError(APSPError, ValueError):
+    """A cost matrix violates the input contract (e.g. NaN entries).
+
+    Raised by ``solve`` / ``solve_batch`` / ``DynamicAPSP`` when
+    ``validate=True`` (the default); pass ``validate=False`` on hot paths
+    that already guarantee clean inputs.
+    """
+
+
+class NegativeCycleError(InputValidationError):
+    """The solved tropical diagonal went negative: the graph contains a
+    negative cycle, so "shortest path" is unbounded below and every
+    returned distance would be meaningless.  Detected from the solved
+    closure (``dist[i, i] < 0`` for some i) rather than the input — a
+    negative *edge* is fine, a negative *cycle* is not."""
+
+
+class UpdateError(APSPError, ValueError):
+    """An edge-update batch was rejected before mutating engine state:
+    NaN / out-of-domain weights, bad endpoints, or malformed shape.  The
+    engine's ``(dist, pred, h)`` are untouched — the caller may drop the
+    batch and keep serving."""

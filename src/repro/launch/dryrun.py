@@ -128,7 +128,7 @@ def _mem_dict(mem) -> dict:
             "total_gb": (total - getattr(mem, "alias_size_in_bytes", 0)) / 1e9,
         }
         return d
-    except AttributeError:
+    except AttributeError:  # repro: allow-except-swallow  best-effort repr fallback, no slot state here
         return {"repr": str(mem)[:500]}
 
 

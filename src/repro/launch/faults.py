@@ -1,0 +1,192 @@
+"""Deterministic fault injection (chaos layer) for the serving tier.
+
+The resilient pool (``repro.launch.pool``) is only trustworthy if its
+failure paths are *exercised*, not just written — this module injects the
+faults the pool claims to survive, seeded so every chaos run is exactly
+reproducible (same spec + seed + request stream => same faults at the same
+requests).  ``serve.py --fault-spec`` and
+``benchmarks/bench_serve_resilience.py`` both drive it.
+
+Fault-spec grammar (also documented in COMPAT.md §Serving resilience)::
+
+    spec      := entry ("," entry)*
+    entry     := kind ":" rate [":" param]
+    kind      := "nan" | "crash" | "latency" | "poison" | "mem"
+    rate      := float in [0, 1]    (per-opportunity probability)
+    param     := kind-specific number
+
+    nan:R          an update batch gets one weight replaced by NaN
+                   (must be *rejected* at the validation boundary)
+    crash:R[:C]    applying an update raises InjectedCrash; C = consecutive
+                   failures per injection (default 1; > max_retries forces
+                   the quarantine path)
+    latency:R[:MS] a latency spike of MS milliseconds (default 20) before a
+                   dispatch (exercises deadlines / degraded answers)
+    poison:R       one off-diagonal entry of the *solved state* is
+                   overwritten with NaN after a successful update (a
+                   simulated kernel fault; must be caught by health probes,
+                   never served)
+    mem:R[:F]      the pool's memory budget is transiently scaled by F
+                   (default 0.5) for one admission decision (forces LRU
+                   eviction + later re-admission)
+
+Example: ``nan:0.15,crash:0.1:3,latency:0.1:30,poison:0.08,mem:0.05:0.5``.
+
+Each injection point draws from its *own* seeded generator, so enabling one
+fault kind never shifts another kind's schedule — runs stay comparable
+across specs.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultInjector", "InjectedCrash", "NULL_INJECTOR"]
+
+
+class InjectedCrash(RuntimeError):
+    """A chaos-injected transient failure of one engine operation.  The
+    pool treats it like any transient update failure: bounded retry with
+    backoff, then quarantine."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Parsed fault rates + parameters (see module docstring grammar)."""
+
+    nan: float = 0.0
+    crash: float = 0.0
+    crash_count: int = 1
+    latency: float = 0.0
+    latency_ms: float = 20.0
+    poison: float = 0.0
+    mem: float = 0.0
+    mem_frac: float = 0.5
+
+    KINDS = ("nan", "crash", "latency", "poison", "mem")
+
+    @classmethod
+    def parse(cls, text: Optional[str]) -> "FaultSpec":
+        """Parse the ``kind:rate[:param]`` grammar; '' / None => no faults."""
+        if not text:
+            return cls()
+        kw: Dict[str, float] = {}
+        for entry in text.split(","):
+            parts = [p.strip() for p in entry.split(":")]
+            if len(parts) < 2 or parts[0] not in cls.KINDS:
+                raise ValueError(
+                    f"bad fault-spec entry {entry!r}: expected "
+                    f"kind:rate[:param] with kind in {cls.KINDS}"
+                )
+            kind = parts[0]
+            try:
+                rate = float(parts[1])
+                param = float(parts[2]) if len(parts) > 2 else None
+            except ValueError:
+                raise ValueError(f"bad number in fault-spec entry {entry!r}") from None
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"rate out of [0, 1] in fault-spec entry {entry!r}")
+            if len(parts) > 3:
+                raise ValueError(f"too many fields in fault-spec entry {entry!r}")
+            kw[kind] = rate
+            if param is not None:
+                if kind == "crash":
+                    kw["crash_count"] = int(param)
+                elif kind == "latency":
+                    kw["latency_ms"] = param
+                elif kind == "mem":
+                    kw["mem_frac"] = param
+                else:
+                    raise ValueError(
+                        f"fault kind {kind!r} takes no parameter ({entry!r})"
+                    )
+        return cls(**kw)
+
+    def any(self) -> bool:
+        return any(getattr(self, k) > 0 for k in self.KINDS)
+
+
+@dataclass
+class FaultInjector:
+    """Seeded injector: one independent generator per fault kind, a counter
+    per kind in ``counts``, and an ``events`` log the benchmarks read to
+    align injected faults with recovery times."""
+
+    spec: FaultSpec = field(default_factory=FaultSpec)
+    seed: int = 0
+
+    def __post_init__(self):
+        root = np.random.default_rng(self.seed)
+        self._rng = {
+            kind: np.random.default_rng(root.integers(0, 2**63))
+            for kind in FaultSpec.KINDS
+        }
+        self.counts: Dict[str, int] = {k: 0 for k in FaultSpec.KINDS}
+        self.events: list = []
+        self._pending_crashes = 0
+
+    def _fire(self, kind: str) -> bool:
+        rate = getattr(self.spec, kind)
+        if rate <= 0.0:
+            return False
+        if self._rng[kind].uniform() >= rate:
+            return False
+        self.counts[kind] += 1
+        self.events.append({"t": time.monotonic(), "kind": kind})
+        return True
+
+    # -- injection points (called by the pool) ------------------------------
+
+    def corrupt_update(self, w: np.ndarray) -> Tuple[np.ndarray, bool]:
+        """Maybe replace one update weight with NaN; returns (w', injected)."""
+        if w.size and self._fire("nan"):
+            w = w.copy()
+            w[int(self._rng["nan"].integers(0, w.size))] = np.nan
+            return w, True
+        return w, False
+
+    def maybe_crash(self) -> None:
+        """Raise :class:`InjectedCrash` at the injected schedule.  One
+        injection yields ``crash_count`` consecutive raises, so a count
+        above the pool's ``max_retries`` exercises the quarantine path."""
+        if self._pending_crashes > 0:
+            self._pending_crashes -= 1
+            raise InjectedCrash("injected crash (sticky)")
+        if self._fire("crash"):
+            self._pending_crashes = max(int(self.spec.crash_count) - 1, 0)
+            raise InjectedCrash("injected crash")
+
+    def maybe_latency(self) -> float:
+        """Maybe sleep a spike; returns the injected seconds (0 if none)."""
+        if self._fire("latency"):
+            s = self.spec.latency_ms / 1e3
+            time.sleep(s)
+            return s
+        return 0.0
+
+    def maybe_poison_state(self, engine) -> Optional[Tuple[int, int]]:
+        """Maybe overwrite one off-diagonal solved-state entry with NaN (a
+        simulated kernel fault downstream of validation); returns the
+        poisoned index or None."""
+        if not self._fire("poison"):
+            return None
+        n = engine.n
+        rng = self._rng["poison"]
+        i = int(rng.integers(0, n))
+        j = int((i + 1 + rng.integers(0, n - 1)) % n)
+        engine._dist = engine._dist.at[i, j].set(np.nan)
+        return (i, j)
+
+    def maybe_mem_squeeze(self, budget_bytes: int) -> int:
+        """Maybe scale a memory budget for one admission decision."""
+        if budget_bytes > 0 and self._fire("mem"):
+            return max(int(budget_bytes * self.spec.mem_frac), 1)
+        return budget_bytes
+
+
+#: shared no-op injector (all rates zero) for pools without chaos.
+NULL_INJECTOR = FaultInjector(FaultSpec(), seed=0)

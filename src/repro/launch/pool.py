@@ -1,0 +1,669 @@
+"""Supervised engine pool: the resilient serving tier over ``DynamicAPSP``.
+
+``serve.py --arch apsp --mutate-rate`` used to hold bare engines forever
+and serve synchronously — the first NaN update, drifted engine, or memory
+squeeze either crashed the loop or silently served poison.  This module
+puts every persistent engine behind a health-checked :class:`EngineSlot`
+with an explicit lifecycle and a pool-level supervisor
+(:class:`EnginePool`) that owns admission, deadlines, memory budget, and
+recovery policy.
+
+Slot lifecycle (one-way arrows are the supervisor's transitions)::
+
+    warming ──solve+probe ok──> healthy
+    healthy ──probe fail / drift / blocked poison──> degraded
+    degraded ──re-solve + probe ok──> healthy
+    degraded / crash-retries-exhausted──> quarantined
+    quarantined ──full rebuild + probe ok──> healthy
+    healthy ──LRU under memory budget──> evicted
+    evicted ──deterministic re-admission (next update/drain)──> warming
+
+Protection layers, outermost first:
+
+* **Validation boundary** — NaN / out-of-domain update weights raise a
+  typed ``UpdateError`` *before* touching engine state (the slot stays
+  healthy; the batch is dropped and counted).
+* **Health probes** — after every applied update the slot runs
+  ``DynamicAPSP.health_probe`` (domain leaks, edge dominance, triangle
+  spot checks).  A failed probe transitions to *degraded*: the slot keeps
+  answering from its last-known-good snapshot while the supervisor
+  re-solves.
+* **Bounded retry** — transient apply failures (``InjectedCrash`` under
+  chaos, any ``RuntimeError`` from the runtime) retry with exponential
+  backoff + seeded jitter up to ``max_retries``, then quarantine + full
+  rebuild.
+* **Snapshots** — every healthy commit double-buffers a host-side
+  last-known-good ``(dist, pred)`` copy (donation-aware: the engine's
+  donating updates consume *device* buffers, never these host arrays;
+  readers always see a fully-committed buffer because commit builds the
+  standby copy first and swaps a reference last).  Degraded / quarantined
+  / evicted / shed / deadline-missed answers come from the snapshot with
+  an explicit staleness tag — a bounded-staleness answer instead of
+  blocking on a full O(n³) re-solve.
+* **Admission control** — queries are shed to the snapshot path when the
+  pending-update backlog exceeds ``backlog_watermark``; update batches
+  queue per slot and are coalesced into one rank-k dispatch at drain.
+* **Deadlines** — per-query budget enforced by a single-worker timeout
+  wrapper around the live dispatch; a miss is answered from the snapshot
+  and counted, never blocked on.
+* **Memory budget** — live device state (``dist``/``pred`` per engine) is
+  the scarce resource: admissions beyond ``mem_budget_bytes`` evict the
+  least-recently-used healthy slot (snapshot + cost matrix are retained
+  host-side), and eviction is *deterministically re-admissible* — the next
+  update or drain rebuilds the engine from the retained cost matrix and
+  replays the queued batches, converging to the same state as if never
+  evicted.
+
+The pool guarantees **zero poisoned answers**: every returned value either
+came from a probe-committed snapshot or passed the live-path domain check;
+anything else is blocked, counted, and triggers degradation + recovery.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import DynamicAPSP, UpdateError, domain_violations, get_semiring, solve
+from repro.core.semiring import SemiringLike
+
+from .faults import FaultInjector, InjectedCrash
+
+__all__ = ["SlotState", "EngineSlot", "EnginePool", "QueryResult"]
+
+
+class SlotState:
+    """Slot lifecycle states (plain strings so they serialize as-is)."""
+
+    WARMING = "warming"
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"
+    QUARANTINED = "quarantined"
+    EVICTED = "evicted"
+
+    ALL = (WARMING, HEALTHY, DEGRADED, QUARANTINED, EVICTED)
+
+
+@dataclass
+class QueryResult:
+    """One answered distance query.
+
+    ``source`` is ``"live"`` (fresh engine state) or ``"snapshot"``
+    (last-known-good); ``staleness`` counts state versions the answer is
+    behind the slot's authoritative cost matrix (0 = fresh; queued but
+    undrained update batches count too).  ``shed`` marks an
+    admission-control answer, ``deadline_missed`` a timeout fallback.
+    Every snapshot answer carries ``staleness``/flags — that tag is the
+    degraded-answer contract the chaos smoke asserts on.
+    """
+
+    values: np.ndarray
+    source: str
+    staleness: int
+    slot_state: str
+    shed: bool = False
+    deadline_missed: bool = False
+    latency_s: float = 0.0
+
+
+class EngineSlot:
+    """One supervised persistent graph: engine + lifecycle + snapshot."""
+
+    def __init__(
+        self,
+        gid: int,
+        h: np.ndarray,
+        *,
+        method: str = "blocked_fw",
+        with_pred: bool = False,
+        semiring: SemiringLike = "tropical",
+        solve_kw: Optional[Dict] = None,
+        max_retries: int = 2,
+        backoff_base_s: float = 0.005,
+        probe_samples: int = 64,
+        injector: Optional[FaultInjector] = None,
+        seed: int = 0,
+        events: Optional[List[Dict]] = None,
+    ):
+        self.gid = gid
+        self._h = np.array(h, np.float32)        # lint: allow-copy (host-side, authoritative)
+        self._method = method
+        self._with_pred = bool(with_pred)
+        self._sr = get_semiring(semiring)
+        self._solve_kw = dict(solve_kw or {})
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.probe_samples = int(probe_samples)
+        self.injector = injector or FaultInjector()
+        self._rng = np.random.default_rng(seed)
+        self.events = events if events is not None else []
+
+        self.state = SlotState.WARMING
+        self.engine: Optional[DynamicAPSP] = None
+        self.pending: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self.last_access = 0.0                   # pool's logical LRU clock
+        self._unhealthy_since: Optional[float] = None
+        self._evicted_version = 0
+        # double-buffered last-known-good snapshot: commit writes the
+        # standby dict, then swaps the *reference* — a concurrent reader
+        # holds either the old or the new fully-built snapshot, never a
+        # half-written one
+        self._snapshot: Optional[Dict] = None
+        self.stats: Dict[str, int] = {
+            "updates_applied": 0, "updates_rejected": 0, "retries": 0,
+            "probe_failures": 0, "quarantines": 0, "evictions": 0,
+            "readmissions": 0, "deadline_misses": 0, "drift_detected": 0,
+            "poison_blocked": 0,
+        }
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _transition(self, new: str, reason: str) -> None:
+        old = self.state
+        if new == old:
+            return
+        now = time.monotonic()
+        if old == SlotState.HEALTHY:
+            self._unhealthy_since = now
+        event = {"t": now, "gid": self.gid, "from": old, "to": new,
+                 "reason": reason}
+        if new == SlotState.HEALTHY and self._unhealthy_since is not None:
+            event["recovery_s"] = now - self._unhealthy_since
+            self._unhealthy_since = None
+        self.state = new
+        self.events.append(event)
+
+    def build(self) -> None:
+        """Cold solve from the authoritative cost matrix, probe, commit."""
+        self._transition(SlotState.WARMING, "build")
+        self.engine = DynamicAPSP(
+            self._h, method=self._method, with_pred=self._with_pred,
+            semiring=self._sr, **self._solve_kw,
+        )
+        self.engine._version = self._evicted_version + 1   # versions stay monotone across rebuilds
+        probe = self.engine.health_probe(self.probe_samples, self._rng)
+        if not probe["ok"]:
+            self.stats["probe_failures"] += 1
+            self._transition(SlotState.QUARANTINED, f"build probe failed: {probe}")
+            return
+        self._commit_snapshot()
+        self._transition(SlotState.HEALTHY, "build + probe ok")
+
+    def _commit_snapshot(self) -> None:
+        new = self.engine.snapshot()             # fully built before the swap
+        self._snapshot = new
+
+    @property
+    def snapshot(self) -> Optional[Dict]:
+        return self._snapshot
+
+    @property
+    def n(self) -> int:
+        return self._h.shape[0]
+
+    def device_bytes(self) -> int:
+        """Resident device state: (dist + pred) — the budgeted resource."""
+        if self.engine is None:
+            return 0
+        per = self.n * self.n * 4
+        return per * (2 if self._with_pred else 1)
+
+    def staleness(self) -> int:
+        """State versions the snapshot is behind (queued batches included)."""
+        if self._snapshot is None:
+            return len(self.pending)
+        head = self.engine.version if self.engine is not None else self._evicted_version
+        return max(head - self._snapshot["version"], 0) + len(self.pending)
+
+    # -- recovery policy ----------------------------------------------------
+
+    def evict(self) -> None:
+        """Drop the device engine under memory pressure; snapshot and cost
+        matrix stay host-side, so the slot still answers (stale) queries
+        and re-admits deterministically."""
+        if self.engine is None:
+            return
+        self._h = self.engine.h                  # authoritative costs survive the engine
+        self._evicted_version = self.engine.version
+        self.engine = None
+        self.stats["evictions"] += 1
+        self._transition(SlotState.EVICTED, "memory budget (LRU)")
+        # eviction is a policy action, not a fault: its later re-admission
+        # must not inflate the fault-recovery-time metric
+        self._unhealthy_since = None
+
+    def readmit(self) -> None:
+        """Deterministic re-admission after eviction: rebuild from the
+        retained cost matrix (queued updates replay at the next drain)."""
+        self.stats["readmissions"] += 1
+        self.build()
+
+    def recover(self) -> bool:
+        """Re-solve-on-drift / quarantine recovery: full re-solve from the
+        authoritative costs, re-probe, commit on success.  Returns healthy."""
+        if self.engine is None:
+            self.readmit()
+            return self.state == SlotState.HEALTHY
+        self.engine.solve_full()
+        probe = self.engine.health_probe(self.probe_samples, self._rng)
+        if probe["ok"]:
+            self._commit_snapshot()
+            self._transition(SlotState.HEALTHY, "recovered (full re-solve + probe ok)")
+            return True
+        # a full solve from clean inputs still probing bad: quarantine —
+        # serve the snapshot, never the state
+        self.stats["probe_failures"] += 1
+        self.stats["quarantines"] += 1
+        self._transition(SlotState.QUARANTINED, f"recovery probe failed: {probe}")
+        return False
+
+    # -- updates ------------------------------------------------------------
+
+    def apply_update(self, u: np.ndarray, v: np.ndarray, w: np.ndarray) -> Dict:
+        """Apply one (possibly coalesced) update batch through the full
+        protection stack: validation, injected chaos, bounded retry with
+        backoff + jitter, post-update probe, snapshot commit."""
+        if self.engine is None:
+            self.readmit()
+        self.injector.maybe_latency()
+        w, injected_nan = self.injector.corrupt_update(w)
+        try:
+            info = self._apply_with_retry(u, v, w)
+        except UpdateError:
+            # poisoned batch rejected at the validation boundary: engine
+            # state untouched, slot stays in its current state
+            self.stats["updates_rejected"] += 1
+            raise
+        self.stats["updates_applied"] += 1
+        if self.injector.maybe_poison_state(self.engine) is not None:
+            info["poison_injected"] = True
+        probe = self.engine.health_probe(self.probe_samples, self._rng)
+        if not probe["ok"]:
+            self.stats["probe_failures"] += 1
+            self._transition(
+                SlotState.DEGRADED,
+                f"post-update probe failed: "
+                f"domain={probe['domain_violations']} "
+                f"edge={probe['edge_violations']} "
+                f"tri={probe['triangle_violations']}",
+            )
+            self.recover()
+        else:
+            self._commit_snapshot()
+            if self.state != SlotState.HEALTHY:
+                self._transition(SlotState.HEALTHY, "update + probe ok")
+        info["injected_nan"] = injected_nan
+        info["slot_state"] = self.state
+        return info
+
+    def _apply_with_retry(self, u, v, w) -> Dict:
+        # retrying a whole batch is safe: updates are "set edge (u,v) to w"
+        # requests, so re-applying after a partial failure is idempotent
+        attempt = 0
+        recovered_once = False
+        while True:
+            try:
+                self.injector.maybe_crash()
+                return self.engine.update(u, v, w)
+            except RuntimeError as e:
+                # transient fault (InjectedCrash under chaos, runtime errors
+                # like a deleted donated buffer otherwise): bounded retry
+                # with exponential backoff + jitter, then quarantine + full
+                # rebuild — recover() re-solves so a broken engine heals
+                self.stats["retries"] += 1
+                attempt += 1
+                if attempt > self.max_retries:
+                    self.stats["quarantines"] += 1
+                    self._transition(
+                        SlotState.QUARANTINED,
+                        f"{attempt} consecutive apply failures ({e})",
+                    )
+                    if recovered_once or not self.recover():
+                        # a persistent fault, not a transient one: stay
+                        # quarantined and surface it — the pool requeues the
+                        # batch and serves snapshots until the fault clears
+                        raise
+                    recovered_once = True
+                    attempt = 0              # recovered: one fresh retry budget
+                    continue
+                backoff = self.backoff_base_s * (2 ** (attempt - 1))
+                time.sleep(backoff * (1.0 + 0.25 * float(self._rng.uniform())))
+
+    # -- queries ------------------------------------------------------------
+
+    def snapshot_answer(self, qi, qj, **flags) -> QueryResult:
+        """Bounded-staleness answer from the last-known-good snapshot."""
+        snap = self._snapshot
+        if snap is None:
+            raise RuntimeError(
+                f"slot {self.gid} has no committed snapshot to degrade to"
+            )
+        return QueryResult(
+            values=snap["dist"][qi, qj],
+            source="snapshot",
+            staleness=self.staleness(),
+            slot_state=self.state,
+            **flags,
+        )
+
+    def live_values(self, qi, qj) -> np.ndarray:
+        """Fresh values off the live engine (called under the pool's
+        deadline wrapper; includes any injected latency spike)."""
+        self.injector.maybe_latency()
+        return np.asarray(self.engine.dist[qi, qj])
+
+
+class EnginePool:
+    """Supervisor over :class:`EngineSlot`\\ s: admission, scheduling,
+    deadlines, memory budget, verification, and aggregate accounting."""
+
+    def __init__(
+        self,
+        *,
+        method: str = "blocked_fw",
+        with_pred: bool = False,
+        semiring: SemiringLike = "tropical",
+        solve_kw: Optional[Dict] = None,
+        max_retries: int = 2,
+        backoff_base_s: float = 0.005,
+        deadline_s: float = 0.0,
+        mem_budget_bytes: int = 0,
+        backlog_watermark: int = 8,
+        probe_samples: int = 64,
+        injector: Optional[FaultInjector] = None,
+        seed: int = 0,
+    ):
+        self._method = method
+        self._with_pred = bool(with_pred)
+        self._sr = get_semiring(semiring)
+        self._solve_kw = dict(solve_kw or {})
+        self._max_retries = int(max_retries)
+        self._backoff_base_s = float(backoff_base_s)
+        self.deadline_s = float(deadline_s)
+        self.mem_budget_bytes = int(mem_budget_bytes)
+        self.backlog_watermark = int(backlog_watermark)
+        self._probe_samples = int(probe_samples)
+        self.injector = injector or FaultInjector()
+        self._seed = seed
+        self.slots: Dict[int, EngineSlot] = {}
+        self.events: List[Dict] = []
+        self._clock = 0.0
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self.stats: Dict[str, int] = {
+            "queries_live": 0, "queries_snapshot": 0, "queries_shed": 0,
+            "deadline_misses": 0, "poisoned_served": 0, "poison_blocked": 0,
+            "updates_submitted": 0, "updates_rejected": 0,
+            "updates_failed": 0, "drain_coalesced": 0, "drain_fallbacks": 0,
+            "over_budget_admissions": 0,
+            "verify_drift": 0, "verify_ok": 0,
+        }
+
+    # -- admission / memory budget ------------------------------------------
+
+    def admit(self, gid: int, h: np.ndarray) -> EngineSlot:
+        """Admit one persistent graph under the memory budget (evicting LRU
+        slots if needed) and warm it (cold solve + probe + snapshot)."""
+        slot = EngineSlot(
+            gid, h,
+            method=self._method, with_pred=self._with_pred, semiring=self._sr,
+            solve_kw=self._solve_kw, max_retries=self._max_retries,
+            backoff_base_s=self._backoff_base_s,
+            probe_samples=self._probe_samples, injector=self.injector,
+            seed=self._seed + gid, events=self.events,
+        )
+        self.slots[gid] = slot
+        self._touch(slot)
+        self._ensure_budget(slot)
+        slot.build()
+        return slot
+
+    def _touch(self, slot: EngineSlot) -> None:
+        self._clock += 1.0
+        slot.last_access = self._clock
+
+    def live_bytes(self) -> int:
+        return sum(s.device_bytes() for s in self.slots.values())
+
+    def _need_bytes(self, slot: EngineSlot) -> int:
+        per = slot.n * slot.n * 4
+        return per * (2 if self._with_pred else 1)
+
+    def _ensure_budget(self, target: EngineSlot) -> None:
+        """Evict least-recently-used live slots until ``target``'s engine
+        fits the (possibly chaos-squeezed) budget."""
+        budget = self.injector.maybe_mem_squeeze(self.mem_budget_bytes)
+        if budget <= 0:
+            return
+        need = self._need_bytes(target)
+        while self.live_bytes() + need - target.device_bytes() > budget:
+            victims = [
+                s for s in self.slots.values()
+                if s is not target and s.engine is not None
+            ]
+            if not victims:
+                # nothing evictable: serve over budget rather than refuse
+                self.stats["over_budget_admissions"] += 1
+                return
+            victims.sort(key=lambda s: s.last_access)
+            victims[0].evict()
+
+    # -- update scheduling ---------------------------------------------------
+
+    def submit_update(self, gid: int, u, v, w) -> None:
+        """Queue one edge-update batch for ``gid`` (applied at the next
+        drain; queries against a backlogged pool shed to snapshots)."""
+        self.stats["updates_submitted"] += 1
+        self.slots[gid].pending.append(
+            (np.asarray(u, np.int32), np.asarray(v, np.int32),
+             np.asarray(w, np.float32))
+        )
+
+    def backlog(self) -> int:
+        return sum(len(s.pending) for s in self.slots.values())
+
+    def drain(self, gid: int) -> List[Dict]:
+        """Apply ``gid``'s queued update batches, coalescing them into one
+        rank-k dispatch (duplicate edges resolve last-wins inside the
+        engine, matching sequential semantics).  A poisoned coalesced batch
+        falls back to per-batch application so one bad batch can't veto its
+        clean neighbors."""
+        slot = self.slots[gid]
+        self._touch(slot)
+        if not slot.pending:
+            return []
+        if slot.engine is None:
+            self._ensure_budget(slot)
+            slot.readmit()
+        batches, slot.pending = slot.pending, []
+        if len(batches) > 1:
+            self.stats["drain_coalesced"] += 1
+            u = np.concatenate([b[0] for b in batches])
+            v = np.concatenate([b[1] for b in batches])
+            w = np.concatenate([b[2] for b in batches])
+            try:
+                return [slot.apply_update(u, v, w)]
+            except UpdateError:
+                # fall through to per-batch application: drop only the
+                # poisoned batch(es), keep the rest
+                self.stats["drain_fallbacks"] += 1
+            except RuntimeError as e:
+                # persistent apply fault (slot now quarantined): requeue and
+                # serve snapshots until the fault clears
+                self.stats["updates_failed"] += 1
+                slot.pending = batches + slot.pending
+                return [{"path": "failed", "error": str(e),
+                         "slot_state": slot.state}]
+        infos = []
+        for i, (u, v, w) in enumerate(batches):
+            try:
+                infos.append(slot.apply_update(u, v, w))
+            except UpdateError as e:
+                self.stats["updates_rejected"] += 1
+                infos.append({"path": "rejected", "error": str(e),
+                              "slot_state": slot.state})
+            except RuntimeError as e:
+                self.stats["updates_failed"] += 1
+                slot.pending = batches[i:] + slot.pending
+                infos.append({"path": "failed", "error": str(e),
+                              "slot_state": slot.state})
+                break
+        return infos
+
+    def drain_all(self) -> None:
+        for gid in list(self.slots):
+            self.drain(gid)
+
+    # -- queries ------------------------------------------------------------
+
+    def query(self, gid: int, qi, qj, deadline_s: Optional[float] = None) -> QueryResult:
+        """Answer a distance query under the full protection stack:
+        admission control (shed to snapshot over the backlog watermark),
+        drain-then-serve otherwise, per-query deadline around the live
+        dispatch, domain check on every live answer (poison is blocked,
+        degraded, and answered from the snapshot instead)."""
+        t0 = time.perf_counter()
+        slot = self.slots[gid]
+        self._touch(slot)
+        deadline = self.deadline_s if deadline_s is None else float(deadline_s)
+
+        if self.backlog() > self.backlog_watermark:
+            self.stats["queries_shed"] += 1
+            r = slot.snapshot_answer(qi, qj, shed=True)
+            r.latency_s = time.perf_counter() - t0
+            return r
+        self.drain(gid)
+        if slot.state != SlotState.HEALTHY or slot.engine is None:
+            self.stats["queries_snapshot"] += 1
+            r = slot.snapshot_answer(qi, qj)
+            r.latency_s = time.perf_counter() - t0
+            return r
+
+        values, missed = self._live_with_deadline(slot, qi, qj, deadline)
+        if missed:
+            r = slot.snapshot_answer(qi, qj, deadline_missed=True)
+            r.latency_s = time.perf_counter() - t0
+            return r
+        if bool(domain_violations(values, self._sr).any()):
+            # a poisoned live answer: block it, degrade, recover, serve the
+            # last-known-good snapshot instead
+            self.stats["poison_blocked"] += 1
+            slot.stats["poison_blocked"] += 1
+            slot._transition(SlotState.DEGRADED, "poisoned live answer blocked")
+            slot.recover()
+            r = slot.snapshot_answer(qi, qj)
+            r.latency_s = time.perf_counter() - t0
+            return r
+        self.stats["queries_live"] += 1
+        return QueryResult(
+            values=values, source="live", staleness=0,
+            slot_state=slot.state, latency_s=time.perf_counter() - t0,
+        )
+
+    def _live_with_deadline(self, slot, qi, qj, deadline_s):
+        """Run the live read, optionally under a timeout wrapper.  On a
+        miss the in-flight dispatch is abandoned (it completes in the
+        worker and is discarded) and the caller falls back to the
+        snapshot — a late answer is a wrong answer under an SLO."""
+        if deadline_s <= 0:
+            return slot.live_values(qi, qj), False
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="pool-deadline"
+            )
+        fut = self._executor.submit(slot.live_values, qi, qj)
+        try:
+            return fut.result(timeout=deadline_s), False
+        except FutureTimeout:
+            fut.cancel()                   # a queued (not yet running) call is dropped
+            slot.stats["deadline_misses"] += 1
+            self.stats["deadline_misses"] += 1
+            return None, True
+
+    # -- verification / recovery --------------------------------------------
+
+    def verify(self, gid: int) -> Dict:
+        """Differential drift check: engine state vs a cold full solve of
+        the authoritative cost matrix.  Drift transitions the slot to
+        degraded, triggers re-solve-on-drift, and re-verifies; the report
+        says whether recovery restored agreement."""
+        slot = self.slots[gid]
+        self.drain(gid)
+        if slot.engine is None:
+            self._ensure_budget(slot)
+            slot.readmit()
+        ref = solve(
+            slot.engine.h, method=self._method, with_pred=False,
+            semiring=self._sr, validate=False, **self._solve_kw,
+        )
+        ok = bool(np.allclose(
+            np.asarray(slot.engine.dist), np.asarray(ref.dist),
+            rtol=1e-5, atol=1e-5, equal_nan=False,
+        ))
+        report = {"gid": gid, "ok": ok, "recovered": None,
+                  "state": slot.state}
+        if ok:
+            self.stats["verify_ok"] += 1
+            return report
+        self.stats["verify_drift"] += 1
+        slot.stats["drift_detected"] += 1
+        slot._transition(SlotState.DEGRADED, "verify drift vs cold solve")
+        slot.recover()
+        report["recovered"] = bool(np.allclose(
+            np.asarray(slot.engine.dist), np.asarray(ref.dist),
+            rtol=1e-5, atol=1e-5, equal_nan=False,
+        )) if slot.engine is not None else False
+        report["state"] = slot.state
+        return report
+
+    def recover_all(self, readmit: bool = False) -> None:
+        """Drain every queue and recover every degraded / quarantined slot;
+        ``readmit=True`` also rebuilds evicted slots (end-of-run check that
+        the whole pool can return to healthy)."""
+        self.drain_all()
+        for slot in self.slots.values():
+            if slot.state in (SlotState.DEGRADED, SlotState.QUARANTINED):
+                slot.recover()
+            elif readmit and slot.state == SlotState.EVICTED:
+                self._ensure_budget(slot)
+                slot.readmit()
+
+    # -- accounting ---------------------------------------------------------
+
+    def recovery_times(self) -> List[float]:
+        return [e["recovery_s"] for e in self.events if "recovery_s" in e]
+
+    def state_counts(self) -> Dict[str, int]:
+        out = {s: 0 for s in SlotState.ALL}
+        for slot in self.slots.values():
+            out[slot.state] += 1
+        return out
+
+    def summary(self) -> Dict:
+        """Aggregate report: pool stats + per-slot stats + lifecycle +
+        injected-fault counts + recovery times."""
+        slot_stats: Dict[str, int] = {}
+        for slot in self.slots.values():
+            for k, v in slot.stats.items():
+                slot_stats[k] = slot_stats.get(k, 0) + v
+        rec = self.recovery_times()
+        return {
+            "pool": dict(self.stats),
+            "slots": slot_stats,
+            "states": self.state_counts(),
+            "faults_injected": dict(self.injector.counts),
+            "transitions": len([e for e in self.events if "from" in e]),
+            "recoveries": len(rec),
+            "recovery_s_max": max(rec) if rec else 0.0,
+            "live_bytes": self.live_bytes(),
+            "mem_budget_bytes": self.mem_budget_bytes,
+        }
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None

@@ -10,10 +10,14 @@ packs incoming ragged graphs into fixed (G, N_max, N_max) inf-padded slots
 ``solve_batch`` program; results are unpadded per graph before returning.
 
 With ``--mutate-rate > 0`` the APSP mode switches to the *incremental*
-serving shape: a pool of persistent graphs each held by a
-``repro.core.DynamicAPSP`` engine, serving an interleaved stream of
-edge-update batches (applied without full re-solve) and distance queries
-(answered from the maintained state).
+serving shape: a supervised pool (``repro.launch.pool``) of persistent
+``repro.core.DynamicAPSP`` engines behind health-checked slots, serving an
+interleaved stream of edge-update batches (queued, coalesced, applied
+without full re-solve) and distance queries (live under a deadline, or
+bounded-staleness snapshot answers when a slot is degraded / the pool is
+backlogged).  ``--fault-spec`` turns on the deterministic chaos layer
+(``repro.launch.faults``); the run exits non-zero on verify drift, a
+poisoned answer, or an unrecovered slot.
 
 Usage:
     python -m repro.launch.serve --arch qwen2-1.5b --requests 4 --gen 16
@@ -22,6 +26,9 @@ Usage:
         --n-max 128 --method squaring
     python -m repro.launch.serve --arch apsp --requests 64 --n-max 128 \\
         --mutate-rate 0.5 --graphs 4 --verify-every 16
+    python -m repro.launch.serve --arch apsp --requests 128 --n-max 64 \\
+        --mutate-rate 0.5 --graphs 3 --verify-every 16 \\
+        --fault-spec nan:0.1,crash:0.08:3,poison:0.05 --deadline-ms 50
 """
 
 from __future__ import annotations
@@ -262,88 +269,138 @@ def serve_apsp_dynamic(
     semiring: str = "tropical",
     verify_every: int = 0,
     seed: int = 0,
+    fault_spec: str = "",
+    deadline_ms: float = 0.0,
+    mem_budget_mb: float = 0.0,
+    backlog_watermark: int = 8,
+    max_retries: int = 2,
 ) -> int:
-    """Incremental APSP serving: persistent graph state + streaming updates.
+    """Incremental APSP serving on the supervised engine pool.
 
-    Holds ``graphs`` persistent :class:`repro.core.DynamicAPSP` engines
-    (each a live graph already solved) and serves an interleaved request
-    stream: with probability ``mutate_rate`` a request is a batch of up to
-    ``mutate_k`` edge updates applied *incrementally* (rank-k fused update
-    for decreases, bounded re-solve for worsenings — never a cold full
-    solve unless the engine decides it must); otherwise it is a distance
-    query answered straight from the maintained state.  ``verify_every``
-    > 0 differentially checks an engine against a cold full solve every
-    that-many requests (the serving-time analogue of the dynamic test
-    suite).
+    Every persistent graph lives behind a health-checked
+    :class:`repro.launch.pool.EngineSlot` (lifecycle warming -> healthy ->
+    degraded -> quarantined -> evicted; see ``repro.launch.pool`` and
+    COMPAT.md §Serving resilience).  The interleaved request stream: with
+    probability ``mutate_rate`` a request is a batch of up to ``mutate_k``
+    edge updates *queued* against a slot (coalesced into one rank-k
+    dispatch at drain); otherwise it is a distance query served live under
+    ``deadline_ms`` — or, when the slot is unhealthy / the backlog exceeds
+    ``backlog_watermark`` / the deadline is missed, a bounded-staleness
+    answer from the last-known-good snapshot with an explicit staleness
+    tag.  ``verify_every`` > 0 differentially checks a slot against a cold
+    solve every that-many requests; drift degrades the slot, triggers
+    re-solve-on-drift, and fails the run (non-zero exit + structured error
+    summary) so CI can gate on it.
+
+    ``fault_spec`` turns on the deterministic chaos layer
+    (``repro.launch.faults`` — injected NaN updates, slot crashes, latency
+    spikes, state poison, memory-budget squeezes).  The exit code asserts
+    the resilience contract: zero poisoned answers served, no unrecovered
+    drift, and every slot back to healthy (or deliberately evicted under
+    the memory budget) at the end of the run.
     """
-    from repro.core import DynamicAPSP, get_semiring, solve
+    import json
+
+    from repro.core import get_semiring
     from repro.core.graphgen import generate_edge_updates, generate_np
+    from repro.launch.faults import FaultInjector, FaultSpec
+    from repro.launch.pool import EnginePool, SlotState
 
     _check_recastable(semiring)
     sr = get_semiring(semiring)
+    spec = FaultSpec.parse(fault_spec)
+    pool = EnginePool(
+        method=method, with_pred=with_pred, semiring=sr,
+        max_retries=max_retries, deadline_s=deadline_ms / 1e3,
+        mem_budget_bytes=int(mem_budget_mb * 2**20),
+        backlog_watermark=backlog_watermark,
+        injector=FaultInjector(spec, seed=seed), seed=seed,
+    )
     rng = np.random.default_rng(seed)
     t0 = time.time()
-    engines = []
-    for _ in range(graphs):
+    for gid in range(graphs):
         g = generate_np(rng, n_max, rho=60.0)
-        engines.append(DynamicAPSP(
-            _recast_graph(g.h, sr.name), method=method,
-            with_pred=with_pred, semiring=sr,
-        ))
+        pool.admit(gid, _recast_graph(g.h, sr.name))
     t_warm = time.time() - t0
-    print(f"[dynamic] {graphs} persistent graphs of n={n_max} solved "
-          f"({t_warm:.2f}s incl. compile)")
+    print(f"[dynamic] {graphs} supervised slots of n={n_max} warmed "
+          f"({t_warm:.2f}s incl. compile; states {pool.state_counts()})")
+    if spec.any():
+        print(f"[chaos] fault spec active: {fault_spec} (seed {seed})")
 
     n_updates = n_queries = 0
     t_update = t_query = 0.0
+    drift_reports = []
     t0 = time.time()
     for req in range(n_requests):
         gi = int(rng.integers(0, graphs))
-        eng = engines[gi]
+        slot = pool.slots[gi]
         if rng.uniform() < mutate_rate:
             # mostly decreases/inserts (the fast exact path), a sprinkle of
             # worsenings (exercises the bounded re-solve)
             u, v, w = generate_edge_updates(
-                rng, eng.h, int(rng.integers(1, mutate_k + 1)),
-                worsen_frac=0.05,
+                rng, slot.engine.h if slot.engine is not None else slot._h,
+                int(rng.integers(1, mutate_k + 1)), worsen_frac=0.05,
             )
             if semiring != "tropical":
                 w = _recast_edge_weights(w, semiring)
             t = time.time()
-            info = eng.update(u, v, w)
-            jax.block_until_ready(eng.dist)
+            pool.submit_update(gi, u, v, w)
+            if pool.backlog() > pool.backlog_watermark:
+                # saturated: drain the queues (coalesced) so admission
+                # control sheds at most a bounded query window
+                pool.drain_all()
             t_update += time.time() - t
             n_updates += 1
             if req < 3 or req % max(n_requests // 4, 1) == 0:
-                print(f"[mutate] graph {gi}: {info['n_updates']} edges via "
-                      f"{info['path']} (req {req})")
+                print(f"[mutate] slot {gi}: queued {u.size} edges "
+                      f"(backlog {pool.backlog()}, state {slot.state}, "
+                      f"req {req})")
         else:
             qi = rng.integers(0, n_max, 8)
             qj = rng.integers(0, n_max, 8)
             t = time.time()
-            d = np.asarray(eng.dist[qi, qj])
+            r = pool.query(gi, qi, qj)
             t_query += time.time() - t
             n_queries += 1
-            assert d.shape == (8,)
+            assert r.values.shape == (8,)
+            if r.source != "live" and (req < 3 or req % max(n_requests // 4, 1) == 0):
+                print(f"[degraded] slot {gi}: {r.source} answer, staleness "
+                      f"{r.staleness} (shed={r.shed} "
+                      f"deadline_missed={r.deadline_missed}, req {req})")
         if verify_every and (req + 1) % verify_every == 0:
-            ref = solve(eng.h, method=method, semiring=sr)
-            ok = np.allclose(
-                np.asarray(eng.dist), np.asarray(ref.dist),
-                rtol=1e-5, atol=1e-5, equal_nan=True,
-            )
-            print(f"[verify] graph {gi} vs cold solve: "
-                  f"{'OK' if ok else 'MISMATCH'}")
-            if not ok:
-                return 1
+            report = pool.verify(gi)
+            print(f"[verify] slot {gi} vs cold solve: "
+                  f"{'OK' if report['ok'] else 'DRIFT'}"
+                  + ("" if report["ok"] else f" (recovered={report['recovered']})"))
+            if not report["ok"]:
+                drift_reports.append(report)
     dt = time.time() - t0
+    pool.recover_all(readmit=True)
+
+    summary = pool.summary()
     print(f"[done] {n_requests} requests in {dt:.2f}s — "
-          f"{n_updates} updates ({1e3 * t_update / max(n_updates, 1):.1f} ms/update), "
+          f"{n_updates} update batches ({1e3 * t_update / max(n_updates, 1):.1f} ms/submit+drain), "
           f"{n_queries} queries ({1e3 * t_query / max(n_queries, 1):.2f} ms/query)")
-    totals: dict = {}
-    for e in engines:
-        for k, v in e.stats.items():
-            totals[k] = totals.get(k, 0) + v
-    print(f"[paths] {', '.join(f'{k}={v}' for k, v in sorted(totals.items()) if v)}")
+    print(f"[pool] {json.dumps(summary, sort_keys=True, default=str)}")
+    pool.close()
+
+    # resilience contract: structured failure summary + non-zero exit so CI
+    # can gate on drift / poison / unrecovered slots
+    states = summary["states"]
+    unrecovered = states[SlotState.DEGRADED] + states[SlotState.QUARANTINED]
+    failures = {}
+    if drift_reports:
+        failures["verify_drift"] = drift_reports
+    if summary["pool"]["poisoned_served"]:
+        failures["poisoned_served"] = summary["pool"]["poisoned_served"]
+    if unrecovered:
+        failures["unrecovered_slots"] = {
+            gid: s.state for gid, s in pool.slots.items()
+            if s.state in (SlotState.DEGRADED, SlotState.QUARANTINED)
+        }
+    if failures:
+        print(f"[serve-error] {json.dumps(failures, sort_keys=True, default=str)}")
+        return 1
     return 0
 
 
@@ -386,7 +443,24 @@ def main(argv=None) -> int:
                     help="apsp dynamic mode: max edges per update batch")
     ap.add_argument("--verify-every", type=int, default=0,
                     help="apsp dynamic mode: differentially check an engine "
-                         "against a cold solve every N requests (0 = off)")
+                         "against a cold solve every N requests (0 = off; "
+                         "detected drift exits non-zero)")
+    ap.add_argument("--fault-spec", default="",
+                    help="apsp dynamic mode: chaos layer, e.g. "
+                         "'nan:0.1,crash:0.08:3,latency:0.1:20,poison:0.05,"
+                         "mem:0.1:0.5' (see repro.launch.faults)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="apsp dynamic mode: per-query deadline; a miss is "
+                         "answered from the last-known-good snapshot (0 = off)")
+    ap.add_argument("--mem-budget-mb", type=float, default=0.0,
+                    help="apsp dynamic mode: device-state budget; admissions "
+                         "beyond it evict LRU slots (0 = unlimited)")
+    ap.add_argument("--backlog-watermark", type=int, default=8,
+                    help="apsp dynamic mode: pending update batches above "
+                         "which queries are shed to snapshots")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="apsp dynamic mode: transient apply failures "
+                         "retried (with backoff) before quarantine")
     args = ap.parse_args(argv)
     if args.arch == "mind":
         return serve_mind(args.requests, args.seed)
@@ -397,7 +471,11 @@ def main(argv=None) -> int:
                 mutate_rate=args.mutate_rate, mutate_k=args.mutate_k,
                 method=args.method, with_pred=args.with_pred,
                 semiring=args.semiring, verify_every=args.verify_every,
-                seed=args.seed,
+                seed=args.seed, fault_spec=args.fault_spec,
+                deadline_ms=args.deadline_ms,
+                mem_budget_mb=args.mem_budget_mb,
+                backlog_watermark=args.backlog_watermark,
+                max_retries=args.max_retries,
             )
         return serve_apsp(
             args.requests, batch=args.batch, n_max=args.n_max,

@@ -1,0 +1,43 @@
+"""except-swallow fixture: serving-tier handlers that eat failures."""
+
+
+def swallow_pass(engine):
+    try:
+        engine.update()
+    except RuntimeError:                       # line 7: silent swallow
+        pass
+
+
+def swallow_log_only(engine):
+    try:
+        engine.update()
+    except ValueError:                         # line 14: printed, not handled
+        print("oops")
+
+
+def ok_reraise(engine):
+    try:
+        engine.update()
+    except RuntimeError:
+        raise
+
+
+def ok_transition(slot):
+    try:
+        slot.engine.update()
+    except RuntimeError:
+        slot._transition("quarantined", "fixture")
+
+
+def ok_stats(self):
+    try:
+        self.engine.update()
+    except ValueError:
+        self.stats["updates_rejected"] += 1
+
+
+def ok_pragma(engine):
+    try:
+        engine.update()
+    except RuntimeError:  # repro: allow-except-swallow  fixture-sanctioned swallow
+        pass

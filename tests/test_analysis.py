@@ -43,16 +43,23 @@ def lines_for(findings, path_tail):
 # registry / CLI surface
 # ---------------------------------------------------------------------------
 
-def test_registry_has_all_five_checks():
+def test_registry_has_all_six_checks():
     assert set(CHECKERS) == {
         "unfused-dispatch",
         "semiring-hardcode",
         "trace-impurity",
         "autotune-key",
         "donation",
+        "except-swallow",
     }
     for c in CHECKERS.values():
         assert c.name and c.description
+    # exactly the heuristic handler check is advisory — it reports but
+    # must never gate a merge
+    assert CHECKERS["except-swallow"].advisory
+    assert not any(
+        c.advisory for n, c in CHECKERS.items() if n != "except-swallow"
+    )
 
 
 def test_unknown_check_rejected():
@@ -96,6 +103,15 @@ def test_trace_impurity_fires_on_fixture():
     assert 10 in msgs and "transitive" in msgs[10]
 
 
+def test_except_swallow_fires_on_fixture():
+    fs = fixture_findings("except-swallow")
+    got = lines_for(fs, "launch/badexcept.py")
+    # bare pass-swallow, print-only handler; the re-raise / transition /
+    # stats-counter / pragma'd handlers stay quiet
+    assert got == [7, 14]
+    assert all(f.advisory for f in fs)
+
+
 def test_autotune_key_fires_on_fixture():
     fs = fixture_findings("autotune-key")
     blind = [f for f in fs if f.path.endswith("kernels/autotune.py")]
@@ -110,6 +126,7 @@ def test_autotune_key_fires_on_fixture():
 
 @pytest.mark.parametrize("check", [
     "unfused-dispatch", "semiring-hardcode", "trace-impurity", "autotune-key",
+    "except-swallow",
 ])
 def test_real_tree_clean(check):
     assert run_checks(Project(REPO), [check]) == []

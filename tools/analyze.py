@@ -8,7 +8,8 @@ Usage:
     PYTHONPATH=src python tools/analyze.py --list          # registered checks
     PYTHONPATH=src python tools/analyze.py --root <tree>   # fixture trees
 
-Exit status: 0 = clean, 1 = findings, 2 = usage error.  Suppress deliberate
+Exit status: 0 = clean (advisory-only findings included), 1 = gating
+findings, 2 = usage error.  Suppress deliberate
 exceptions at the flagged line with ``# repro: allow-<check>  <why>`` (or a
 standalone comment line for file scope).
 
@@ -64,6 +65,8 @@ def main(argv=None) -> int:
         return 2
 
     selected = names if names is not None else sorted(CHECKERS)
+    gating = [f for f in findings if not f.advisory]
+    advisory = [f for f in findings if f.advisory]
     if args.json:
         print(json.dumps(
             {
@@ -76,11 +79,17 @@ def main(argv=None) -> int:
     else:
         for f in findings:
             print(f.format())
-        n = len(findings)
-        tick = "clean" if not n else f"{n} finding{'s' if n != 1 else ''}"
+        tick = "clean" if not findings else ", ".join(
+            s for s, n in (
+                (f"{len(gating)} finding{'s' if len(gating) != 1 else ''}",
+                 len(gating)),
+                (f"{len(advisory)} advisory", len(advisory)),
+            ) if n
+        )
         print(f"analyze: {len(selected)} check(s) over "
               f"{len(project.files())} file(s): {tick}")
-    return 1 if findings else 0
+    # advisory findings report but never gate
+    return 1 if gating else 0
 
 
 if __name__ == "__main__":
