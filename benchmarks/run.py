@@ -88,6 +88,9 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         (r for r in all_rows if r.get("bench") == "dynamic_update_vs_resolve"),
         None,
     )
+    worsening = next(
+        (r for r in all_rows if r.get("bench") == "dynamic_worsening"), None
+    )
     resilience = next(
         (r for r in all_rows if r.get("bench") == "serve_resilience"), None
     )
@@ -108,6 +111,7 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         "fused_vs_unfused": fused,
         "fused_round": fused_round,
         "dynamic_update_vs_resolve": dynamic,
+        "dynamic_worsening": worsening,
         "serve_resilience": resilience,
         "rows": all_rows,
     }
@@ -151,6 +155,8 @@ def main(argv=None) -> int:
                 n=128, block=32, reps=1)),
             ("dynamic_update", lambda: bench_dynamic.run(
                 n=128, k=8, reps=2, block_size=64)),
+            ("dynamic_worsening", lambda: bench_dynamic.run_worsening(
+                n=128, k=8, reps=2, block_size=64)),
             ("serve_resilience", lambda: bench_serve_resilience.run(
                 n=64, graphs=2, requests=60, k=4, budget_engines=1,
                 deadline_ms=100.0)),
@@ -175,6 +181,10 @@ def main(argv=None) -> int:
                 block=64 if args.quick else 128,
                 reps=2 if args.quick else 3)),
             ("dynamic_update", lambda: bench_dynamic.run(
+                n=256 if args.quick else 512, k=16,
+                reps=3 if args.quick else 5,
+                block_size=64 if args.quick else 128)),
+            ("dynamic_worsening", lambda: bench_dynamic.run_worsening(
                 n=256 if args.quick else 512, k=16,
                 reps=3 if args.quick else 5,
                 block_size=64 if args.quick else 128)),

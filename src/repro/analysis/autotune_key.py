@@ -37,7 +37,11 @@ from .base import Checker, Finding, Project, register_checker
 
 __all__ = ["AutotuneKeyChecker"]
 
-_PAIRS = (("lookup", "key_for"), ("lookup_fw_round", "key_for_fw_round"))
+_PAIRS = (
+    ("lookup", "key_for"),
+    ("lookup_fw_round", "key_for_fw_round"),
+    ("lookup_row_close", "key_for_row_close"),
+)
 
 
 def _autotune_rel(project: Project) -> Optional[str]:

@@ -38,7 +38,8 @@ checker verifies it at the artifact level rather than trusting the
    concatenation, so it skips the pointer probe entirely.
 
 Specs cover the donating jits behind ``blocked_fw``, ``blocked_fw_batch``,
-``rkleene``, and ``DynamicAPSP.update`` (rank-k fixpoint + warm resolve);
+``rkleene``, and ``DynamicAPSP.update`` (rank-k fixpoint, row-restricted
+close, warm resolve);
 ``solve`` / ``solve_batch`` / ``DynamicAPSP.update`` are additionally
 exercised end-to-end through their public wrappers (consumption checks).
 
@@ -313,6 +314,17 @@ def default_specs() -> List[DonationSpec]:
             return dyn._warm_resolve_donate, (d, p, h, affected), kw
         return make
 
+    def mk_row_close():
+        def make():
+            n = 16
+            d, p = _solved(n)
+            h = _host_matrix(n, seed=3)
+            affected = jnp.zeros((n, n), bool).at[2:5, :].set(True)
+            rows = jnp.asarray([2, 3, 4, 4], jnp.int32)   # padded row list
+            kw = dict(semiring=TROPICAL, with_pred=True, max_iters=4)
+            return dyn._row_close_donate, (d, p, h, affected, rows), kw
+        return make
+
     def _solved(n: int):
         from repro.core.apsp import solve
         r = solve(_host_matrix(n, seed=1), method="squaring",
@@ -334,6 +346,8 @@ def default_specs() -> List[DonationSpec]:
                      mk_rank_k(), (0, 1), alias_out=lambda r: r[0]),
         DonationSpec("warm_resolve", "src/repro/core/dynamic.py",
                      mk_warm(), (0, 1), alias_out=lambda r: r[0]),
+        DonationSpec("row_close", "src/repro/core/dynamic.py",
+                     mk_row_close(), (0, 1), alias_out=lambda r: r[0]),
     ]
 
 

@@ -12,7 +12,7 @@ from .apsp import (
     solve_batch,
 )
 from .blocked_fw import blocked_fw, blocked_fw_batch
-from .dynamic import DynamicAPSP, domain_violations
+from .dynamic import DynamicAPSP, apply_updates_batched, domain_violations
 from .errors import (
     APSPError,
     InputValidationError,
@@ -64,5 +64,5 @@ __all__ = [
     "Semiring", "SEMIRINGS", "get_semiring", "register_semiring",
     "semiring_eye",
     "APSPError", "InputValidationError", "NegativeCycleError", "UpdateError",
-    "domain_violations",
+    "domain_violations", "apply_updates_batched",
 ]

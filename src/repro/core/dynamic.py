@@ -25,12 +25,28 @@ a full re-solve wherever the algebra allows it:
   (pairs whose recorded shortest-path tree walks the changed edge:
   ``pred[i, v] == u`` and v witnesses (i, j)), otherwise the conservative
   witness test ``dist[i,u] ⊗ w_old ⊗ dist[v,j]`` achieving ``dist[i,j]`` —
-  resets those entries to the direct edge, folds the updated cost matrix
-  back in, and re-closes with early-exit fused squaring (a *bounded*
-  re-solve: the warm state is already a closure except on the affected
-  region, so the loop typically confirms fixpoint in 1-2 squarings).  When
-  the affected fraction exceeds ``resolve_threshold`` the engine falls back
-  to the full solver — the last resort.
+  resets those entries to the direct edge and re-closes them.  The affected
+  entries live entirely in the *rows* of affected sources R (the mask is
+  per-(i, j) with i the source), and every non-R row is still exact, so the
+  default re-close is the **row-restricted bounded re-solve**: iterate
+  ``dist[R,:] ⊕= dist[R,:] ⊗ dist`` (``kernels.ops.row_restricted_close``)
+  to early-exit fixpoint at O(|R|·n²) per pass.  Each pass doubles the
+  covered length of the affected prefix of any optimal path (the suffix
+  after the first non-R node is already exact), so
+  ``ceil_log2(|R|+1) + 1`` passes are enough and the loop usually exits
+  after 1-2.  When |R| exceeds ``row_threshold · n`` the engine falls back
+  to the full-matrix warm re-solve (early-exit fused squaring, O(n³) per
+  pass but fewer passes for huge blast radii), and past
+  ``resolve_threshold`` of affected *pairs* to the full solver — the last
+  resort.
+
+Atomicity: ``update`` mutates the cost matrix ``h`` per phase *around* the
+dispatch and rolls the phase's edges back if the dispatch raises, so a
+supervisor that retries a failed update (``launch.pool``) re-reads the
+true pre-update weights and the retry applies the same delta — a crashed
+update is never silently turned into a noop.  Worsenings commit before
+decreases; if the decrease phase fails after the worsening phase
+committed, the state is still exactly the closure of the current ``h``.
 
 Exactness contract per semiring (see COMPAT.md §Dynamic updates): the
 rank-k and warm paths are exact for ``monotone_mul`` semirings (tropical,
@@ -60,7 +76,7 @@ from .floyd_warshall import init_pred
 from .paths import reconstruct_path, reconstruct_path_jit
 from .semiring import Semiring, SemiringLike, ceil_log2, get_semiring
 
-__all__ = ["DynamicAPSP", "domain_violations"]
+__all__ = ["DynamicAPSP", "apply_updates_batched", "domain_violations"]
 
 
 def domain_violations(x, semiring: SemiringLike) -> np.ndarray:
@@ -126,6 +142,45 @@ _rank_k_fixpoint_donate = jax.jit(
 )
 
 
+def _rank_k_fixpoint_batch_impl(
+    dist, pred, u, v, w, *, semiring, with_pred, max_passes
+):
+    """Rank-k fixpoint over a (G, n, n) stack — one jitted program per
+    (G, n, k) bucket, the pool's batched-drain dispatch.  All graphs share
+    the while_loop (it runs until *every* graph is at fixpoint; converged
+    graphs ride extra passes as exact no-ops); per-graph ``ever_moved``
+    flags report which states actually changed, for version accounting."""
+    from repro.kernels import ops as kops
+
+    sr = semiring
+
+    def step(d, p, uu, vv, ww):
+        z, pz = kops.rank_k_update(
+            d, uu, vv, ww, pred=p if with_pred else None, semiring=sr
+        )
+        return z, (pz if with_pred else p), jnp.any(sr.better(z, d))
+
+    def cond(st):
+        return jnp.logical_and(jnp.any(st[2]), st[4] < max_passes)
+
+    def body(st):
+        d, p, _, ever, it = st
+        z, pz, moved = jax.vmap(step)(d, p, u, v, w)
+        return z, pz, moved, ever | moved, it + 1
+
+    g = dist.shape[0]
+    d, p, _, ever, passes = jax.lax.while_loop(
+        cond, body,
+        (dist, pred, jnp.ones((g,), bool), jnp.zeros((g,), bool), jnp.int32(0)),
+    )
+    return d, p, ever, passes
+
+
+_rank_k_fixpoint_batch = jax.jit(
+    _rank_k_fixpoint_batch_impl, static_argnames=_RK_STATIC, donate_argnums=(0, 1)
+)
+
+
 @partial(jax.jit, static_argnames=("semiring", "use_pred"))
 def _affected_mask(dist, pred, u, v, w_old, *, semiring, use_pred):
     """Pairs whose stored distance may be stale after worsening the edges
@@ -138,19 +193,30 @@ def _affected_mask(dist, pred, u, v, w_old, *, semiring, use_pred):
     conservative witness test (the edge at its old weight achieves
     ``dist[i, j]``).  Both are supersets of the truly-stale set, which is
     what warm re-closure needs.
+
+    The witness compare is widened by an accumulation-scaled relative
+    tolerance: the stored optimum is a fold of up to n-1 ⊗ applications
+    while the candidate regroups it into two, so wherever ⊗ rounds
+    (reliability products, non-integer costs) the two can split by a few
+    ulps and a strict compare would *miss a truly-stale pair* — the stale
+    value then survives re-closure, which is a correctness bug, not a
+    tolerance issue.  Widening only grows the mask, and a wider mask is
+    always sound.  (Integer-valued tropical folds are exact either way.)
     """
     sr = semiring
+    rtol = jnp.finfo(dist.dtype).eps * 8.0 * dist.shape[-1]
 
     def body(i, mask):
         ui, vi = u[i], v[i]
         if use_pred:
             cand = sr.mul(dist[:, vi][:, None], dist[vi, :][None, :])
-            m = (pred[:, vi] == ui)[:, None] & ~sr.better(dist, cand)
+            wit = ~sr.better(dist, cand) | jnp.isclose(dist, cand, rtol=rtol)
+            m = (pred[:, vi] == ui)[:, None] & wit
         else:
             cand = sr.mul(
                 sr.mul(dist[:, ui], w_old[i])[:, None], dist[vi, :][None, :]
             )
-            m = ~sr.better(dist, cand)
+            m = ~sr.better(dist, cand) | jnp.isclose(dist, cand, rtol=rtol)
         return mask | m
 
     mask0 = jnp.zeros(dist.shape, bool)
@@ -202,6 +268,58 @@ _warm_resolve_donate = jax.jit(
 )
 
 
+def _row_close_impl(
+    dist, pred, h, affected, rows, *, semiring, with_pred, max_iters
+):
+    """Row-restricted bounded re-solve: same reset as the warm path, then
+    iterate the fused panel relaxation ``d[R,:] ⊕= d[R,:] ⊗ d`` instead of
+    full-matrix squaring — O(|R|·n²) per pass.
+
+    Correctness: after the reset, every non-R row still holds its exact
+    closure value (the affected mask is a per-(i, j) superset of the stale
+    set with i the source row, so rows outside R were never stale), and R
+    rows hold values between the direct edge and the true closure.
+    Decompose any optimal i→j path (i ∈ R) at its *first* node k outside R:
+    the suffix cost is already exact in ``d[k, :]``, and the prefix is a
+    chain of ≤ |R| direct-edge hops through R nodes, whose covered length
+    doubles per pass (both operands of the pass carry the previous pass's
+    state).  ``rows`` may contain duplicates (padded row lists) — duplicate
+    rows compute identical values, so the scatter stays deterministic.
+    """
+    from repro.kernels import ops as kops
+
+    sr = semiring
+    ph = init_pred(h, sr) if with_pred else None
+    d = jnp.where(affected, h, dist)
+    better = sr.better(h, d)
+    d = jnp.where(better, h, d)
+    p = None
+    if with_pred:
+        p = jnp.where(affected | better, ph, pred)
+
+    def cond(st):
+        return jnp.logical_and(st[2], st[3] < max_iters)
+
+    def body(st):
+        d, p, _, it = st
+        z, pz = kops.row_restricted_close(
+            d, rows, pred=p if with_pred else None, semiring=sr
+        )
+        return z, (pz if with_pred else p), jnp.any(sr.better(z, d)), it + 1
+
+    d, p, _, iters = jax.lax.while_loop(
+        cond, body, (d, p, jnp.bool_(True), jnp.int32(0))
+    )
+    return d, p, iters
+
+
+_RC_STATIC = ("semiring", "with_pred", "max_iters")
+_row_close = partial(jax.jit, static_argnames=_RC_STATIC)(_row_close_impl)
+_row_close_donate = jax.jit(
+    _row_close_impl, static_argnames=_RC_STATIC, donate_argnums=(0, 1)
+)
+
+
 class DynamicAPSP:
     """Incremental all-pairs engine over one persistent graph.
 
@@ -212,7 +330,11 @@ class DynamicAPSP:
 
     Parameters mirror ``solve``: ``method`` / ``with_pred`` / ``semiring``
     plus solver kwargs; ``resolve_threshold`` is the affected-pair fraction
-    above which a worsening batch goes straight to the full solver.
+    above which a worsening batch goes straight to the full solver, and
+    ``row_threshold`` is the affected-*row* fraction |R|/n above which the
+    row-restricted re-close yields to the full-matrix warm re-solve (a
+    blast radius touching most rows amortizes better over the squaring
+    path's ~log n passes than over per-row panel passes).
 
     ``donate=True`` (default): the engine owns its ``(dist, pred)`` state
     and donates the old buffers into every incremental update, so a
@@ -232,6 +354,7 @@ class DynamicAPSP:
         with_pred: bool = False,
         semiring: SemiringLike = "tropical",
         resolve_threshold: float = 0.25,
+        row_threshold: float = 0.5,
         donate: bool = True,
         validate: bool = True,
         **solve_kw,
@@ -242,6 +365,7 @@ class DynamicAPSP:
         self._with_pred = bool(with_pred)
         self._solve_kw = dict(solve_kw)
         self._threshold = float(resolve_threshold)
+        self._row_threshold = float(row_threshold)
         self._validate = bool(validate)
         self._h = np.array(h, dtype=np.float32)
         if self._h.ndim != 2 or self._h.shape[0] != self._h.shape[1]:
@@ -249,8 +373,9 @@ class DynamicAPSP:
         if self._validate:
             validate_cost_matrix(self._h, self._sr)
         self.stats: Dict[str, int] = {
-            "rank_k": 0, "warm_resolve": 0, "full_resolve": 0, "noop": 0,
-            "rank_k_passes": 0, "warm_iters": 0,
+            "rank_k": 0, "row_resolve": 0, "warm_resolve": 0,
+            "full_resolve": 0, "noop": 0,
+            "rank_k_passes": 0, "row_iters": 0, "warm_iters": 0,
         }
         self._dist: Optional[jax.Array] = None
         self._pred: Optional[jax.Array] = None
@@ -325,12 +450,18 @@ class DynamicAPSP:
         ``dist`` anywhere means the state misses an applied update);
         (3) **triangle spot check** — ``n_samples`` sampled (i, k, j)
         triples must satisfy ``dist[i,j] ⊕ (dist[i,k] ⊗ dist[k,j]) ==
-        dist[i,j]`` up to float tolerance.  All host-side on synced copies;
-        O(n² + samples), no O(n³) work — this is a *probe*, the full
-        differential oracle remains ``verify``-style cold-solve compare.
+        dist[i,j]`` up to float tolerance.  The tolerance scales with the
+        *storage* dtype of the solved state: a bf16 engine legitimately
+        carries ~2^-8 relative rounding per entry (the ≤2% mixed-precision
+        contract, COMPAT.md §Precision & memory), and probing it at f32
+        tolerance manufactures violations that get a healthy engine
+        quarantined.  All host-side on synced copies; O(n² + samples), no
+        O(n³) work — this is a *probe*, the full differential oracle
+        remains ``verify``-style cold-solve compare.
         """
         sr = self._sr
-        d = np.asarray(self._dist)
+        # bf16 arrays are compared in f32 (numpy's isclose has no bf16 path)
+        d = np.asarray(self._dist, dtype=np.float32)
         out: Dict = {
             "ok": True,
             "domain_violations": int(domain_violations(d, sr).sum()),
@@ -340,7 +471,8 @@ class DynamicAPSP:
         if out["domain_violations"]:
             out["ok"] = False
             return out                   # arithmetic below would hit the NaNs
-        close = partial(np.isclose, rtol=1e-5, atol=1e-5)
+        tol = max(1e-5, 4.0 * float(jnp.finfo(self._dist.dtype).eps))
+        close = partial(np.isclose, rtol=tol, atol=tol)
         edge = np.asarray(sr.better(self._h, d)) & ~close(self._h, d)
         out["edge_violations"] = int(edge.sum())
         rng = np.random.default_rng(0) if rng is None else rng
@@ -353,6 +485,25 @@ class DynamicAPSP:
 
     # -- updates -----------------------------------------------------------
 
+    @staticmethod
+    def _endpoints(x) -> np.ndarray:
+        """Node-id vector -> int32, rejecting anything int() would corrupt.
+
+        Triple-form batches arrive as float64 (one dtype for ids and
+        weights), so a plain ``astype(np.int32)`` silently *truncates* —
+        ``(1.7, 2, w)`` became edge (1, 2).  Non-integral (or non-finite)
+        endpoints are a caller bug and must fail loudly."""
+        a = np.asarray(x).ravel()
+        if a.dtype.kind == "f" and a.size:
+            ok = np.isfinite(a) & (a == np.round(a))
+            if not ok.all():
+                i = int(np.argmax(~ok))
+                raise UpdateError(
+                    f"edge endpoints must be integral node ids, got "
+                    f"{a[i]!r}; engine state is unchanged"
+                )
+        return a.astype(np.int32)
+
     def _normalize(self, u, v, w):
         """Validate + dedup (last wins) one update batch -> int/float arrays."""
         if v is None:
@@ -362,8 +513,8 @@ class DynamicAPSP:
             if edges.ndim != 2 or edges.shape[1] != 3:
                 raise ValueError("edges must be a sequence of (u, v, w) triples")
             u, v, w = edges[:, 0], edges[:, 1], edges[:, 2]
-        u = np.asarray(u, np.int32).ravel()
-        v = np.asarray(v, np.int32).ravel()
+        u = self._endpoints(u)
+        v = self._endpoints(v)
         w = np.asarray(w, np.float32).ravel()
         if not (u.shape == v.shape == w.shape):
             raise UpdateError("u, v, w must have matching lengths")
@@ -401,8 +552,20 @@ class DynamicAPSP:
 
         Call as ``update([(u, v, w), ...])`` or ``update(u_arr, v_arr,
         w_arr)``.  Each entry sets edge (u, v) to weight w (``semiring.zero``
-        deletes).  Returns ``{"path": "rank_k" | "warm_resolve" |
-        "full_resolve" | "noop", "n_updates": ..., ...}``.
+        deletes).  Returns ``{"path": "rank_k" | "row_resolve" |
+        "warm_resolve" | "full_resolve" | "noop", "n_updates": ..., ...}``;
+        a batch mixing worsenings and decreases reports
+        ``"<worsening path>+rank_k"``.
+
+        **Atomicity under retry:** ``h`` is mutated phase-by-phase and each
+        phase's edges are rolled back if its dispatch raises, so on any
+        exception the engine satisfies ``dist == closure(h)`` and a retry
+        of the same batch applies the full intended delta.  Worsenings
+        commit before decreases — the worsening phase must see ``h``
+        *without* the batch's decreases (the row-restricted reset assumes
+        non-affected rows are exact, which concurrent unapplied decreases
+        would break), and a retry after a decrease-phase failure re-runs
+        the worsened edges as exact no-ops.
         """
         sr = self._sr
         u, v, w = self._normalize(u, v, w)
@@ -412,14 +575,26 @@ class DynamicAPSP:
         old = self._h[u, v]
         worse = np.asarray(sr.better(old, w))      # strictly worsened edges
         changed = np.asarray(sr.better(w, old))    # strictly improved edges
-        self._h[u, v] = w
         info: Dict = {"path": "noop", "n_updates": int(u.size)}
+
+        # order-incomparable weights (NaN under validate=False): inert for
+        # the closure (they never win a semiring compare) but the escape
+        # hatch still records them in the cost matrix — a dispatch-free
+        # write, so it cannot violate atomicity
+        inert = ~worse & ~changed & ~((w == old) | (np.isnan(w) & np.isnan(old)))
+        if inert.any():
+            self._h[u[inert], v[inert]] = w[inert]
 
         if not sr.monotone_mul:
             # plateau semirings: tied witnesses can cycle, so the fused
             # incremental paths are not trusted — documented fallback only.
             if worse.any() or changed.any():
-                self.solve_full()
+                self._h[u, v] = w
+                try:
+                    self.solve_full()
+                except BaseException:
+                    self._h[u, v] = old
+                    raise
                 self.stats["full_resolve"] += 1
                 info["path"] = "full_resolve"
                 info["reason"] = "plateau semiring (monotone_mul=False)"
@@ -428,11 +603,30 @@ class DynamicAPSP:
             return info
 
         if worse.any():
-            return self._apply_worsening(u, v, old, worse, info)
-        if not changed.any():
+            self._h[u[worse], v[worse]] = w[worse]
+            try:
+                self._apply_worsening(u[worse], v[worse], old[worse], info)
+            except BaseException:
+                self._h[u[worse], v[worse]] = old[worse]
+                raise
+        if changed.any():
+            self._h[u[changed], v[changed]] = w[changed]
+            try:
+                sub: Dict = {}
+                self._apply_decreases(u[changed], v[changed], w[changed], sub)
+            except BaseException:
+                self._h[u[changed], v[changed]] = old[changed]
+                raise
+            if info["path"] == "noop":
+                info.update(sub)
+            else:
+                # mixed batch: worsenings committed first, then the rank-k
+                info["path"] = f"{info['path']}+rank_k"
+                info["passes"] = sub["passes"]
+                info["k_padded"] = sub["k_padded"]
+        if not (worse.any() or changed.any()):
             self.stats["noop"] += 1
-            return info
-        return self._apply_decreases(u[changed], v[changed], w[changed], info)
+        return info
 
     def _apply_decreases(self, u, v, w, info) -> Dict:
         """Exact rank-k fused update for a decrease-only batch."""
@@ -442,7 +636,11 @@ class DynamicAPSP:
         # inert pad edges: weight = semiring zero annihilates the candidate
         u = jnp.asarray(np.concatenate([u, np.zeros(pad, np.int32)]))
         v = jnp.asarray(np.concatenate([v, np.zeros(pad, np.int32)]))
-        w = jnp.asarray(np.concatenate([w, np.full(pad, sr.zero, np.float32)]))
+        # cast to the engine dtype: f32 weights would promote the bf16
+        # fixpoint carry and break the while_loop's type invariant
+        w = jnp.asarray(
+            np.concatenate([w, np.full(pad, sr.zero, np.float32)])
+        ).astype(self._dist.dtype)
         max_passes = ceil_log2(min(k, self.n - 1) + 1) + 1
         fixpoint = _rank_k_fixpoint_donate if self._donate else _rank_k_fixpoint
         self._dist, self._pred, passes = fixpoint(
@@ -451,15 +649,20 @@ class DynamicAPSP:
         )
         self.stats["rank_k"] += 1
         self.stats["rank_k_passes"] += int(passes)
-        self._version += 1
+        # the loop exits after one extra confirming pass, so passes == 1
+        # means the very first pass already changed nothing: the batch had
+        # no effect and snapshot staleness must not count it
+        if int(passes) > 1:
+            self._version += 1
         info.update(path="rank_k", k_padded=k, passes=int(passes))
         return info
 
-    def _apply_worsening(self, u, v, old, worse, info) -> Dict:
-        """Increase/deletion batch: affected-pair detection + bounded
-        re-solve, full solver past the threshold."""
+    def _apply_worsening(self, uw, vw, oldw, info) -> Dict:
+        """Worsened-edge batch (``h`` already carries the new weights):
+        affected-pair detection, then the cheapest sound re-close —
+        row-restricted panel fixpoint by default, full-matrix warm resolve
+        past ``row_threshold``, full solver past ``resolve_threshold``."""
         sr = self._sr
-        uw, vw, oldw = u[worse], v[worse], old[worse]
         k = _bucket_k(uw.size)
         pad = k - uw.size
         if self._with_pred:
@@ -483,7 +686,34 @@ class DynamicAPSP:
             info["path"] = "full_resolve"
             info["reason"] = f"affected fraction {frac:.2f} > threshold"
             return info
-        h = jnp.asarray(self._h)
+        rows = np.flatnonzero(np.asarray(affected.any(axis=1))).astype(np.int32)
+        r = int(rows.size)
+        info["affected_rows"] = r
+        if r == 0:
+            # no recorded path used a worsened edge: dist is already the
+            # closure of the updated graph — nothing to dispatch, and no
+            # version bump (the solved state did not change)
+            self.stats["row_resolve"] += 1
+            info.update(path="row_resolve", iters=0)
+            return info
+        h = jnp.asarray(self._h, dtype=self._dist.dtype)
+        if r <= self._row_threshold * self.n:
+            # pad the row list to a pow2 bucket (repeating a real row id —
+            # inert: duplicates compute identical panel rows) so the family
+            # of compiled (r, n) programs stays small across a serving run
+            r_pad = next_pow2(r, 4)
+            rows = np.concatenate([rows, np.full(r_pad - r, rows[0], np.int32)])
+            rc = _row_close_donate if self._donate else _row_close
+            self._dist, self._pred, iters = rc(
+                self._dist, self._pred, h, affected, jnp.asarray(rows),
+                semiring=sr, with_pred=self._with_pred,
+                max_iters=ceil_log2(min(r_pad, self.n - 1) + 1) + 1,
+            )
+            self.stats["row_resolve"] += 1
+            self.stats["row_iters"] += int(iters)
+            self._version += 1
+            info.update(path="row_resolve", iters=int(iters), rows_padded=r_pad)
+            return info
         warm = _warm_resolve_donate if self._donate else _warm_resolve
         self._dist, self._pred, iters = warm(
             self._dist, self._pred, h, affected,
@@ -495,6 +725,31 @@ class DynamicAPSP:
         self._version += 1
         info.update(path="warm_resolve", iters=int(iters))
         return info
+
+    # -- batched application (serving-tier drains) -------------------------
+
+    @staticmethod
+    def _classify_batch(eng: "DynamicAPSP", batch):
+        """Normalize one (u, v, w) batch and decide batched-dispatch
+        eligibility.  Returns ``("noop", info)``, ``("defer", None)``
+        (worsenings / plateau semirings / validation failures — anything
+        the shared rank-k program cannot express), or
+        ``("rank_k", (u, v, w, n_updates))`` with the decrease subset."""
+        sr = eng._sr
+        try:
+            u, v, w = eng._normalize(*batch)
+        except UpdateError:
+            return "defer", None
+        if u.size == 0:
+            return "noop", {"path": "noop", "n_updates": 0}
+        old = eng._h[u, v]
+        worse = np.asarray(sr.better(old, w))
+        changed = np.asarray(sr.better(w, old))
+        if not sr.monotone_mul or worse.any():
+            return "defer", None
+        if not changed.any():
+            return "noop", {"path": "noop", "n_updates": int(u.size)}
+        return "rank_k", (u[changed], v[changed], w[changed], int(u.size))
 
     # -- queries -----------------------------------------------------------
 
@@ -527,3 +782,83 @@ class DynamicAPSP:
             # reachable but truncated -> host pred-walk fallback
             return reconstruct_path(np.asarray(self._pred), i, j)
         return np.asarray(p)[: int(length)].tolist()
+
+
+def apply_updates_batched(engines, batches):
+    """Apply one update batch per engine, coalescing same-shape decrease
+    batches into a single (G, n, n) rank-k dispatch — the serving pool's
+    cross-graph drain (one program per tick instead of a per-slot loop).
+
+    ``engines`` / ``batches`` are parallel lists; each batch is an
+    ``(u, v, w)`` triple in :meth:`DynamicAPSP.update`'s array form.
+    Engines are grouped by (semiring, with_pred, n, dtype, padded-k
+    bucket); each group runs one jitted batched fixpoint
+    (``_rank_k_fixpoint_batch``) and commits per-engine state with full
+    single-engine semantics: ``h`` mutates only after the dispatch synced
+    (atomic under retry), versions bump only for graphs whose state
+    actually moved, stats mirror :meth:`DynamicAPSP.update`.
+
+    Returns ``(infos, deferred)``: ``infos[i]`` is engine i's info dict
+    (``None`` where deferred) and ``deferred`` lists indices whose batch
+    must take the per-engine path — worsenings, plateau semirings,
+    validation failures, or a group whose batched dispatch itself failed
+    (those engines are left untouched, so the caller's retry machinery
+    sees the true pre-update state).
+    """
+    infos: List[Optional[Dict]] = [None] * len(engines)
+    deferred: List[int] = []
+    groups: Dict[tuple, List[tuple]] = {}
+    for i, (eng, batch) in enumerate(zip(engines, batches)):
+        kind, payload = DynamicAPSP._classify_batch(eng, batch)
+        if kind == "defer":
+            deferred.append(i)
+            continue
+        if kind == "noop":
+            eng.stats["noop"] += 1
+            infos[i] = payload
+            continue
+        u, v, w, n_updates = payload
+        key = (
+            eng._sr.name, eng._with_pred, eng.n, str(eng._dist.dtype),
+            _bucket_k(int(u.size)),
+        )
+        groups.setdefault(key, []).append((i, eng, u, v, w, n_updates))
+
+    for (_, with_pred, n, _dt, kb), members in groups.items():
+        sr = members[0][1]._sr
+        g = len(members)
+        uu = np.zeros((g, kb), np.int32)
+        vv = np.zeros((g, kb), np.int32)
+        ww = np.full((g, kb), sr.zero, np.float32)   # inert pad edges
+        for j, (_, _, u, v, w, _) in enumerate(members):
+            uu[j, : u.size], vv[j, : v.size], ww[j, : w.size] = u, v, w
+        try:
+            d = jnp.stack([m[1]._dist for m in members])
+            p = jnp.stack([m[1]._pred for m in members]) if with_pred else None
+            d, p, ever, passes = _rank_k_fixpoint_batch(
+                d, p, jnp.asarray(uu), jnp.asarray(vv),
+                jnp.asarray(ww).astype(d.dtype),
+                semiring=sr, with_pred=with_pred,
+                max_passes=ceil_log2(min(kb, n - 1) + 1) + 1,
+            )
+            n_passes = int(passes)          # forces sync before any h write
+            ever = np.asarray(ever)
+        except Exception:
+            # the whole group's engines are untouched (h mutates below):
+            # send them down the per-engine path and its retry machinery
+            deferred.extend(m[0] for m in members)
+            continue
+        for j, (i, eng, u, v, w, n_updates) in enumerate(members):
+            eng._h[u, v] = w
+            eng._dist = d[j]
+            if with_pred:
+                eng._pred = p[j]
+            eng.stats["rank_k"] += 1
+            eng.stats["rank_k_passes"] += n_passes
+            if bool(ever[j]):
+                eng._version += 1
+            infos[i] = {
+                "path": "rank_k", "n_updates": n_updates, "k_padded": kb,
+                "passes": n_passes, "batched": g,
+            }
+    return infos, sorted(deferred)

@@ -64,12 +64,15 @@ __all__ = [
     "bucket",
     "key_for",
     "key_for_fw_round",
+    "key_for_row_close",
     "lookup",
     "lookup_fw_round",
+    "lookup_row_close",
     "candidates",
     "tune",
     "tune_blocked_fw",
     "tune_fw_round",
+    "tune_row_close",
     "load_entries",
     "touched_entries",
     "measure",
@@ -78,6 +81,9 @@ __all__ = [
 SCHEMA = 1
 _PALLAS_KEYS = ("bm", "bn", "bk", "kc")
 _XLA_KEYS = ("row_chunk", "k_chunk")
+# the row-restricted close pass gathers one row per grid program, so the
+# Pallas row-block size is pinned to 1 and only (bn, bk, kc) are tunable
+_ROWCLOSE_PALLAS_KEYS = ("bn", "bk", "kc")
 _FW_ROUND_KEYS = ("block_size", "round_mode")
 _FW_ROUND_BLOCKS = (32, 64, 128, 256)
 _FW_ROUND_MODES = ("fused", "split")
@@ -141,6 +147,21 @@ def key_for_fw_round(
     name = jnp.dtype(dtype).name
     gb = bucket(g) if g else 0
     key = f"fwround|{backend}|{name}|g{gb}|n{bucket(n)}"
+    if semiring != "tropical":
+        key += f"|s:{semiring}"
+    return key
+
+
+def key_for_row_close(
+    backend: str, dtype, r: int, n: int, semiring: str = "tropical"
+) -> str:
+    """Cache key of the row-restricted close pass family (``rowclose|...``):
+    one fused (r, n) x (n, n) panel relaxation against the full matrix,
+    keyed by the affected-row-count bucket r and the matrix edge n.  The
+    shape is asymmetric enough (r << n on the serving path) that reusing
+    the square ``key_for`` buckets would systematically mis-tune it."""
+    name = jnp.dtype(dtype).name
+    key = f"rowclose|{backend}|{name}|r{bucket(r)}|n{bucket(n)}"
     if semiring != "tropical":
         key += f"|s:{semiring}"
     return key
@@ -249,6 +270,27 @@ def lookup_fw_round(
                 if p.get("round_mode") in _FW_ROUND_MODES:
                     out["round_mode"] = p["round_mode"]
                 return out
+    return {}
+
+
+def lookup_row_close(
+    backend: str, dtype, r: int, n: int, semiring: str = "tropical"
+) -> dict:
+    """Winner chunking for one row-restricted close pass, or {} (miss /
+    disabled).  Non-tropical falls back to the tropical entry of the same
+    shape (identical memory traffic); there is no g axis — the serving
+    tier's batched drains go through the rank-k family, not this one."""
+    if mode() == "off":
+        return {}
+    entries = load_entries()
+    srs = (semiring, "tropical") if semiring != "tropical" else ("tropical",)
+    for sq in srs:
+        key = key_for_row_close(backend, dtype, r, n, semiring=sq)
+        e = entries.get(key)
+        if e and isinstance(e.get("params"), dict):
+            _touched.add(key)
+            keys = _XLA_KEYS if backend == "xla" else _ROWCLOSE_PALLAS_KEYS
+            return {k: int(v) for k, v in e["params"].items() if k in keys}
     return {}
 
 
@@ -400,6 +442,97 @@ def tune(
 
     best_params, best_us = None, float("inf")
     cands = candidates(b, mb, kb, nb)
+    for params in cands:
+        us = measure(make(params), reps)
+        if us < best_us:
+            best_params, best_us = params, us
+    entry = {
+        "params": best_params,
+        "us": best_us,
+        "lattice": len(cands),
+        "source": "measured",
+        "measured_at": datetime.datetime.now().isoformat(timespec="seconds"),
+    }
+    _save({key: entry})
+    return entry
+
+
+def _row_close_candidates(backend: str, r: int, n: int) -> List[dict]:
+    """Candidate lattice for the row-restricted close pass: the panel has r
+    rows (often < the smallest row_chunk), so the XLA lattice is the plain
+    one clamped to r; the Pallas lattice drops bm (pinned to 1)."""
+    if backend == "xla":
+        out = []
+        for cand in candidates("xla", r, n, n):
+            cand = dict(cand, row_chunk=min(cand["row_chunk"], bucket(r)))
+            if cand not in out:
+                out.append(cand)
+        return out
+    out, seen = [], set()
+    for bn in (128, 256):
+        for bk in (256, 512):
+            for kc in (8, 16):
+                cand = (min(bn, max(bucket(n), 128)), min(bk, bucket(n)), kc)
+                if cand[1] % kc or cand in seen:
+                    continue
+                seen.add(cand)
+                out.append(dict(zip(_ROWCLOSE_PALLAS_KEYS, cand)))
+    return out or [dict(zip(_ROWCLOSE_PALLAS_KEYS, (128, 512, 8)))]
+
+
+def tune_row_close(
+    r: int,
+    n: int,
+    *,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    force: Optional[bool] = None,
+    semiring: str = "tropical",
+) -> dict:
+    """Measure the row-restricted close lattice for one (r, n) bucket and
+    persist the winner under the ``rowclose|...`` key.  Semantics mirror
+    :func:`tune` (cache reuse unless forced, disabled under
+    ``REPRO_AUTOTUNE=0``)."""
+    from repro.core.semiring import get_semiring
+
+    from . import ops
+
+    b = backend or ops.backend()
+    sr = get_semiring(semiring)
+    md = mode()
+    if md == "off":
+        return {"params": {}, "source": "disabled"}
+    key = key_for_row_close(b, dtype, r, n, semiring=sr.name)
+    _touched.add(key)
+    refresh = (md == "force") if force is None else force
+    if not refresh:
+        cached = load_entries().get(key)
+        if cached and isinstance(cached.get("params"), dict):
+            keys = _XLA_KEYS if b == "xla" else _ROWCLOSE_PALLAS_KEYS
+            out = dict(cached)
+            out["params"] = {
+                k: int(v) for k, v in cached["params"].items() if k in keys
+            }
+            out["source"] = "cache"
+            return out
+
+    rb, nb = max(bucket(r) // 2, 1), bucket(n)   # bucket is next-pow2: undo
+    rb = min(max(r, rb), nb)
+    d, _, _ = _inputs(nb, nb, nb, 0, dtype, semiring=sr.name)
+    idx = jnp.arange(nb)
+    d = d.at[idx, idx].set(jnp.asarray(sr.one, dtype))
+    rows = jnp.asarray(
+        np.random.default_rng(0).choice(nb, size=rb, replace=False), jnp.int32
+    )
+
+    def make(params):
+        return lambda: ops.row_restricted_close(
+            d, rows, semiring=sr, **params
+        )[0]
+
+    best_params, best_us = None, float("inf")
+    cands = _row_close_candidates(b, rb, nb)
     for params in cands:
         us = measure(make(params), reps)
         if us < best_us:

@@ -64,6 +64,7 @@ __all__ = [
     "minplus_pred",
     "pred_from_kstar",
     "rank_k_update",
+    "row_restricted_close",
     "fw_block",
     "fw_block_pred",
     "fw_round",
@@ -318,6 +319,84 @@ def rank_k_update(
     pz = jnp.where(v[ks] == cols, u[ks], p_via)  # empty tail: pred is u_{k*}
     pz = jnp.where(kstar < 0, pred, pz)
     return z, pz
+
+
+def row_restricted_close(
+    dist: jax.Array,
+    rows: jax.Array,
+    *,
+    pred: Optional[jax.Array] = None,
+    semiring: SemiringLike = "tropical",
+    **block_kw,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One row-restricted relaxation pass: ``dist[R,:] ⊕= dist[R,:] ⊗ dist``.
+
+    ``rows`` is a traced int32 vector of affected source-row ids R
+    (duplicates allowed — padded row lists repeat an id; duplicates compute
+    identical panel rows, so the scatter back is deterministic).  Non-R
+    rows pass through untouched, which is what makes the iterated pass a
+    *bounded* re-solve: the remainder of ``dist`` is already closed, so
+    each pass doubles the covered affected-prefix length exactly like the
+    squaring solver, at O(|R|·n²) instead of O(n³).  The incremental
+    engine (``repro.core.dynamic``) iterates this to early-exit fixpoint
+    on the worsening path.
+
+    With ``pred`` the pass runs on the fused-argmin kernels; the
+    contraction axis indexes nodes, so :func:`pred_from_kstar` applies
+    directly (fallback = the panel's old predecessors where nothing
+    improved).  Returns the updated full (n, n) matrix (and predecessor
+    matrix) — a panel compute plus one scatter, never a full re-close.
+
+    2D (n, n) state only; semiring and block-size resolution as in
+    :func:`minplus` except the autotune consult hits the dedicated
+    ``rowclose|…`` key family (the (r, n) x (n, n) shape is asymmetric
+    enough that square-bucket winners systematically mis-tune it).
+    """
+    sr = get_semiring(semiring)
+    b = backend()
+    mixed = _check_mixed(sr, dist)
+    r, n = rows.shape[0], dist.shape[-1]
+    if not block_kw:
+        from . import autotune
+
+        block_kw = autotune.lookup_row_close(
+            b, dist.dtype, r, n, semiring=sr.name
+        )
+    keys = ("row_chunk", "k_chunk") if b == "xla" else ("bn", "bk", "kc")
+    kw = {k_: v for k_, v in block_kw.items() if k_ in keys}
+
+    if b == "xla":
+        rc, kc = kw.get("row_chunk"), kw.get("k_chunk")
+        panel = dist[rows, :]
+        if pred is None:
+            z = minplus_xla(
+                panel, dist, panel, row_chunk=rc, k_chunk=kc, semiring=sr
+            )
+            return dist.at[rows].set(z), None
+        z, kstar = minplus_argmin_xla(
+            panel, dist, panel, row_chunk=rc, k_chunk=kc, semiring=sr
+        )
+        ppanel = pred[rows, :]
+        pz = pred_from_kstar(
+            kstar, ppanel, pred, k_offset=0, j_offset=0, fallback=ppanel
+        )
+        return dist.at[rows].set(z), pred.at[rows].set(pz)
+
+    from .row_close import row_close_pallas
+
+    d = dist.astype(jnp.float32) if mixed else dist
+    z, kstar = row_close_pallas(
+        d, rows, track=pred is not None, interpret=(b == "interpret"),
+        semiring=sr, **kw,
+    )
+    z = z.astype(dist.dtype)
+    if pred is None:
+        return dist.at[rows].set(z), None
+    ppanel = pred[rows, :]
+    pz = pred_from_kstar(
+        kstar, ppanel, pred, k_offset=0, j_offset=0, fallback=ppanel
+    )
+    return dist.at[rows].set(z), pred.at[rows].set(pz)
 
 
 def fw_block(d: jax.Array, *, semiring: SemiringLike = "tropical") -> jax.Array:

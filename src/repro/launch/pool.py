@@ -43,6 +43,9 @@ Protection layers, outermost first:
 * **Admission control** — queries are shed to the snapshot path when the
   pending-update backlog exceeds ``backlog_watermark``; update batches
   queue per slot and are coalesced into one rank-k dispatch at drain.
+  ``drain_all`` goes one level further: healthy same-shape slots are
+  stacked into one (G, n, n) rank-k fixpoint per tick (cross-graph
+  batching), with any deferred slot falling back to its sequential drain.
 * **Deadlines** — per-query budget enforced by a single-worker timeout
   wrapper around the live dispatch; a miss is answered from the snapshot
   and counted, never blocked on.
@@ -69,7 +72,14 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import DynamicAPSP, UpdateError, domain_violations, get_semiring, solve
+from repro.core import (
+    DynamicAPSP,
+    UpdateError,
+    apply_updates_batched,
+    domain_violations,
+    get_semiring,
+    solve,
+)
 from repro.core.semiring import SemiringLike
 
 from .faults import FaultInjector, InjectedCrash
@@ -399,6 +409,7 @@ class EnginePool:
             "deadline_misses": 0, "poisoned_served": 0, "poison_blocked": 0,
             "updates_submitted": 0, "updates_rejected": 0,
             "updates_failed": 0, "drain_coalesced": 0, "drain_fallbacks": 0,
+            "drain_batched": 0,
             "over_budget_admissions": 0,
             "verify_drift": 0, "verify_ok": 0,
         }
@@ -514,9 +525,83 @@ class EnginePool:
                 break
         return infos
 
-    def drain_all(self) -> None:
-        for gid in list(self.slots):
+    def drain_all(self, batched: bool = True) -> None:
+        """Drain every slot's queue.  When ``batched`` (the default) and no
+        chaos is configured, healthy same-shape slots are coalesced into one
+        stacked (G, ·, ·) rank-k dispatch per tick via
+        :func:`repro.core.dynamic.apply_updates_batched` — one compiled
+        fixpoint over the whole group instead of G sequential dispatches.
+        Slots the batcher defers (worsenings, plateau semirings, validation
+        errors) requeue their original batches and fall back to the
+        per-slot :meth:`drain` path, so semantics match the unbatched loop
+        exactly.  Under fault injection the batched path is skipped
+        entirely: chaos hooks (crash, latency, corruption) are wired into
+        the per-slot apply stack and must keep firing per update."""
+        if not batched or self.injector.spec.any():
+            for gid in list(self.slots):
+                self.drain(gid)
+            return
+        groups: Dict[Tuple[int, str], List[EngineSlot]] = {}
+        rest: List[int] = []
+        for gid, slot in list(self.slots.items()):
+            if (
+                slot.pending
+                and slot.engine is not None
+                and slot.state == SlotState.HEALTHY
+            ):
+                key = (slot.n, str(slot.engine.dist.dtype))
+                groups.setdefault(key, []).append(slot)
+            else:
+                rest.append(gid)
+        for gid in rest:
             self.drain(gid)
+        for members in groups.values():
+            if len(members) < 2:
+                for slot in members:
+                    self.drain(slot.gid)
+                continue
+            popped: List[Tuple[EngineSlot, List]] = []
+            coalesced = []
+            for slot in members:
+                self._touch(slot)
+                bs, slot.pending = slot.pending, []
+                popped.append((slot, bs))
+                coalesced.append((
+                    np.concatenate([b[0] for b in bs]),
+                    np.concatenate([b[1] for b in bs]),
+                    np.concatenate([b[2] for b in bs]),
+                ))
+            infos, deferred = apply_updates_batched(
+                [slot.engine for slot, _ in popped], coalesced
+            )
+            self.stats["drain_batched"] += 1
+            deferred_set = set(deferred)
+            for i, (slot, bs) in enumerate(popped):
+                if i in deferred_set:
+                    # the batcher never touched this engine: requeue the
+                    # original batches and run the sequential path (which
+                    # handles worsenings, rejections, and retries)
+                    slot.pending = bs + slot.pending
+                    self.drain(slot.gid)
+                    continue
+                if len(bs) > 1:
+                    self.stats["drain_coalesced"] += 1
+                slot.stats["updates_applied"] += 1
+                probe = slot.engine.health_probe(slot.probe_samples, slot._rng)
+                if not probe["ok"]:
+                    slot.stats["probe_failures"] += 1
+                    slot._transition(
+                        SlotState.DEGRADED,
+                        f"post-batched-drain probe failed: "
+                        f"domain={probe['domain_violations']} "
+                        f"edge={probe['edge_violations']} "
+                        f"tri={probe['triangle_violations']}",
+                    )
+                    slot.recover()
+                else:
+                    slot._commit_snapshot()
+                    if slot.state != SlotState.HEALTHY:
+                        slot._transition(SlotState.HEALTHY, "batched drain + probe ok")
 
     # -- queries ------------------------------------------------------------
 

@@ -83,10 +83,152 @@ def test_deletion_disconnects(rng):
     eng = DynamicAPSP(h, block_size=8)
     assert float(eng.dist[0, n - 1]) == n - 1
     info = eng.update([(5, 6, np.inf)])
-    assert info["path"] in ("warm_resolve", "full_resolve")
+    assert info["path"] in ("row_resolve", "warm_resolve", "full_resolve")
     ref = solve(eng.h, block_size=8)
     assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist))
     assert np.isinf(np.asarray(eng.dist)[0, n - 1])
+
+
+def _worsen(rng, h, k):
+    """Worsen k existing finite edges (integer deltas keep tropical exact)."""
+    fin = np.argwhere(np.isfinite(h) & (h > 0))
+    idx = fin[rng.choice(len(fin), size=min(k, len(fin)), replace=False)]
+    u = idx[:, 0].astype(np.int32)
+    v = idx[:, 1].astype(np.int32)
+    w = (h[u, v] + rng.integers(50, 300, size=len(u))).astype(np.float32)
+    return u, v, w
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("with_pred", [False, True])
+@pytest.mark.parametrize("donate", [False, True])
+def test_worsening_row_resolve_bit_exact(n, with_pred, donate, rng):
+    """Tentpole: worsening sequences through the row-restricted re-solve
+    must stay bit-exact against a cold solve at every step."""
+    g = generate_np(rng, n, rho=40.0)
+    eng = DynamicAPSP(g.h, with_pred=with_pred, donate=donate, block_size=16,
+                      resolve_threshold=1.0, row_threshold=1.0)
+    for step in range(5):
+        u, v, w = _worsen(rng, eng.h, int(rng.integers(1, 6)))
+        info = eng.update(u, v, w)
+        assert info["path"] in ("row_resolve", "noop"), info
+        ref = solve(eng.h, with_pred=with_pred, block_size=16)
+        assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist)), (
+            n, with_pred, donate, step)
+        if with_pred:
+            assert validate_tree(eng.h, np.asarray(eng.dist),
+                                 np.asarray(eng.pred)), (n, step)
+    assert eng.stats["row_resolve"] >= 1
+    assert eng.stats["warm_resolve"] == 0 and eng.stats["full_resolve"] == 0
+
+
+@pytest.mark.parametrize("with_pred", [False, True])
+def test_worsening_mixed_batches_row_plus_rank_k(with_pred, rng):
+    """Batches mixing worsened and improved edges take the two-phase
+    row_resolve+rank_k path and still match a cold solve bit-exactly."""
+    g = generate_np(rng, 48, rho=40.0)
+    eng = DynamicAPSP(g.h, with_pred=with_pred, block_size=16,
+                      resolve_threshold=1.0, row_threshold=1.0)
+    seen = set()
+    for step in range(6):
+        uw, vw, ww = _worsen(rng, eng.h, 2)
+        ud, vd, wd = generate_edge_updates(rng, eng.h, 3, worsen_frac=0.0)
+        u = np.concatenate([uw, ud])
+        v = np.concatenate([vw, vd])
+        w = np.concatenate([ww, wd])
+        seen.add(eng.update(u, v, w)["path"])
+        ref = solve(eng.h, with_pred=with_pred, block_size=16)
+        assert np.array_equal(np.asarray(eng.dist), np.asarray(ref.dist)), step
+        if with_pred:
+            assert validate_tree(eng.h, np.asarray(eng.dist),
+                                 np.asarray(eng.pred)), step
+    assert "row_resolve+rank_k" in seen, seen
+
+
+def test_worsening_reliability_row_resolve(rng):
+    """reliability (max, x) is monotone, so lowering an edge probability
+    (a worsening) is eligible for the row-restricted path too."""
+    n = 24
+    p = np.zeros((n, n), np.float32)
+    edge = rng.uniform(size=(n, n)) < 0.4
+    np.fill_diagonal(edge, False)
+    p[edge] = rng.uniform(0.05, 0.95, size=int(edge.sum()))
+    np.fill_diagonal(p, 1.0)
+    eng = DynamicAPSP(p, semiring="reliability", block_size=8,
+                      resolve_threshold=1.0, row_threshold=1.0)
+    for step in range(4):
+        h = eng.h
+        fin = np.argwhere((h > 0) & (h < 1.0))
+        i, j = fin[int(rng.integers(0, len(fin)))]
+        info = eng.update([(int(i), int(j), float(h[i, j]) * 0.25)])
+        assert info["path"] in ("row_resolve", "noop"), info
+        ref = solve(eng.h, semiring="reliability", block_size=8)
+        # float products regroup between the incremental and cold paths, so
+        # (unlike integer-valued tropical) only the oracle tolerance holds
+        assert np.allclose(np.asarray(eng.dist), np.asarray(ref.dist),
+                           rtol=1e-5, atol=1e-6), step
+    assert eng.stats["row_resolve"] >= 1
+
+
+def test_row_threshold_boundary_matches_warm_resolve(rng):
+    """Twin engines on the crossover boundary: always-row vs always-warm
+    must agree bit-for-bit on the same worsening sequence (the threshold
+    is a performance knob, never a semantics knob)."""
+    g = generate_np(rng, 37, rho=40.0)
+    row = DynamicAPSP(g.h, block_size=16, resolve_threshold=1.0,
+                      row_threshold=1.0)
+    warm = DynamicAPSP(g.h, block_size=16, resolve_threshold=1.0,
+                       row_threshold=0.0)
+    for step in range(4):
+        u, v, w = _worsen(rng, row.h, int(rng.integers(1, 17)))
+        ir = row.update(u, v, w)
+        iw = warm.update(u, v, w)
+        assert ir["path"] in ("row_resolve", "noop")
+        # row_threshold=0 still reports row_resolve/iters=0 when the
+        # affected row set is empty (nothing to dispatch on either path)
+        assert iw["path"] in ("warm_resolve", "noop") or iw.get("iters") == 0
+        assert np.array_equal(np.asarray(row.dist), np.asarray(warm.dist)), step
+    assert row.stats["row_resolve"] >= 1 and warm.stats["warm_resolve"] >= 1
+    ref = solve(row.h, block_size=16)
+    assert np.array_equal(np.asarray(row.dist), np.asarray(ref.dist))
+
+
+def test_version_stable_when_fixpoint_unchanged():
+    """Satellite: a strict h-decrease that changes no distance must not
+    bump the version (snapshot staleness accounting depends on it)."""
+    n = 8
+    h = np.full((n, n), np.inf, np.float32)
+    np.fill_diagonal(h, 0.0)
+    for i in range(n - 1):
+        h[i, i + 1] = 1.0
+    eng = DynamicAPSP(h, block_size=8)
+    v0 = eng.version
+    # insert a direct 0->2 edge far worse than the existing 2-hop path:
+    # h strictly decreases (inf -> 50) but the closure is unchanged
+    info = eng.update([(0, 2, 50.0)])
+    assert info["path"] == "rank_k" and info["passes"] == 1
+    assert eng.version == v0, "no-effect update must not advance the version"
+    assert float(eng.dist[0, 2]) == 2.0
+    # a real improvement still bumps it
+    eng.update([(0, 2, 1.0)])
+    assert eng.version == v0 + 1
+
+
+def test_update_rejects_non_integral_endpoints(rng):
+    """Satellite: float endpoints must not be silently truncated to int."""
+    g = generate_np(rng, 16, rho=40.0)
+    eng = DynamicAPSP(g.h, block_size=8)
+    before = np.asarray(eng.dist).copy()
+    v0 = eng.version
+    with pytest.raises(ValueError, match="integral"):
+        eng.update([(1.7, 2, 3.0)])
+    with pytest.raises(ValueError, match="integral"):
+        eng.update(np.array([0.5]), np.array([2]), np.array([3.0]))
+    np.testing.assert_array_equal(np.asarray(eng.dist), before)
+    assert eng.version == v0
+    # integral-valued floats are fine (numpy indexing products often are)
+    eng.update(np.array([1.0]), np.array([2.0]), np.array([3.0]))
+    assert float(eng.h[1, 2]) == 3.0
 
 
 def test_increase_reroutes(rng):

@@ -408,6 +408,140 @@ def test_drain_per_batch_fallback_keeps_clean_batches():
 
 
 # ---------------------------------------------------------------------------
+# update atomicity under retry + batched drains
+# ---------------------------------------------------------------------------
+
+def test_update_atomic_under_midflight_crash_retry(monkeypatch):
+    """Regression (tentpole satellite): a crash *after* the engine has
+    started applying a batch must not lose the batch on retry.
+
+    The old ordering wrote ``h[u, v] = w`` before dispatching, so a retry
+    re-read ``old`` from the already-mutated matrix, classified the batch
+    as a no-op, and silently dropped the update — the engine then served
+    the stale closure forever.  With the atomic ordering (h rolls back on
+    any dispatch failure) the retried batch re-applies for real."""
+    import repro.core.dynamic as dyn
+
+    pool = make_pool()
+    slot = pool.slots[0]
+    real = dyn._rank_k_fixpoint_donate
+    fired = {"n": 0}
+
+    def crash_once(*args, **kwargs):
+        if fired["n"] == 0:
+            fired["n"] += 1
+            raise RuntimeError("injected mid-update crash")
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(dyn, "_rank_k_fixpoint_donate", crash_once)
+    info = slot.apply_update(
+        np.array([0], np.int32), np.array([1], np.int32),
+        np.array([0.5], np.float32))
+    assert fired["n"] == 1                      # the crash actually fired
+    assert slot.stats["retries"] == 1
+    assert info["path"] == "rank_k"             # retry re-applied, not noop
+    assert float(slot.engine.h[0, 1]) == 0.5
+    ref = solve(slot.engine.h, method="blocked_fw", block_size=8)
+    np.testing.assert_array_equal(
+        np.asarray(slot.engine.dist), np.asarray(ref.dist))
+
+
+def test_update_state_unchanged_when_dispatch_raises(monkeypatch):
+    """The engine-level half of atomicity: if the jitted dispatch raises,
+    ``h`` must roll back so the engine still matches its own closure."""
+    import repro.core.dynamic as dyn
+
+    eng = DynamicAPSP(graph(), block_size=8)
+    h_before = eng.h.copy()
+
+    def boom(*args, **kwargs):
+        raise RuntimeError("injected dispatch failure")
+
+    monkeypatch.setattr(dyn, "_rank_k_fixpoint_donate", boom)
+    monkeypatch.setattr(dyn, "_rank_k_fixpoint", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.update([(0, 1, 0.5)])
+    np.testing.assert_array_equal(eng.h, h_before)
+    ref = solve(eng.h, block_size=8)
+    np.testing.assert_array_equal(np.asarray(eng.dist), np.asarray(ref.dist))
+
+
+def test_health_probe_bf16_tolerance():
+    """Satellite: the probe tolerance must scale with the state dtype — a
+    healthy bf16 engine (~2³ ulp ≈ 2-3% triangle slack) must not be
+    quarantined by the f32 tolerance."""
+    import jax.numpy as jnp
+
+    eng = DynamicAPSP(graph(24, seed=5), block_size=8, dtype=jnp.bfloat16)
+    assert eng.dist.dtype == jnp.bfloat16
+    probe = eng.health_probe(256, np.random.default_rng(0))
+    assert probe["ok"], probe
+    eng.update([(0, 1, 0.25)])
+    probe = eng.health_probe(256, np.random.default_rng(1))
+    assert probe["ok"], probe
+
+
+def test_drain_all_batches_same_shape_slots():
+    """Tentpole rider: drain_all coalesces same-shape healthy slots into
+    one stacked rank-k dispatch and the result matches per-slot drains."""
+    pool = make_pool(n=16, graphs=3)
+    rng = np.random.default_rng(7)
+    expect = {}
+    for gid in range(3):
+        h = pool.slots[gid].engine.h
+        u, v, w = generate_edge_updates(rng, h, 4)
+        h2 = np.array(h)
+        h2[u, v] = np.minimum(h2[u, v], w)
+        expect[gid] = h2
+        pool.submit_update(gid, u, v, w)
+    pool.drain_all()
+    assert pool.stats["drain_batched"] == 1
+    for gid in range(3):
+        slot = pool.slots[gid]
+        assert slot.state == SlotState.HEALTHY and not slot.pending
+        assert slot.stats["updates_applied"] == 1
+        ref = solve(expect[gid], method="blocked_fw", block_size=8)
+        np.testing.assert_array_equal(
+            np.asarray(slot.engine.dist), np.asarray(ref.dist))
+
+
+def test_drain_all_batched_defers_worsenings_to_sequential():
+    """A slot whose coalesced batch contains a worsening is deferred by
+    the batcher and handled by its own sequential drain — same final
+    state, batched dispatch still fires for the clean slots."""
+    pool = make_pool(n=16, graphs=3)
+    rng = np.random.default_rng(11)
+    for gid in range(3):
+        h = pool.slots[gid].engine.h
+        u, v, w = generate_edge_updates(rng, h, 4)
+        if gid == 0:                         # worsen an existing edge
+            fin = np.argwhere(np.isfinite(h) & (h > 0))
+            i, j = fin[0]
+            u, v = np.array([i], np.int32), np.array([j], np.int32)
+            w = np.array([float(h[i, j]) + 100.0], np.float32)
+        pool.submit_update(gid, u, v, w)
+    pool.drain_all()
+    assert pool.stats["drain_batched"] == 1
+    for gid in range(3):
+        slot = pool.slots[gid]
+        assert slot.state == SlotState.HEALTHY and not slot.pending
+        ref = solve(slot.engine.h, method="blocked_fw", block_size=8)
+        np.testing.assert_array_equal(
+            np.asarray(slot.engine.dist), np.asarray(ref.dist))
+
+
+def test_drain_all_under_chaos_skips_batched_path():
+    """Fault injection must keep flowing through the per-slot apply stack:
+    with any chaos configured the batched fast path is disabled."""
+    inj = FaultInjector(FaultSpec(nan=0.0, crash=0.5, crash_count=1), seed=3)
+    pool = make_pool(n=16, graphs=2, injector=inj, max_retries=3)
+    for gid in range(2):
+        pool.submit_update(gid, [0], [1], [0.5])
+    pool.drain_all()
+    assert pool.stats["drain_batched"] == 0
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: chaos serving run keeps the contract
 # ---------------------------------------------------------------------------
 
