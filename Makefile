@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dynamic test-resilience lint-dispatch analyze analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic serve-chaos
+.PHONY: test test-fast test-dynamic test-resilience lint-dispatch analyze analyze-kernels analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic serve-chaos
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -19,8 +19,11 @@ test-resilience:  ## serving-tier fault-tolerance suite (chaos, lifecycle, evict
 lint-dispatch:  ## back-compat alias: the unfused-dispatch check alone (see analyze)
 	$(PY) tools/lint_dispatch.py
 
-analyze:        ## full invariant sweep: AST checkers + jaxpr/HLO donation sanitizer
+analyze:        ## full invariant sweep: AST checkers + donation sanitizer + kernel grid verifier
 	$(PY) tools/analyze.py
+
+analyze-kernels:  ## concolic Pallas grid verifier alone (race/bounds/coverage/padding proofs)
+	$(PY) tools/analyze.py --only kernel-grid
 
 analyze-baseline:  ## regenerate the committed machine-readable clean baseline
 	$(PY) tools/analyze.py --json > ANALYZE_baseline.json

@@ -22,9 +22,16 @@ Importing this package populates the registry:
 ``donation``           donating jits compile to real input/output aliases,
                        no read-after-donation, buffers actually consumed
                        (tier B, jaxpr/HLO — real repo only)
-``except-swallow``     serving-tier except handlers re-raise, transition
-                       slot state, or record the failure (tier A, AST,
-                       *advisory* — reported, never gates)
+``except-swallow``     failure-path except handlers (serving tier +
+                       dynamic-engine rollback/retry) re-raise, transition
+                       slot state, route to a deferral queue, or record
+                       the failure (tier A, AST, *advisory* — reported,
+                       never gates)
+``kernel-grid``        concolic Pallas grid verifier: kernel index maps
+                       are race-free, in bounds, exactly cover the output,
+                       and match the semiring oracle over the canonical
+                       shape lattice (tier B, executes kernel builders —
+                       real repo only)
 ==================  =====================================================
 """
 
@@ -35,6 +42,7 @@ from . import purity as _purity                # noqa: F401
 from . import autotune_key as _autotune        # noqa: F401
 from . import donation as _donation            # noqa: F401
 from . import except_swallow as _swallow       # noqa: F401
+from . import kernelcheck as _kernelcheck      # noqa: F401
 from .donation import DonationSpec, run_donation_checks
 
 __all__ = [

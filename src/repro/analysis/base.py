@@ -159,7 +159,9 @@ def _suppressed(project: Project, f: Finding) -> bool:
     if pragmas.file_allows(project.lines(f.path), f.check):
         return True
     if f.line:
-        return pragmas.line_allows(project.line(f.path, f.line), f.check)
+        # decorator-aware: a pragma on the decorator stack covers a finding
+        # on the decorated def/class line and vice versa
+        return pragmas.line_allows_at(project.lines(f.path), f.line, f.check)
     return False
 
 

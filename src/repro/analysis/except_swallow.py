@@ -8,9 +8,11 @@ bare ``except: pass`` in the pool turns an injected crash into a silently
 wrong answer — the exact bug class the supervised-slot lifecycle exists to
 make impossible.
 
-Scope: every ``except`` handler in ``src/repro/launch/*``.  Accepted
-evidence inside the handler body (transitively, nested statements
-included):
+Scope: every ``except`` handler in ``src/repro/launch/*`` plus the
+dynamic engine's rollback/retry handlers (``src/repro/core/dynamic.py`` —
+the other failure-routing surface: atomic-update rollbacks and the batched
+drain's per-engine deferral).  Accepted evidence inside the handler body
+(transitively, nested statements included):
 
 * a ``raise`` (re-raise or translation to a typed error);
 * a call to a lifecycle/recovery method — ``_transition`` / ``transition``
@@ -18,7 +20,12 @@ included):
   / ``evict`` — or to a recording sink: any ``record*`` / ``_record*``
   name, ``format_exc`` (traceback capture), ``save`` (checkpoint before
   surrender);
-* a store into a ``stats`` counter mapping (``self.stats["x"] += 1``).
+* a store into a ``stats`` counter mapping (``self.stats["x"] += 1``);
+* routing the failed work to a deferral queue — ``.append``/``.extend``
+  on a receiver whose name contains ``defer`` (``deferred.extend(...)``)
+  or a ``return`` whose value carries the literal ``"defer"`` status
+  (``return "defer", None``) — deferred work re-enters the retry
+  machinery, so the failure is handled, not hidden.
 
 This check is **advisory** (tier A, AST): it reports via ``make analyze``
 but never fails the gate — handler intent is heuristic, and a false
@@ -68,6 +75,25 @@ def _is_stats_store(node: ast.AST) -> bool:
     return False
 
 
+def _is_defer_routing(node: ast.AST) -> bool:
+    """``deferred.extend(...)`` / ``defer_queue.append(...)`` or a
+    ``return`` carrying the literal ``"defer"`` status — the failed work
+    re-enters the retry machinery instead of vanishing."""
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in ("append", "extend"):
+            v = f.value
+            name = v.attr if isinstance(v, ast.Attribute) else (
+                v.id if isinstance(v, ast.Name) else "")
+            if "defer" in name.lower():
+                return True
+    if isinstance(node, ast.Return) and node.value is not None:
+        for sub in ast.walk(node.value):
+            if isinstance(sub, ast.Constant) and sub.value == "defer":
+                return True
+    return False
+
+
 def _handler_handles(handler: ast.ExceptHandler) -> bool:
     for node in ast.walk(handler):
         if isinstance(node, ast.Raise):
@@ -78,19 +104,24 @@ def _handler_handles(handler: ast.ExceptHandler) -> bool:
                 return True
         if _is_stats_store(node):
             return True
+        if _is_defer_routing(node):
+            return True
     return False
 
 
 class ExceptSwallowChecker(Checker):
     name = "except-swallow"
     description = (
-        "advisory: every except handler in launch/ must re-raise, "
-        "transition slot state, or record the failure (stats counter / "
-        "traceback / checkpoint) — no silent swallows in the serving tier"
+        "advisory: every except handler in launch/ and core/dynamic.py "
+        "must re-raise, transition slot state, route to a deferral queue, "
+        "or record the failure (stats counter / traceback / checkpoint) — "
+        "no silent swallows on the failure paths"
     )
     advisory = True
 
     def _in_scope(self, rel: str) -> bool:
+        if rel.endswith("core/dynamic.py"):
+            return True
         parts = rel.split("/")
         return len(parts) >= 2 and parts[-2] == "launch" \
             and parts[-1] != "__init__.py"
@@ -111,9 +142,9 @@ class ExceptSwallowChecker(Checker):
                 yield self.finding(
                     project, rel, node.lineno,
                     f"except {caught}: handler neither re-raises, "
-                    "transitions slot state, nor records the failure — a "
-                    "swallowed fault in the serving tier becomes a silent "
-                    "wrong answer",
+                    "transitions slot state, routes to a deferral queue, "
+                    "nor records the failure — a swallowed fault on this "
+                    "path becomes a silent wrong answer",
                 )
 
 

@@ -1,0 +1,71 @@
+"""The registered ``kernel-grid`` checker (tier B, gating).
+
+Runs the default shape lattice (``lattice.default_cases``) through the
+concolic verifier and yields one finding per refuted theorem, attributed to
+the kernel module's source file.  Like the donation sanitizer, this tier
+imports and executes the real kernel builders, so it only runs when the
+analyzed tree contains the kernel sources — fixture mini-trees are skipped
+with a stderr notice.
+
+Findings gate ``make analyze`` (exit 1): a refuted grid theorem is a real
+kernel bug (race, out-of-bounds tile, coverage hole, non-inert padding, or
+missing init), not a style judgement.  A deliberate exception carries a
+file-scope ``# repro: allow-kernel-grid  <why>`` pragma in the flagged
+kernel module.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from ..base import Checker, Finding, Project, register_checker
+
+__all__ = ["KernelGridChecker"]
+
+_CHECK = "kernel-grid"
+
+
+class KernelGridChecker(Checker):
+    name = _CHECK
+    description = (
+        "concolic Pallas grid verifier: every kernel's captured "
+        "grid/BlockSpec index maps must be write-race free, in bounds "
+        "(scalar-prefetch gathers included), exactly cover the output, and "
+        "match the semiring oracle over the canonical shape lattice "
+        "(tier B, executes the kernel builders — real repo only)"
+    )
+
+    # the sources the lattice imports builders from — present iff the
+    # analyzed tree is the real repo (fixture mini-trees carry none)
+    _KERNEL_SOURCES = (
+        "src/repro/kernels/minplus.py",
+        "src/repro/kernels/fw_block.py",
+        "src/repro/kernels/fw_round.py",
+        "src/repro/kernels/row_close.py",
+    )
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        missing = [s for s in self._KERNEL_SOURCES if not project.has(s)]
+        if missing:
+            import sys
+            print(
+                f"analyze: [{self.name}] tier B skipped — {project.root} "
+                f"has no {missing[0]} (not the kernel repo)",
+                file=sys.stderr,
+            )
+            return
+        # lazy: the lattice builds concrete operands at import-adjacent cost
+        from .lattice import default_cases
+        from .verify import verify_case
+
+        for case in default_cases():
+            for p in verify_case(case):
+                yield Finding(
+                    check=self.name,
+                    path=f"src/repro/kernels/{case.module}.py",
+                    line=0,
+                    message=f"{p.kind}: {p.where}: {p.message}",
+                )
+
+
+register_checker(KernelGridChecker())

@@ -1,0 +1,165 @@
+"""Concolic Pallas grid interpreter: run the real kernel body per grid point.
+
+Faithful to the TPU execution model the kernels rely on: the grid is walked
+in lexicographic order with the *last* axis fastest (Pallas's sequential
+order; parallel axes may be reordered by the hardware, but the race theorem
+in ``verify`` separately proves reordering cannot matter), block refs are
+views into the padded operands (so an output tile revisited along the
+sequential axis carries its accumulated value, exactly the TPU revisit
+guarantee), and ``pl.program_id`` / ``pl.num_programs`` / ``pl.when`` are
+patched to the concrete coordinates of the current point.
+
+Output buffers are seeded with a **canary** (NaN for floats, INT32_MIN for
+the int32 witness planes) instead of zeros: a kernel that accumulates into
+a tile before its ``pl.when(program_id == 0)`` init ran reads the canary,
+and every semiring's selective ⊕ propagates it to the final output, where
+the differential theorem reports it as an uninitialized accumulate rather
+than a generic mismatch.
+
+Every tile — input, output, and the scalar-prefetch ``rows[i]`` gather —
+is bounds-checked against its operand's (padded) extent *before* the body
+runs; a violating grid point records the violation and is skipped (numpy
+would silently clip the view, masking the bug with a shape error or, worse,
+wrong data).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import List, Sequence, Tuple
+
+import numpy as np
+from jax.experimental import pallas as _pallas
+
+from .intercept import KernelCall
+
+__all__ = ["simulate", "block_index", "tile_slices", "INT_CANARY"]
+
+INT_CANARY = np.iinfo(np.int32).min
+
+
+class _Ref:
+    """Mutable view standing in for a Pallas Ref (read/write/shape)."""
+
+    __slots__ = ("a",)
+
+    def __init__(self, a: np.ndarray):
+        self.a = a
+
+    @property
+    def shape(self):
+        return self.a.shape
+
+    @property
+    def dtype(self):
+        return self.a.dtype
+
+    def __getitem__(self, idx):
+        return self.a[idx]
+
+    def __setitem__(self, idx, val):
+        self.a[idx] = np.asarray(val)
+
+
+@contextlib.contextmanager
+def _patched_pl(point: Tuple[int, ...], grid: Tuple[int, ...]):
+    """Bind ``pl.program_id``/``num_programs``/``when`` to one grid point."""
+    saved = (_pallas.program_id, _pallas.num_programs, _pallas.when)
+
+    def when(cond):
+        def deco(fn):
+            if bool(cond):
+                fn()
+            return fn
+
+        return deco
+
+    _pallas.program_id = lambda axis: point[axis]
+    _pallas.num_programs = lambda axis: grid[axis]
+    _pallas.when = when
+    try:
+        yield
+    finally:
+        _pallas.program_id, _pallas.num_programs, _pallas.when = saved
+
+
+def block_index(spec, point: Sequence[int], prefetch) -> Tuple[int, ...]:
+    """Evaluate a BlockSpec index map at one concrete grid point."""
+    idx = spec.index_map(*point, *prefetch)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
+def tile_slices(
+    idx: Tuple[int, ...],
+    block_shape: Tuple[int, ...],
+    extent: Tuple[int, ...],
+    *,
+    where: str,
+    errors: List[str],
+) -> Tuple[slice, ...]:
+    """Element slices of one tile, recording any out-of-bounds dimension.
+
+    Blocked-mode semantics: the index map returns *block* indices, the tile
+    spans ``[idx*bs, (idx+1)*bs)`` per dimension.
+    """
+    sl = []
+    for d, (i, bs, n) in enumerate(zip(idx, block_shape, extent)):
+        lo, hi = i * bs, (i + 1) * bs
+        if lo < 0 or hi > n:
+            errors.append(
+                f"bounds: {where}: dim {d} tile [{lo}, {hi}) outside the "
+                f"operand extent {n} (block index {i} x block {bs})"
+            )
+        sl.append(slice(lo, hi))
+    return tuple(sl)
+
+
+def _canary(shape, dtype) -> np.ndarray:
+    dt = np.dtype(dtype)
+    if dt.kind in "iu":
+        return np.full(shape, INT_CANARY, dt)
+    return np.full(shape, np.nan, dt)
+
+
+def simulate(call: KernelCall) -> List[np.ndarray]:
+    """Execute every grid point of one recorded call; returns output leaves.
+
+    Bounds violations land in ``call.errors`` (grid points carrying one are
+    recorded and skipped); outputs start as canaries so uninitialized
+    accumulates survive into the differential comparison.
+    """
+    prefetch = [np.asarray(p) for p in call.prefetch]
+    ins = [np.asarray(a) for a in call.inputs]
+    outs = [_canary(s.shape, s.dtype) for s in call.out_shapes]
+    if len(ins) != len(call.in_specs):
+        call.errors.append(
+            f"bounds: operand/spec arity mismatch: {len(ins)} non-prefetch "
+            f"operands vs {len(call.in_specs)} in_specs"
+        )
+        return outs
+
+    for point in np.ndindex(*call.grid):
+        point_errors: List[str] = []
+        refs = [_Ref(p) for p in prefetch]
+        for ai, (arr, spec) in enumerate(zip(ins, call.in_specs)):
+            idx = block_index(spec, point, prefetch)
+            sl = tile_slices(
+                idx, tuple(spec.block_shape), arr.shape,
+                where=f"grid point {point}: input {ai}", errors=point_errors,
+            )
+            refs.append(_Ref(arr[sl]))
+        for oi, (out, spec) in enumerate(zip(outs, call.out_specs)):
+            idx = block_index(spec, point, prefetch)
+            sl = tile_slices(
+                idx, tuple(spec.block_shape), out.shape,
+                where=f"grid point {point}: output {oi}", errors=point_errors,
+            )
+            refs.append(_Ref(out[sl]))
+        if point_errors:
+            call.errors.extend(point_errors)
+            continue
+        with _patched_pl(tuple(point), call.grid):
+            call.kernel(*refs)
+    return outs

@@ -17,7 +17,7 @@ import jax
 
 __all__ = [
     "shard_map", "get_abstract_mesh", "pvary", "set_mesh", "axis_size",
-    "in_manual_region",
+    "in_manual_region", "tpu_compiler_params",
 ]
 
 # Trace-time depth of old-style full-manual shard_map bodies (fallback path
@@ -128,3 +128,21 @@ def pvary(x, axis_names):
     if fn is not None:
         return fn(x, axis_names)
     return x
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (post-0.5 spelling) or the pinned version's
+    ``pltpu.TPUCompilerParams``.
+
+    The CPU test path never constructed one (``interpret=True`` skips the
+    ``compiler_params`` branch in every kernel wrapper), which hid the fact
+    that the modern name does not exist on jax 0.4.37 — a real TPU run, and
+    the kernel grid verifier (which traces builders with ``interpret=False``
+    to capture ``dimension_semantics``), both need this shim.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(**kwargs)

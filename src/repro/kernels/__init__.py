@@ -12,6 +12,15 @@ fallback in ``minplus_xla.py``; ``ops.py`` is the public tuned dispatch
 layer (pallas on TPU / interpret for tests / XLA fallback on CPU), and
 ``autotune.py`` persists measured block-size winners per (shape-bucket,
 dtype, backend).
+
+Every Pallas builder here is machine-verified by the concolic grid
+checker (``repro.analysis.kernelcheck``, ``make analyze-kernels``):
+race-freedom, bounds, coverage, and padding soundness are proven per
+grid, and the tuner's candidate tilings are held to the same lattice.
+Before adding or modifying a builder, read the kernel-authoring
+checklist in COMPAT.md §Kernel verification — in particular, register
+new builders in the module's ``PALLAS_BUILDERS`` and extend
+``kernelcheck.lattice.default_cases()``, or the verifier cannot see them.
 """
 
 from . import ops, ref

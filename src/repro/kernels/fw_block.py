@@ -27,7 +27,7 @@ from repro.core.semiring import TROPICAL, Semiring
 
 INF = jnp.inf
 
-__all__ = ["fw_block_pallas", "fw_block_pred_pallas"]
+__all__ = ["fw_block_pallas", "fw_block_pred_pallas", "PALLAS_BUILDERS"]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "semiring"))
@@ -108,3 +108,12 @@ def fw_block_pred_pallas(
         interpret=interpret,
     )(dd, pp)
     return (do, po) if batched else (do[0], po[0])
+
+
+# Raw (unjitted) builders for the kernel grid verifier — see
+# ``repro.analysis.kernelcheck`` and the authoring checklist in
+# COMPAT.md §Static analysis.
+PALLAS_BUILDERS = {
+    "fw_block_pallas": fw_block_pallas.__wrapped__,
+    "fw_block_pred_pallas": fw_block_pred_pallas.__wrapped__,
+}

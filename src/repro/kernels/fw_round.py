@@ -49,7 +49,7 @@ from repro.core.semiring import TROPICAL, Semiring
 
 from .minplus import _minplus_body
 
-__all__ = ["fw_round_pallas"]
+__all__ = ["fw_round_pallas", "PALLAS_BUILDERS"]
 
 
 def _kc_for(b: int, kc: int = 8) -> int:
@@ -129,3 +129,9 @@ def fw_round_pallas(
         interpret=interpret,
     )(t, dd, dd, dd)
     return out if batched else out[0]
+
+
+# Raw (unjitted) builder for the kernel grid verifier — see
+# ``repro.analysis.kernelcheck`` and the authoring checklist in
+# COMPAT.md §Static analysis.
+PALLAS_BUILDERS = {"fw_round_pallas": fw_round_pallas.__wrapped__}

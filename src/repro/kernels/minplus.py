@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.semiring import TROPICAL, Semiring
 
 INF = jnp.inf
@@ -55,6 +56,7 @@ INF = jnp.inf
 __all__ = [
     "minplus_pallas",
     "minplus_argmin_pallas",
+    "PALLAS_BUILDERS",
     "DEFAULT_BM",
     "DEFAULT_BN",
     "DEFAULT_BK",
@@ -188,7 +190,7 @@ def _grid_call(kernel, grid, in_specs, out_specs, out_shape, interpret):
     if not interpret:
         # batch/m/n blocks are independent; k must stay sequential
         # (accumulation) and is always the innermost grid dim.
-        params["compiler_params"] = pltpu.CompilerParams(
+        params["compiler_params"] = tpu_compiler_params(
             dimension_semantics=("parallel",) * (len(grid) - 1) + ("arbitrary",)
         )
     return pl.pallas_call(
@@ -337,3 +339,13 @@ def minplus_argmin_pallas(
 
 def _rup(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
+
+
+# Raw (unjitted) builders for the kernel grid verifier
+# (``repro.analysis.kernelcheck``): interception replaces ``pl.pallas_call``
+# at trace time, and the jit cache would silently skip retraces of
+# already-seen shapes, so the verifier drives these directly.
+PALLAS_BUILDERS = {
+    "minplus_pallas": minplus_pallas.__wrapped__,
+    "minplus_argmin_pallas": minplus_argmin_pallas.__wrapped__,
+}

@@ -44,11 +44,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.semiring import TROPICAL, Semiring
 
 from .minplus import DEFAULT_BK, DEFAULT_BN, DEFAULT_KC, _minplus_body, _pad, _rup
 
-__all__ = ["row_close_pallas"]
+__all__ = ["row_close_pallas", "PALLAS_BUILDERS"]
 
 
 def _kernel(rows_ref, x_ref, y_ref, a_ref, z_ref, *, kc, bk, sr):
@@ -129,7 +130,7 @@ def row_close_pallas(
     if not interpret:
         # row/col blocks are independent; k is a revisit-accumulate dim and
         # must stay sequential-innermost (same contract as minplus).
-        params["compiler_params"] = pltpu.CompilerParams(
+        params["compiler_params"] = tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         )
     if track:
@@ -156,3 +157,9 @@ def row_close_pallas(
         **params,
     )(rows.astype(jnp.int32), dx, dy, da)
     return zp[:, :n], None
+
+
+# Raw (unjitted) builder for the kernel grid verifier — see
+# ``repro.analysis.kernelcheck`` and the authoring checklist in
+# COMPAT.md §Static analysis.
+PALLAS_BUILDERS = {"row_close_pallas": row_close_pallas.__wrapped__}

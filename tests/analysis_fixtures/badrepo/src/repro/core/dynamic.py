@@ -1,0 +1,38 @@
+"""except-swallow fixture: dynamic-engine rollback/retry handlers.
+
+Mirrors the real ``core/dynamic.py`` failure-routing surface — a quiet
+rollback that re-raises, a batched-drain handler that routes to a
+deferral queue, a retry handler that returns the ``"defer"`` status —
+plus one genuine silent swallow the extended scope must flag.
+"""
+
+
+def swallow_rollback(engine, snapshot):
+    try:
+        engine.apply()
+    except RuntimeError:                       # line 13: silent swallow
+        engine.state = snapshot
+
+
+def ok_rollback_reraise(engine, snapshot):
+    try:
+        engine.apply()
+    except RuntimeError:
+        engine.state = snapshot
+        raise
+
+
+def ok_defer_queue(engines, deferred):
+    for member in engines:
+        try:
+            member.drain()
+        except ValueError:
+            deferred.append(member)
+
+
+def ok_defer_status(engine):
+    try:
+        engine.retry()
+    except RuntimeError:
+        return "defer", None
+    return "ok", engine

@@ -43,7 +43,7 @@ def lines_for(findings, path_tail):
 # registry / CLI surface
 # ---------------------------------------------------------------------------
 
-def test_registry_has_all_six_checks():
+def test_registry_has_all_seven_checks():
     assert set(CHECKERS) == {
         "unfused-dispatch",
         "semiring-hardcode",
@@ -51,11 +51,13 @@ def test_registry_has_all_six_checks():
         "autotune-key",
         "donation",
         "except-swallow",
+        "kernel-grid",
     }
     for c in CHECKERS.values():
         assert c.name and c.description
     # exactly the heuristic handler check is advisory — it reports but
-    # must never gate a merge
+    # must never gate a merge; the grid verifier proves theorems, so a
+    # refutation gates
     assert CHECKERS["except-swallow"].advisory
     assert not any(
         c.advisory for n, c in CHECKERS.items() if n != "except-swallow"
@@ -110,6 +112,14 @@ def test_except_swallow_fires_on_fixture():
     # stats-counter / pragma'd handlers stay quiet
     assert got == [7, 14]
     assert all(f.advisory for f in fs)
+
+
+def test_except_swallow_covers_dynamic_rollback_handlers():
+    # the extended scope (core/dynamic.py): a quiet state rollback with no
+    # re-raise is a swallow; rollback-then-reraise, deferral-queue routing
+    # and a `"defer"` status return are all recognized as handled
+    fs = fixture_findings("except-swallow")
+    assert lines_for(fs, "core/dynamic.py") == [13]
 
 
 def test_autotune_key_fires_on_fixture():
@@ -168,6 +178,59 @@ def test_file_pragma_must_lead_the_line():
         ["    # repro: allow-unfused-dispatch  deliberate demo module"],
         "unfused-dispatch",
     )
+
+
+def test_file_pragma_survives_bom_and_crlf():
+    from repro.analysis.pragmas import file_allows, line_allows
+
+    # an editor re-saving with a UTF-8 BOM must not disarm a first-line
+    # file-scope pragma, and a CRLF checkout (or a caller splitting on
+    # "\n") must not leave a \r glued to the justification text
+    assert file_allows(
+        ["\ufeff# repro: allow-semiring-hardcode  tropical-only module"],
+        "semiring-hardcode",
+    )
+    assert file_allows(
+        ["# repro: allow-semiring-hardcode  tropical-only module\r"],
+        "semiring-hardcode",
+    )
+    assert line_allows(
+        "d = jnp.minimum(a, b)  # repro: allow-semiring-hardcode  demo\r",
+        "semiring-hardcode",
+    )
+
+
+def test_pragma_decorator_attribution_both_directions():
+    from repro.analysis.pragmas import line_allows_at
+
+    src = [
+        "@functools.partial(jit, static_argnames=('n',))",   # 1
+        "@other_decorator  # repro: allow-trace-impurity  host sync is deliberate",  # 2
+        "def solve(d, n):",                                  # 3
+        "    return d",                                      # 4
+        "",                                                  # 5
+        "def plain():",                                      # 6
+        "    pass",                                          # 7
+    ]
+    # finding anchored to the def line is covered by a pragma anywhere on
+    # the contiguous decorator stack above it
+    assert line_allows_at(src, 3, "trace-impurity")
+    # finding anchored to a decorator line is covered by a pragma on a
+    # later decorator of the same stack...
+    assert line_allows_at(src, 1, "trace-impurity")
+    # ...but the pragma names only its own check
+    assert not line_allows_at(src, 3, "unfused-dispatch")
+    # and an unrelated def does not inherit anything
+    assert not line_allows_at(src, 6, "trace-impurity")
+
+    # pragma on the def line covers a finding anchored to its decorator
+    src2 = [
+        "@jit",                                              # 1
+        "def solve(d):  # repro: allow-donation  buffer reuse audited",  # 2
+        "    return d",                                      # 3
+    ]
+    assert line_allows_at(src2, 1, "donation")
+    assert line_allows_at(src2, 2, "donation")
 
 
 # ---------------------------------------------------------------------------

@@ -5,8 +5,13 @@ Usage:
     PYTHONPATH=src python tools/analyze.py                 # all checks, human
     PYTHONPATH=src python tools/analyze.py --json          # machine-readable
     PYTHONPATH=src python tools/analyze.py --checks unfused-dispatch,donation
+    PYTHONPATH=src python tools/analyze.py --only kernel-grid   # one check
     PYTHONPATH=src python tools/analyze.py --list          # registered checks
     PYTHONPATH=src python tools/analyze.py --root <tree>   # fixture trees
+
+``--only <check>`` (repeatable) selects single checks — the CI sharding
+spelling: each shard runs one expensive tier in isolation.  It composes
+with ``--checks`` (union of both selections).
 
 Exit status: 0 = clean (advisory-only findings included), 1 = gating
 findings, 2 = usage error.  Suppress deliberate
@@ -41,6 +46,11 @@ def main(argv=None) -> int:
         help="comma-separated check names (default: all registered)",
     )
     ap.add_argument(
+        "--only", action="append", default=None, metavar="CHECK",
+        help="run a single check (repeatable; unions with --checks) — "
+             "the CI sharding spelling",
+    )
+    ap.add_argument(
         "--root", default=str(REPO),
         help="project root to analyze (default: this repo)",
     )
@@ -57,6 +67,9 @@ def main(argv=None) -> int:
         [c.strip() for c in args.checks.split(",") if c.strip()]
         if args.checks else None
     )
+    if args.only:
+        only = [c.strip() for c in args.only if c.strip()]
+        names = (names or []) + [c for c in only if c not in (names or [])]
     project = Project(args.root)
     try:
         findings = run_checks(project, names)
