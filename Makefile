@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dynamic test-resilience lint-dispatch analyze analyze-kernels analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic serve-chaos
+.PHONY: test test-fast test-dynamic test-resilience lint-dispatch analyze analyze-kernels analyze-baseline check bench bench-smoke bench-check serve-apsp serve-dynamic serve-chaos serve-chaos-correlated
 
 test:           ## tier-1: the whole suite, fail fast
 	$(PY) -m pytest -x -q
@@ -32,6 +32,7 @@ check: analyze  ## invariant sweep + tier-1 (incl. dynamic suite) + oracle suite
 	$(PY) -m pytest -x -q -m "not oracle"
 	$(PY) -m pytest -q -m oracle tests/test_semiring_oracle.py
 	$(MAKE) serve-chaos
+	$(MAKE) serve-chaos-correlated
 	$(MAKE) bench-check
 
 bench:          ## paper-figure benchmark sweep (CSV to stdout + BENCH_apsp.json)
@@ -55,3 +56,10 @@ serve-chaos:    ## chaos smoke: seeded faults, zero poisoned answers, full recov
 		--mutate-rate 0.5 --graphs 3 --mutate-k 4 --verify-every 12 --seed 7 \
 		--fault-spec "nan:0.15,crash:0.1:3,latency:0.1:10,poison:0.1,mem:0.15:0.5" \
 		--deadline-ms 100 --mem-budget-mb 0.008 --backlog-watermark 4
+
+serve-chaos-correlated:  ## correlated chaos smoke: async executor + durable slots under backend loss, cache storms, crash-restore drills
+	$(PY) -m repro.launch.serve --arch apsp --requests 48 --n-max 32 \
+		--mutate-rate 0.5 --graphs 3 --mutate-k 4 --verify-every 12 --seed 7 \
+		--async-updates --durability-dir auto --checkpoint-every 2 \
+		--fault-spec "backend_loss:0.2:4,cache_storm:0.2:4,crash_restore:0.25,latency:0.05:5" \
+		--backlog-watermark 8

@@ -94,6 +94,9 @@ def _write_json(path, *, mode, all_rows, fused_rows):
     resilience = next(
         (r for r in all_rows if r.get("bench") == "serve_resilience"), None
     )
+    concurrent = next(
+        (r for r in all_rows if r.get("bench") == "serve_concurrent"), None
+    )
     payload = {
         "schema": 1,
         "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -113,6 +116,7 @@ def _write_json(path, *, mode, all_rows, fused_rows):
         "dynamic_update_vs_resolve": dynamic,
         "dynamic_worsening": worsening,
         "serve_resilience": resilience,
+        "serve_concurrent": concurrent,
         "rows": all_rows,
     }
     with open(path, "w") as f:
@@ -160,6 +164,8 @@ def main(argv=None) -> int:
             ("serve_resilience", lambda: bench_serve_resilience.run(
                 n=64, graphs=2, requests=60, k=4, budget_engines=1,
                 deadline_ms=100.0)),
+            ("serve_concurrent", lambda: bench_serve_resilience.run_concurrent(
+                n=64, graphs=2, requests=60, k=4, block_size=32)),
         ]
     else:
         mode = "quick" if args.quick else "full"
@@ -192,6 +198,10 @@ def main(argv=None) -> int:
                 n=128 if args.quick else 256,
                 graphs=3, requests=120 if args.quick else 300,
                 budget_engines=2, deadline_ms=50.0,
+                block_size=64 if args.quick else 128)),
+            ("serve_concurrent", lambda: bench_serve_resilience.run_concurrent(
+                n=256 if args.quick else 512,
+                graphs=2, requests=120 if args.quick else 200,
                 block_size=64 if args.quick else 128)),
         ]
 

@@ -8,7 +8,8 @@ bare ``except: pass`` in the pool turns an injected crash into a silently
 wrong answer — the exact bug class the supervised-slot lifecycle exists to
 make impossible.
 
-Scope: every ``except`` handler in ``src/repro/launch/*`` plus the
+Scope: every ``except`` handler in ``src/repro/launch/*`` (the PR 10
+background update executor and stats module included) plus the
 dynamic engine's rollback/retry handlers (``src/repro/core/dynamic.py`` —
 the other failure-routing surface: atomic-update rollbacks and the batched
 drain's per-engine deferral).  Accepted evidence inside the handler body
@@ -20,7 +21,9 @@ drain's per-engine deferral).  Accepted evidence inside the handler body
   / ``evict`` — or to a recording sink: any ``record*`` / ``_record*``
   name, ``format_exc`` (traceback capture), ``save`` (checkpoint before
   surrender);
-* a store into a ``stats`` counter mapping (``self.stats["x"] += 1``);
+* a store into a ``stats`` counter mapping (``self.stats["x"] += 1``) or
+  a call to the locked counter sink that replaced it in PR 10
+  (``self.stats.inc("x")`` / ``inj.counts.inc(kind)``);
 * routing the failed work to a deferral queue — ``.append``/``.extend``
   on a receiver whose name contains ``defer`` (``deferred.extend(...)``)
   or a ``return`` whose value carries the literal ``"defer"`` status
@@ -75,6 +78,19 @@ def _is_stats_store(node: ast.AST) -> bool:
     return False
 
 
+def _is_counter_inc(node: ast.Call) -> bool:
+    """``self.stats.inc("x")`` / ``inj.counts.inc(kind)`` — the locked
+    :class:`repro.launch.stats.Counters` sink that replaced subscript
+    stores in PR 10.  A counted failure is a handled failure."""
+    f = node.func
+    if not (isinstance(f, ast.Attribute) and f.attr == "inc"):
+        return False
+    v = f.value
+    name = v.attr if isinstance(v, ast.Attribute) else (
+        v.id if isinstance(v, ast.Name) else "")
+    return name in ("stats", "counts")
+
+
 def _is_defer_routing(node: ast.AST) -> bool:
     """``deferred.extend(...)`` / ``defer_queue.append(...)`` or a
     ``return`` carrying the literal ``"defer"`` status — the failed work
@@ -101,6 +117,8 @@ def _handler_handles(handler: ast.ExceptHandler) -> bool:
         if isinstance(node, ast.Call):
             name = _call_name(node)
             if name in RECOGNIZED_CALLS or name.startswith(("record", "_record")):
+                return True
+            if _is_counter_inc(node):
                 return True
         if _is_stats_store(node):
             return True

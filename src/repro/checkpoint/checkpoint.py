@@ -32,7 +32,10 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "restore_onto_mesh", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint", "load_checkpoint", "restore_onto_mesh",
+    "CheckpointManager", "save_engine_checkpoint", "load_engine_checkpoint",
+]
 
 _SEP = "/"
 
@@ -135,6 +138,88 @@ def restore_onto_mesh(flat: Dict[str, np.ndarray], example_tree, shardings=None)
         arr = arr.astype(example.dtype)
         leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# -- durable engine snapshots (serving-tier restore path) -------------------
+#
+# A DynamicAPSP engine's recoverable state is its snapshot() dict
+# (dist / pred / h / version) plus the config needed to rebuild an
+# equivalent engine (semiring, storage dtype, with_pred, n).  Stored
+# through the same atomic step-dir protocol above with step == version,
+# so LATEST always names the newest committed state and a crash mid-save
+# leaves the previous checkpoint intact.  bf16 states are stored as
+# uint16 bit views (np.savez round-trips ml_dtypes unreliably) with the
+# true dtype recorded in the manifest for bit-exact reconstruction.
+
+
+def _bits_of(a: Optional[np.ndarray]):
+    """(savable array, true-dtype string) — bf16 goes out as its bit view."""
+    if a is None:
+        return None, None
+    a = np.asarray(a)
+    if str(a.dtype) == "bfloat16":
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def _unbits(a: Optional[np.ndarray], dtype: Optional[str]):
+    if a is None or dtype is None or str(a.dtype) == dtype:
+        return a
+    if dtype == "bfloat16":
+        import ml_dtypes
+        return a.view(ml_dtypes.bfloat16)
+    return a.astype(np.dtype(dtype))
+
+
+def save_engine_checkpoint(directory: str, engine, *, extra: Optional[dict] = None) -> str:
+    """Atomically checkpoint a ``DynamicAPSP`` engine's solved state.
+
+    Returns the checkpoint path.  Step number == engine version, so the
+    LATEST pointer names the newest committed state and
+    :func:`load_engine_checkpoint` + journal replay of records with
+    ``v0 >= version`` reconstructs any later live state bit-exactly.
+    """
+    snap = engine.snapshot()
+    dist, dist_dt = _bits_of(snap["dist"])
+    pred, pred_dt = _bits_of(snap["pred"])
+    state = {"dist": dist, "h": snap["h"]}
+    if pred is not None:
+        state["pred"] = pred
+    meta = {
+        "kind": "engine",
+        "version": int(snap["version"]),
+        "n": int(engine.n),
+        "semiring": engine.semiring.name,
+        "with_pred": pred is not None,
+        "state_dtype": dist_dt,
+        "pred_dtype": pred_dt,
+    }
+    if extra:
+        meta.update(extra)
+    return save_checkpoint(directory, int(snap["version"]), state, extra=meta)
+
+
+def load_engine_checkpoint(directory: str, step: Optional[int] = None) -> Dict[str, Any]:
+    """Load a durable engine snapshot (LATEST if ``step`` is None).
+
+    Returns ``{"dist", "pred", "h", "version", "semiring", "with_pred",
+    "state_dtype", "n"}`` — ``dist``/``pred``/``h`` as host arrays in
+    their true dtypes, directly consumable as ``DynamicAPSP(h,
+    state=...)``'s restore state.
+    """
+    flat, manifest = load_checkpoint(directory, step)
+    meta = manifest.get("extra", {})
+    if meta.get("kind") != "engine":
+        raise ValueError(
+            f"checkpoint under {directory} is not an engine checkpoint "
+            f"(kind={meta.get('kind')!r})"
+        )
+    out = dict(meta)
+    out["dist"] = _unbits(flat["dist"], meta.get("state_dtype"))
+    out["pred"] = _unbits(flat.get("pred"), meta.get("pred_dtype")) if meta.get("with_pred") else None
+    out["h"] = flat["h"]
+    out["version"] = int(meta["version"])
+    return out
 
 
 class CheckpointManager:

@@ -63,8 +63,11 @@ rejected (the diagonal is the semiring one by convention).  Setting
 
 from __future__ import annotations
 
+import json
+import os
+import threading
 from functools import partial
-from typing import Dict, List, Optional, Union
+from typing import Dict, Iterator, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +79,10 @@ from .floyd_warshall import init_pred
 from .paths import reconstruct_path, reconstruct_path_jit
 from .semiring import Semiring, SemiringLike, ceil_log2, get_semiring
 
-__all__ = ["DynamicAPSP", "apply_updates_batched", "domain_violations"]
+__all__ = [
+    "DynamicAPSP", "UpdateJournal", "apply_updates_batched",
+    "domain_violations",
+]
 
 
 def domain_violations(x, semiring: SemiringLike) -> np.ndarray:
@@ -107,6 +113,137 @@ def _bucket_k(k: int) -> int:
     """Padded update-batch width: next power of two, floor 4 — keeps the
     family of compiled (n, k) rank-k programs small across a serving run."""
     return next_pow2(k, 4)
+
+
+class UpdateJournal:
+    """Durable edge-update journal (jsonl, fsync-per-append) — the redo log
+    that turns engine recovery into *replay* instead of an O(n³) cold
+    re-solve.
+
+    Each record is one committed update phase::
+
+        {"seq": int, "v0": int, "u": [...], "v": [...], "w": [...]}
+
+    where ``v0`` is the engine version *before* the phase applied and
+    ``u/v/w`` are the **normalized** endpoint/weight arrays (post
+    ``_normalize``: deduped last-wins, int endpoints, f32 weights — so
+    replaying a record through :meth:`DynamicAPSP.update` is idempotent
+    and bit-deterministic).  The engine appends a record only after the
+    phase's dispatch *succeeded* (h mutated and rolled-back-on-raise
+    phases never reach the journal), so at every crash point the journal
+    is exactly the sequence of h mutations — a checkpoint at version ``V``
+    plus replay of records with ``v0 >= V`` reconstructs the live state
+    bit-exactly (``v0`` can repeat across version-preserving no-op /
+    inert records; re-applying "set edge (u,v) to w" is idempotent, so
+    the overlap at the checkpoint boundary is safe by construction).
+
+    Appends flush + fsync under a lock before returning, so a record is
+    on disk before the caller acks the update.  A torn trailing line
+    (crash mid-append) is ignored at read time — that update was never
+    acked.  :meth:`truncate` drops records already captured by a
+    checkpoint via the repo's tmp + ``os.replace`` atomic-publish idiom.
+    """
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        self.path = str(path)
+        self._fsync = bool(fsync)
+        self._lock = threading.Lock()
+        self._seq = 0
+        for rec in self._read_all():
+            self._seq = max(self._seq, int(rec["seq"]) + 1)
+        self._fh = open(self.path, "a", encoding="utf-8")
+
+    # -- write side ---------------------------------------------------------
+
+    def append(self, u, v, w, version_before: int) -> int:
+        """Durably record one committed update phase; returns its seq."""
+        uu = [int(x) for x in np.asarray(u).ravel()]
+        vv = [int(x) for x in np.asarray(v).ravel()]
+        ww = [float(x) for x in np.asarray(w, dtype=np.float32).ravel()]
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            rec = {"seq": seq, "v0": int(version_before),
+                   "u": uu, "v": vv, "w": ww}
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+            if self._fsync:
+                os.fsync(self._fh.fileno())
+        return seq
+
+    def truncate(self, min_version: int) -> int:
+        """Drop records with ``v0 < min_version`` (already captured by a
+        checkpoint at that version); returns the number dropped.  Atomic:
+        survivors are rewritten to a tmp file and ``os.replace``d in."""
+        with self._lock:
+            self._fh.flush()
+            recs = self._read_all()
+            keep = [r for r in recs if int(r["v0"]) >= int(min_version)]
+            tmp = self.path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as fh:
+                for r in keep:
+                    fh.write(json.dumps(r) + "\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            self._fh.close()
+            os.replace(tmp, self.path)
+            self._fh = open(self.path, "a", encoding="utf-8")
+            return len(recs) - len(keep)
+
+    def clear(self) -> int:
+        """Drop every record — a cold build starts a new incarnation, so
+        the old redo log describes state that no longer exists."""
+        return self.truncate(1 << 62)
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.flush()
+                self._fh.close()
+
+    # -- read side ----------------------------------------------------------
+
+    def _read_all(self) -> List[Dict]:
+        if not os.path.exists(self.path):
+            return []
+        out: List[Dict] = []
+        with open(self.path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except ValueError:  # repro: allow-except-swallow  torn tail from a crash mid-append was never acked to a client
+                    break
+        return out
+
+    def records(self, min_version: int = 0) -> List[Dict]:
+        """All durable records with ``v0 >= min_version``, in append order."""
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.flush()
+        return [r for r in self._read_all() if int(r["v0"]) >= int(min_version)]
+
+    def __len__(self) -> int:
+        return len(self.records())
+
+    def replay_onto(self, engine: "DynamicAPSP", min_version: int = 0) -> int:
+        """Re-apply every record with ``v0 >= min_version`` to ``engine``
+        in order; returns the count replayed.  The engine's own journal is
+        detached for the duration so replay does not re-append."""
+        recs = self.records(min_version)
+        saved, engine.journal = engine.journal, None
+        try:
+            for rec in recs:
+                engine.update(
+                    np.asarray(rec["u"], np.int32),
+                    np.asarray(rec["v"], np.int32),
+                    np.asarray(rec["w"], np.float32),
+                )
+        finally:
+            engine.journal = saved
+        return len(recs)
 
 
 def _rank_k_fixpoint_impl(dist, pred, u, v, w, *, semiring, with_pred, max_passes):
@@ -357,6 +494,8 @@ class DynamicAPSP:
         row_threshold: float = 0.5,
         donate: bool = True,
         validate: bool = True,
+        journal: Optional[UpdateJournal] = None,
+        state: Optional[Dict] = None,
         **solve_kw,
     ):
         self._sr = get_semiring(semiring)
@@ -380,7 +519,11 @@ class DynamicAPSP:
         self._dist: Optional[jax.Array] = None
         self._pred: Optional[jax.Array] = None
         self._version = 0
-        self.solve_full()
+        self.journal = journal
+        if state is not None:
+            self._install_state(state)
+        else:
+            self.solve_full()
 
     # -- state accessors ---------------------------------------------------
 
@@ -421,6 +564,32 @@ class DynamicAPSP:
         )
         self._dist, self._pred = r.dist, r.pred
         self._version += 1
+
+    def _install_state(self, state: Dict) -> None:
+        """Restore path: install a previously-solved ``{"dist", "pred",
+        "version"}`` state (a :meth:`snapshot` or a durable engine
+        checkpoint) instead of cold-solving.  ``h`` came through the
+        constructor; the caller owns consistency (``dist == closure(h)``)
+        — the serving tier's post-restore health probe is the check."""
+        dist = np.asarray(state["dist"])
+        if dist.shape != self._h.shape:
+            raise ValueError(
+                f"state dist shape {dist.shape} != h shape {self._h.shape}"
+            )
+        self._dist = jnp.asarray(dist)
+        pred = state.get("pred")
+        if self._with_pred:
+            if pred is None:
+                raise ValueError(
+                    "state carries no pred but engine was built with_pred=True"
+                )
+            self._pred = jnp.asarray(np.asarray(pred))
+        self._version = int(state["version"])
+
+    def _journal_append(self, u, v, w, version_before: int) -> None:
+        """Durably record a committed update phase (no-op without a journal)."""
+        if self.journal is not None and np.asarray(u).size:
+            self.journal.append(u, v, w, version_before)
 
     # -- serving-tier hooks (snapshot + health) ----------------------------
 
@@ -572,6 +741,7 @@ class DynamicAPSP:
         if u.size == 0:
             self.stats["noop"] += 1
             return {"path": "noop", "n_updates": 0}
+        v0 = self._version            # journal records carry the pre-update version
         old = self._h[u, v]
         worse = np.asarray(sr.better(old, w))      # strictly worsened edges
         changed = np.asarray(sr.better(w, old))    # strictly improved edges
@@ -584,6 +754,7 @@ class DynamicAPSP:
         inert = ~worse & ~changed & ~((w == old) | (np.isnan(w) & np.isnan(old)))
         if inert.any():
             self._h[u[inert], v[inert]] = w[inert]
+            self._journal_append(u[inert], v[inert], w[inert], v0)
 
         if not sr.monotone_mul:
             # plateau semirings: tied witnesses can cycle, so the fused
@@ -595,6 +766,7 @@ class DynamicAPSP:
                 except BaseException:
                     self._h[u, v] = old
                     raise
+                self._journal_append(u, v, w, v0)
                 self.stats["full_resolve"] += 1
                 info["path"] = "full_resolve"
                 info["reason"] = "plateau semiring (monotone_mul=False)"
@@ -609,6 +781,9 @@ class DynamicAPSP:
             except BaseException:
                 self._h[u[worse], v[worse]] = old[worse]
                 raise
+            # per-phase journaling: a committed phase is durable even if a
+            # later phase of the same batch raises (its h writes persist)
+            self._journal_append(u[worse], v[worse], w[worse], v0)
         if changed.any():
             self._h[u[changed], v[changed]] = w[changed]
             try:
@@ -617,6 +792,7 @@ class DynamicAPSP:
             except BaseException:
                 self._h[u[changed], v[changed]] = old[changed]
                 raise
+            self._journal_append(u[changed], v[changed], w[changed], v0)
             if info["path"] == "noop":
                 info.update(sub)
             else:
@@ -850,6 +1026,9 @@ def apply_updates_batched(engines, batches):
             continue
         for j, (i, eng, u, v, w, n_updates) in enumerate(members):
             eng._h[u, v] = w
+            # same journal contract as the per-engine path: record exactly
+            # the h mutation (the decrease subset) once the dispatch synced
+            eng._journal_append(u, v, w, eng._version)
             eng._dist = d[j]
             if with_pred:
                 eng._pred = p[j]

@@ -12,6 +12,7 @@ Fault-spec grammar (also documented in COMPAT.md §Serving resilience)::
     spec      := entry ("," entry)*
     entry     := kind ":" rate [":" param]
     kind      := "nan" | "crash" | "latency" | "poison" | "mem"
+               | "backend_loss" | "cache_storm" | "crash_restore"
     rate      := float in [0, 1]    (per-opportunity probability)
     param     := kind-specific number
 
@@ -30,20 +31,48 @@ Fault-spec grammar (also documented in COMPAT.md §Serving resilience)::
                    (default 0.5) for one admission decision (forces LRU
                    eviction + later re-admission)
 
-Example: ``nan:0.15,crash:0.1:3,latency:0.1:30,poison:0.08,mem:0.05:0.5``.
+**Correlated kinds** (PR 10): the independent kinds above fail one slot at
+a time, but real outages are correlated — a backend dies under every graph
+at once, a compile-cache flush makes every next dispatch pay the recompile
+tax.  Their opportunity point is the top of a pool drain
+(:meth:`FaultInjector.begin_drain`), and their blast radius is deliberately
+*cross-slot*, counted in attempts (not wall-clock) so chaos runs stay
+deterministic:
+
+    backend_loss:R[:A]   whole-backend loss mid-drain: the next A engine
+                         apply attempts raise, across ALL slots (default 6;
+                         with A > max_retries the drain sees several slots
+                         quarantine together and recovery must heal the
+                         whole pool, not one victim)
+    cache_storm:R[:K]    compile-cache invalidation storm: the next K
+                         dispatches each pay the ``latency_ms`` recompile
+                         penalty (default K=8; shares latency's MS param)
+    crash_restore:R      process-crash drill: the pool crashes one durable
+                         slot (drops its in-RAM engine + snapshot) and
+                         restores it from checkpoint + journal replay —
+                         exercising the durability path end-to-end
+
+Example: ``nan:0.15,crash:0.1:3,latency:0.1:30,poison:0.08,mem:0.05:0.5``
+or correlated: ``backend_loss:0.3:6,cache_storm:0.2:8,crash_restore:0.25``.
 
 Each injection point draws from its *own* seeded generator, so enabling one
 fault kind never shifts another kind's schedule — runs stay comparable
-across specs.
+across specs.  The injector is thread-safe: the background update executor,
+per-slot deadline readers, and the caller all hit the same instance, so
+every RNG draw and sticky-window decrement happens under one lock and the
+counters are :class:`repro.launch.stats.Counters`.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from .stats import Counters
 
 __all__ = ["FaultSpec", "FaultInjector", "InjectedCrash", "NULL_INJECTOR"]
 
@@ -66,8 +95,16 @@ class FaultSpec:
     poison: float = 0.0
     mem: float = 0.0
     mem_frac: float = 0.5
+    backend_loss: float = 0.0
+    backend_count: int = 6
+    cache_storm: float = 0.0
+    storm_count: int = 8
+    crash_restore: float = 0.0
 
-    KINDS = ("nan", "crash", "latency", "poison", "mem")
+    KINDS = (
+        "nan", "crash", "latency", "poison", "mem",
+        "backend_loss", "cache_storm", "crash_restore",
+    )
 
     @classmethod
     def parse(cls, text: Optional[str]) -> "FaultSpec":
@@ -100,6 +137,10 @@ class FaultSpec:
                     kw["latency_ms"] = param
                 elif kind == "mem":
                     kw["mem_frac"] = param
+                elif kind == "backend_loss":
+                    kw["backend_count"] = int(param)
+                elif kind == "cache_storm":
+                    kw["storm_count"] = int(param)
                 else:
                     raise ValueError(
                         f"fault kind {kind!r} takes no parameter ({entry!r})"
@@ -125,18 +166,25 @@ class FaultInjector:
             kind: np.random.default_rng(root.integers(0, 2**63))
             for kind in FaultSpec.KINDS
         }
-        self.counts: Dict[str, int] = {k: 0 for k in FaultSpec.KINDS}
+        self.counts = Counters({k: 0 for k in FaultSpec.KINDS})
         self.events: list = []
         self._pending_crashes = 0
+        self._backend_left = 0      # correlated window: apply attempts left
+        self._storm_left = 0        # correlated window: dispatches left
+        # numpy Generators and the sticky-window counters are not
+        # thread-safe; the executor, deadline readers, and the caller all
+        # share this injector
+        self._lock = threading.Lock()
 
     def _fire(self, kind: str) -> bool:
         rate = getattr(self.spec, kind)
         if rate <= 0.0:
             return False
-        if self._rng[kind].uniform() >= rate:
-            return False
-        self.counts[kind] += 1
-        self.events.append({"t": time.monotonic(), "kind": kind})
+        with self._lock:
+            if self._rng[kind].uniform() >= rate:
+                return False
+            self.events.append({"t": time.monotonic(), "kind": kind})
+        self.counts.inc(kind)
         return True
 
     # -- injection points (called by the pool) ------------------------------
@@ -152,21 +200,72 @@ class FaultInjector:
     def maybe_crash(self) -> None:
         """Raise :class:`InjectedCrash` at the injected schedule.  One
         injection yields ``crash_count`` consecutive raises, so a count
-        above the pool's ``max_retries`` exercises the quarantine path."""
-        if self._pending_crashes > 0:
-            self._pending_crashes -= 1
-            raise InjectedCrash("injected crash (sticky)")
+        above the pool's ``max_retries`` exercises the quarantine path.
+        An open whole-backend-loss window (see :meth:`begin_drain`) takes
+        precedence: it fails *every* slot's attempts until it drains."""
+        with self._lock:
+            if self._backend_left > 0:
+                self._backend_left -= 1
+                backend = True
+            else:
+                backend = False
+        if backend:
+            self.counts.inc("backend_denied")
+            raise InjectedCrash("backend loss: all engines unavailable")
+        with self._lock:
+            if self._pending_crashes > 0:
+                self._pending_crashes -= 1
+                raise InjectedCrash("injected crash (sticky)")
         if self._fire("crash"):
-            self._pending_crashes = max(int(self.spec.crash_count) - 1, 0)
+            with self._lock:
+                self._pending_crashes = max(int(self.spec.crash_count) - 1, 0)
             raise InjectedCrash("injected crash")
 
     def maybe_latency(self) -> float:
-        """Maybe sleep a spike; returns the injected seconds (0 if none)."""
-        if self._fire("latency"):
-            s = self.spec.latency_ms / 1e3
+        """Maybe sleep a spike; returns the injected seconds (0 if none).
+        An open cache-storm window charges the recompile penalty to every
+        dispatch until its budget drains, independent of the latency draw."""
+        s = 0.0
+        with self._lock:
+            if self._storm_left > 0:
+                self._storm_left -= 1
+                storm = True
+            else:
+                storm = False
+        if storm:
+            self.counts.inc("storm_recompiles")
+            s += self.spec.latency_ms / 1e3
+        elif self._fire("latency"):
+            s += self.spec.latency_ms / 1e3
+        if s:
             time.sleep(s)
-            return s
-        return 0.0
+        return s
+
+    # -- correlated kinds (PR 10): per-drain opportunity points -------------
+
+    def begin_drain(self) -> None:
+        """Correlated-failure opportunity at the top of a pool drain: maybe
+        open a whole-backend-loss window (next ``backend_count`` apply
+        attempts raise, across all slots) or a compile-cache invalidation
+        storm (next ``storm_count`` dispatches pay the recompile penalty).
+        Windows are counted in attempts, not wall-clock, so chaos schedules
+        stay deterministic for a given seed + request stream."""
+        if self._fire("backend_loss"):
+            with self._lock:
+                self._backend_left = max(int(self.spec.backend_count), 1)
+        if self._fire("cache_storm"):
+            with self._lock:
+                self._storm_left = max(int(self.spec.storm_count), 1)
+
+    def maybe_crash_restore(self) -> bool:
+        """Per-drain decision to run the crash-restore drill on one durable
+        slot (the pool picks the victim and drives the restore)."""
+        return self._fire("crash_restore")
+
+    def backend_down(self) -> bool:
+        """True while a whole-backend-loss window is open."""
+        with self._lock:
+            return self._backend_left > 0
 
     def maybe_poison_state(self, engine) -> Optional[Tuple[int, int]]:
         """Maybe overwrite one off-diagonal solved-state entry with NaN (a

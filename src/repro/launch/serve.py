@@ -274,6 +274,11 @@ def serve_apsp_dynamic(
     mem_budget_mb: float = 0.0,
     backlog_watermark: int = 8,
     max_retries: int = 2,
+    async_updates: bool = False,
+    executor_workers: int = 1,
+    reader_workers: int = 0,
+    durability_dir: str = "",
+    checkpoint_every: int = 0,
 ) -> int:
     """Incremental APSP serving on the supervised engine pool.
 
@@ -294,12 +299,25 @@ def serve_apsp_dynamic(
 
     ``fault_spec`` turns on the deterministic chaos layer
     (``repro.launch.faults`` — injected NaN updates, slot crashes, latency
-    spikes, state poison, memory-budget squeezes).  The exit code asserts
-    the resilience contract: zero poisoned answers served, no unrecovered
-    drift, and every slot back to healthy (or deliberately evicted under
-    the memory budget) at the end of the run.
+    spikes, state poison, memory-budget squeezes, plus the PR 10
+    correlated kinds: whole-backend loss, compile-cache invalidation
+    storms, crash-restore drills).  The exit code asserts the resilience
+    contract: zero poisoned answers served, no unrecovered drift, and
+    every slot back to healthy (or deliberately evicted under the memory
+    budget) at the end of the run.
+
+    ``async_updates`` moves drains onto the background executor
+    (``executor_workers`` threads): submits/drain_all enqueue, queries
+    read published snapshots with exact staleness tags, and the end of
+    the run flushes the executor before verification.  ``durability_dir``
+    (``"auto"`` = a fresh temp dir) gives every slot a write-ahead journal
+    + atomic checkpoints every ``checkpoint_every`` drains, making the
+    ``crash_restore:R`` drill an end-to-end checkpoint + replay exercise.
+    ``reader_workers`` sizes the sync-path deadline readers (0 = one per
+    slot).
     """
     import json
+    import tempfile
 
     from repro.core import get_semiring
     from repro.core.graphgen import generate_edge_updates, generate_np
@@ -309,12 +327,24 @@ def serve_apsp_dynamic(
     _check_recastable(semiring)
     sr = get_semiring(semiring)
     spec = FaultSpec.parse(fault_spec)
+    if durability_dir == "auto":
+        durability_dir = tempfile.mkdtemp(prefix="repro-serve-dur-")
+        print(f"[durability] journal + checkpoints under {durability_dir}")
+    if spec.crash_restore > 0 and not durability_dir:
+        raise ValueError(
+            "crash_restore chaos needs --durability-dir (the drill restores "
+            "from checkpoint + journal; pass 'auto' for a temp dir)"
+        )
     pool = EnginePool(
         method=method, with_pred=with_pred, semiring=sr,
         max_retries=max_retries, deadline_s=deadline_ms / 1e3,
         mem_budget_bytes=int(mem_budget_mb * 2**20),
         backlog_watermark=backlog_watermark,
         injector=FaultInjector(spec, seed=seed), seed=seed,
+        async_updates=async_updates, executor_workers=executor_workers,
+        reader_workers=reader_workers,
+        durability_dir=durability_dir or None,
+        checkpoint_every=checkpoint_every,
     )
     rng = np.random.default_rng(seed)
     t0 = time.time()
@@ -461,6 +491,25 @@ def main(argv=None) -> int:
     ap.add_argument("--max-retries", type=int, default=2,
                     help="apsp dynamic mode: transient apply failures "
                          "retried (with backoff) before quarantine")
+    ap.add_argument("--async-updates", action="store_true",
+                    help="apsp dynamic mode: apply update batches on the "
+                         "background executor; queries read published "
+                         "snapshots and never wait on an in-flight pass")
+    ap.add_argument("--executor-workers", type=int, default=1,
+                    help="apsp dynamic mode: background drain threads "
+                         "(with --async-updates)")
+    ap.add_argument("--reader-workers", type=int, default=0,
+                    help="apsp dynamic mode: deadline-reader sizing for the "
+                         "sync path (0 = one dedicated worker per slot)")
+    ap.add_argument("--durability-dir", default="",
+                    help="apsp dynamic mode: per-slot write-ahead journal + "
+                         "atomic engine checkpoints under this directory "
+                         "('auto' = fresh temp dir); required by the "
+                         "crash_restore chaos drill")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="apsp dynamic mode: checkpoint a durable slot every "
+                         "N successful drains (0 = only the build-time "
+                         "checkpoint)")
     args = ap.parse_args(argv)
     if args.arch == "mind":
         return serve_mind(args.requests, args.seed)
@@ -476,6 +525,11 @@ def main(argv=None) -> int:
                 mem_budget_mb=args.mem_budget_mb,
                 backlog_watermark=args.backlog_watermark,
                 max_retries=args.max_retries,
+                async_updates=args.async_updates,
+                executor_workers=args.executor_workers,
+                reader_workers=args.reader_workers,
+                durability_dir=args.durability_dir,
+                checkpoint_every=args.checkpoint_every,
             )
         return serve_apsp(
             args.requests, batch=args.batch, n_max=args.n_max,

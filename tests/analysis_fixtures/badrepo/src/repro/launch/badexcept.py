@@ -41,3 +41,17 @@ def ok_pragma(engine):
         engine.update()
     except RuntimeError:  # repro: allow-except-swallow  fixture-sanctioned swallow
         pass
+
+
+def ok_counter_inc(self):
+    try:
+        self.engine.update()
+    except ValueError:
+        self.stats.inc("updates_rejected")
+
+
+def ok_injector_counter_inc(inj, engine):
+    try:
+        engine.update()
+    except RuntimeError:
+        inj.counts.inc("crash")

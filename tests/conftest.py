@@ -9,6 +9,10 @@ adversarial than real hypothesis (no shrinking, no edge-case bias beyond
 always including the bounds), but it keeps every property exercised.
 """
 
+import os
+import signal
+import threading
+
 import numpy as np
 import pytest
 
@@ -16,6 +20,56 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# watchdog for the resilience suite
+# ---------------------------------------------------------------------------
+#
+# The serving-tier suite exercises per-slot locks, condition variables, and
+# background executor threads — a lock-ordering bug would not fail, it would
+# *hang*, and the container has no pytest-timeout plugin to kill it.  This
+# autouse fixture arms a SIGALRM watchdog around every ``resilience``-marked
+# test: on expiry the test raises ``Timeout`` at whatever line it was stuck
+# on (the traceback points straight at the deadlock).  Override the budget
+# with ``REPRO_RESILIENCE_TIMEOUT`` seconds; 0 disables (e.g. under a
+# debugger).
+
+_WATCHDOG_DEFAULT_S = 120.0
+
+
+class ResilienceTimeout(Exception):
+    """A resilience-marked test exceeded its watchdog budget (likely hung)."""
+
+
+@pytest.fixture(autouse=True)
+def _resilience_watchdog(request):
+    if request.node.get_closest_marker("resilience") is None:
+        yield
+        return
+    budget = float(os.environ.get("REPRO_RESILIENCE_TIMEOUT", _WATCHDOG_DEFAULT_S))
+    # SIGALRM only exists on POSIX and only fires in the main thread;
+    # anywhere else the watchdog degrades to a no-op rather than breaking
+    # the suite
+    if (budget <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def _expired(signum, frame):
+        raise ResilienceTimeout(
+            f"resilience test exceeded the {budget:.0f}s watchdog — "
+            "probable deadlock in the serving tier (see traceback for the "
+            "blocked line); override with REPRO_RESILIENCE_TIMEOUT"
+        )
+
+    previous = signal.signal(signal.SIGALRM, _expired)
+    signal.setitimer(signal.ITIMER_REAL, budget)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, previous)
 
 
 def np_floyd_warshall(h: np.ndarray) -> np.ndarray:

@@ -36,12 +36,25 @@ for p in (str(ROOT), str(ROOT / "src")):
 
 
 def _method_times(payload: dict) -> dict:
-    """{(method, n): ms} from a BENCH json payload."""
+    """{(method, n): value} from a BENCH json payload.
+
+    Mostly per-(method, n) milliseconds from the apsp sweep, plus one
+    dimensionless series from the serve_concurrent row: the async read
+    path's p99 relative to the sync drain path's p99 *in the same
+    process* — machine-speed noise divides out, so the threshold gate
+    watches the architecture (published reads must stay orders of
+    magnitude off the inline-drain cost), not container load."""
     out = {}
     for method, by_n in (payload.get("apsp") or {}).items():
         for n, row in by_n.items():
             if isinstance(row, dict) and row.get("ms"):
                 out[(method, str(n))] = float(row["ms"])
+    sc = payload.get("serve_concurrent")
+    if isinstance(sc, dict):
+        p99_sync = float(sc.get("query_p99_sync_ms") or 0.0)
+        p99_conc = float(sc.get("query_p99_conc_ms") or 0.0)
+        if p99_sync > 0 and p99_conc > 0:
+            out[("serve_concurrent", "p99_ratio")] = p99_conc / p99_sync
     return out
 
 
